@@ -1,0 +1,43 @@
+//! Design-space exploration: sweep capacity, bus width and subarray
+//! geometry jointly; report the FPS / area / efficiency Pareto points
+//! (the exploration behind the paper's 64 MB + 128-bit choice, 5.2).
+//!
+//! Run: `cargo run --release --example design_space`
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::cnn::network::resnet50;
+use nandspin::coordinator::Coordinator;
+
+fn main() {
+    let net = resnet50(8);
+    println!("{:>9} {:>10} {:>8} {:>10} {:>12} {:>14} {:>12}",
+        "cap (MB)", "bus (bit)", "rows", "FPS", "area (mm²)", "GOPS/mm²", "GOPS/W/mm²");
+    let mut best: Option<(f64, String)> = None;
+    for cap in [16usize, 64, 128] {
+        for bus in [64usize, 128, 256] {
+            for rows in [128usize, 256, 512] {
+                let mut cfg = ArchConfig::paper();
+                cfg.capacity_mb = cap;
+                cfg.bus_width_bits = bus;
+                cfg.rows = rows;
+                if cfg.validate().is_err() {
+                    continue;
+                }
+                let m = Coordinator::new(cfg).analytic_metrics(&net, 8);
+                let line = format!(
+                    "{:>9} {:>10} {:>8} {:>10.1} {:>12.1} {:>14.3} {:>12.3}",
+                    cap, bus, rows, m.fps(), m.area_mm2, m.gops_per_mm2(), m.efficiency_per_mm2()
+                );
+                println!("{line}");
+                let score = m.gops_per_mm2();
+                if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+                    best = Some((score, line));
+                }
+            }
+        }
+    }
+    if let Some((_, line)) = best {
+        println!("\nbest GOPS/mm² point:\n{line}");
+        println!("(the paper selects 64 MB / 128-bit as its operating point, 5.2)");
+    }
+}

@@ -1,0 +1,47 @@
+//! Memory-mode deep dive: the two-step NAND-SPIN write (SOT erase +
+//! STT program), the Table 1 control signals, read-disturb margins, and
+//! the write/read asymmetry the paper's §3.2 discusses.
+//!
+//! Run: `cargo run --release --example memory_mode`
+
+use nandspin::arch::stats::{Phase, Stats};
+use nandspin::bank::controller::{Controller, OpClass};
+use nandspin::device::energy::DeviceCosts;
+use nandspin::device::llg::{SotParams, SwitchingModel};
+use nandspin::device::mtj::MtjParams;
+use nandspin::device::NandSpinDevice;
+use nandspin::subarray::Subarray;
+
+fn main() {
+    // Device level: one 8-MTJ strip.
+    let mut dev = NandSpinDevice::default();
+    let switched = dev.write_byte(0b1011_0010);
+    println!("device write 0xB2: {} MTJs switched AP->P, read back {:#04x}", switched, dev.read_byte());
+
+    // Controller: Table 1 signal sets.
+    let mut ctrl = Controller::default();
+    for (op, data) in [(OpClass::Erase, false), (OpClass::Program, true), (OpClass::Read, true), (OpClass::And, false)] {
+        let sig = ctrl.issue(op, data);
+        println!("{op:?}: WE={} ER={} Cx={} Ry={} FU={} REF={}", sig.we, sig.er, sig.cx, sig.ry, sig.fu, sig.refb);
+    }
+
+    // Switching margins from the Table 2 stack.
+    let sw = SwitchingModel::derive(&MtjParams::default(), &SotParams::default());
+    println!("\nswitching: STT(AP->P) {:.1} uA, STT(P->AP) {:.1} uA, SOT {:.1} uA",
+        sw.stt_critical_ua, sw.stt_reverse_critical_ua, sw.sot_critical_ua);
+    println!("read disturb margin: {:.1}x", sw.read_disturb_margin());
+
+    // Subarray level: write/read asymmetry (paper section 3.2).
+    let mut stats = Stats::default();
+    let mut sub = Subarray::new(256, 128, 16, DeviceCosts::default());
+    let data = [u128::MAX; 8];
+    sub.write_strip(0, &data, &mut stats, Phase::LoadData);
+    let write_ns = stats[Phase::LoadData].latency_ns;
+    let mut rstats = Stats::default();
+    for r in 0..8 {
+        sub.read_row(r, &mut rstats, Phase::Other);
+    }
+    let read_ns = rstats[Phase::Other].latency_ns;
+    println!("\nrow-of-devices write: {write_ns:.1} ns (1024 bits)  vs  8 row reads: {read_ns:.2} ns");
+    println!("write/read latency asymmetry: {:.0}x", write_ns / read_ns);
+}

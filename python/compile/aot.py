@@ -1,0 +1,73 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); Python never executes on
+the inference path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i32(shape):
+    """int32 ShapeDtypeStruct helper."""
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entries():
+    """(name, fn, example_args) for every artifact."""
+    return [
+        (
+            "cnn_forward",
+            model.cnn_forward,
+            (
+                i32(model.INPUT_SHAPE),
+                i32(model.W1_SHAPE),
+                i32((4,)),
+                i32((4,)),
+                i32((4,)),
+                i32(model.W2_SHAPE),
+                i32((4,)),
+            ),
+        ),
+        ("bitconv", model.bitconv_entry, (i32((2, 8, 12)), i32((3, 2, 3, 3)))),
+        ("quantize", model.quantize_entry, (i32((64,)), i32((4,)))),
+        ("maxpool", model.maxpool_entry, (i32((4, 12, 20)),)),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, ex_args in entries():
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: Eq. 1 bit-serial convolution as a bit-plane matmul.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+subarray performs a row-parallel AND against 128 sense amplifiers and
+bit-counts per column. On TPU the same computation is a *matmul over
+{0,1} bit-planes*: with the input bit-plane im2col'ed into a patch
+matrix ``P[n] ∈ {0,1}^(L×K)`` and the weight bit-plane ``W[m] ∈
+{0,1}^(OC×K)``,
+
+    popcount(AND(P, W)) == P @ Wᵀ,
+
+so the MXU's systolic array plays the role of the 128 SAs + bit-counters
+and the grid over (n, m) bit-plane pairs plays the role of the paper's
+sequential row activations. The 2^(n+m) significance scale is folded in
+the accumulation epilogue, exactly like the paper's shifted row writes.
+
+The kernel tiles L (output positions) into ``block_l``-row blocks so a
+P-block (block_l × K) and a W-block (OC × K) are VMEM residents; on a
+real TPU the dot runs on the MXU in f32 (exact for counts < 2^24).
+CPU execution uses interpret=True (Mosaic custom-calls cannot run on the
+CPU PJRT plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(p_ref, w_ref, o_ref):
+    """One (n, m, l-tile) grid step: o += (P[n,l] @ W[m]ᵀ) << (n+m)."""
+    n = pl.program_id(0)
+    m = pl.program_id(1)
+
+    @pl.when((n == 0) & (m == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 dot is exact for these 0/1 operands (counts ≤ K < 2^24) and is
+    # the MXU-native path on TPU.
+    prod = jnp.dot(
+        p_ref[0].astype(jnp.float32),
+        w_ref[0].T.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(jnp.int32)
+    o_ref[...] += prod << (n + m)
+
+
+def _im2col_planes(x, ibits, kh, kw, stride):
+    """Bit-planes of x im2col'ed: (N, L, K) with L=OH·OW, K=C·KH·KW."""
+    c, h, w = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    planes = ref.bitplanes(x, ibits)  # (N, C, H, W)
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = planes[:, :, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            cols.append(patch.reshape(ibits, c, oh * ow))  # (N, C, L)
+    # (N, L, C·KH·KW) with K ordered (c, ky, kx) to match the weight layout.
+    stacked = jnp.stack(cols, axis=2)  # (N, C, KH·KW, L)
+    return stacked.transpose(0, 3, 1, 2).reshape(ibits, oh * ow, c * kh * kw), oh, ow
+
+
+@functools.partial(jax.jit, static_argnames=("ibits", "wbits", "stride", "block_l"))
+def bitwise_conv(x, w, ibits, wbits, stride=1, block_l=128):
+    """Bit-serial convolution of x (C,H,W) with w (OC,C,KH,KW).
+
+    Integer-exact: equals ``ref.conv2d_int(x, w, stride)``.
+    """
+    oc, c, kh, kw = w.shape
+    p, oh, ow = _im2col_planes(x, ibits, kh, kw, stride)  # (N, L, K)
+    k = c * kh * kw
+    length = oh * ow
+    # Weight bit-planes: (M, OC, K), K ordered (c, ky, kx).
+    wp = ref.bitplanes(w, wbits).reshape(wbits, oc, k)
+
+    # Pad L to the block size (the paper pads feature maps to the 128
+    # subarray columns the same way).
+    lt = -(-length // block_l)
+    pad = lt * block_l - length
+    p = jnp.pad(p, ((0, 0), (0, pad), (0, 0)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(ibits, wbits, lt),
+        in_specs=[
+            pl.BlockSpec((1, block_l, k), lambda n, m, l: (n, l, 0)),
+            pl.BlockSpec((1, oc, k), lambda n, m, l: (m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l, oc), lambda n, m, l: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((lt * block_l, oc), jnp.int32),
+        interpret=True,
+    )(p, wp)
+    return out[:length].T.reshape(oc, oh, ow)

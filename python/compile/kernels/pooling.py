@@ -1,0 +1,61 @@
+"""L1 Pallas kernels for pooling.
+
+The paper's max pooling is the iterative in-memory comparison of
+Fig. 11; average pooling is window addition plus a fixed-point 1/k²
+multiply. On TPU both are element-wise max/add reductions over k²
+shifted views of a VMEM-resident tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k, stride, oh, ow):
+    x = x_ref[...]
+    out = None
+    for dy in range(k):
+        for dx in range(k):
+            v = x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            out = v if out is None else jnp.maximum(out, v)
+    o_ref[...] = out.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride"))
+def maxpool(x, k, stride):
+    """Max pooling on x (C, H, W); matches ``ref.maxpool_ref``."""
+    c, h, w = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, k=k, stride=stride, oh=oh, ow=ow),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32))
+
+
+def _avgpool_kernel(x_ref, o_ref, *, k, stride, oh, ow, shift):
+    mul = jnp.int64(round((1 << shift) / (k * k)))
+    x = x_ref[...].astype(jnp.int64)
+    s = None
+    for dy in range(k):
+        for dx in range(k):
+            v = x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            s = v if s is None else s + v
+    o_ref[...] = ((s * mul + (1 << (shift - 1))) >> shift).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "shift"))
+def avgpool(x, k, stride, shift=16):
+    """Fixed-point average pooling; matches ``ref.avgpool_ref`` and the
+    Rust ``avg_pool_scale`` semantics."""
+    c, h, w = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_avgpool_kernel, k=k, stride=stride, oh=oh, ow=ow, shift=shift),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32))

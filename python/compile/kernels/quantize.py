@@ -1,0 +1,74 @@
+"""L1 Pallas kernels for the element-wise transforms: Eq. 2 quantization
+and Eq. 3 batch normalisation in the folded fixed-point form
+``y = clamp((x·mul + add) >> shift, 0, 2^bits − 1)``.
+
+The paper executes these with in-memory multiplication/addition
+(Figs. 9–10); on TPU they are VPU element-wise ops over VMEM-resident
+tiles. Parameters arrive as runtime scalars so one compiled artifact
+serves any trained model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, params_ref, o_ref):
+    x = x_ref[...].astype(jnp.int64)
+    mul = params_ref[0].astype(jnp.int64)
+    add = params_ref[1].astype(jnp.int64)
+    shift = params_ref[2].astype(jnp.int64)
+    maxv = params_ref[3].astype(jnp.int64)
+    y = jnp.right_shift(x * mul + add, shift)
+    o_ref[...] = jnp.clip(y, 0, maxv).astype(jnp.int32)
+
+
+@jax.jit
+def quantize(x, mul, add, shift, maxv):
+    """Quantize a flat int32 array with runtime fixed-point parameters.
+
+    Matches ``ref.quantize_ref`` (and Rust ``QuantParams::apply``).
+    """
+    params = jnp.stack(
+        [
+            jnp.asarray(mul, jnp.int32),
+            jnp.asarray(add, jnp.int32),
+            jnp.asarray(shift, jnp.int32),
+            jnp.asarray(maxv, jnp.int32),
+        ]
+    )
+    return pl.pallas_call(
+        _quant_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), params)
+
+
+def _bn_kernel(x_ref, mul_ref, add_ref, shift_ref, o_ref):
+    # x: (C, HW); per-channel mul/add broadcast along HW.
+    x = x_ref[...].astype(jnp.int64)
+    mul = mul_ref[...].astype(jnp.int64)[:, None]
+    add = add_ref[...].astype(jnp.int64)[:, None]
+    shift = shift_ref[0].astype(jnp.int64)
+    y = jnp.right_shift(x * mul + add, shift)
+    o_ref[...] = jnp.maximum(y, 0).astype(jnp.int32)
+
+
+@jax.jit
+def batchnorm(x, mul, add, shift):
+    """Per-channel folded BN on x (C, H, W); matches ``ref.batchnorm_ref``."""
+    c, h, w = x.shape
+    flat = x.reshape(c, h * w).astype(jnp.int32)
+    out = pl.pallas_call(
+        _bn_kernel,
+        out_shape=jax.ShapeDtypeStruct((c, h * w), jnp.int32),
+        interpret=True,
+    )(
+        flat,
+        mul.astype(jnp.int32),
+        add.astype(jnp.int32),
+        jnp.asarray(shift, jnp.int32).reshape(1),
+    )
+    return out.reshape(c, h, w)

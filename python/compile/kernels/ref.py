@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness anchors of the L1 layer: each kernel in this
+package must agree exactly (integer ops) with its reference here, and the
+references themselves mirror the Rust golden executor
+(``rust/src/cnn/ref_exec.rs``) bit-for-bit.
+"""
+
+import jax.numpy as jnp
+
+
+def bitplanes(x, bits):
+    """Decompose an integer array into ``bits`` 0/1 planes (LSB first).
+
+    Returns an array of shape ``(bits, *x.shape)`` with dtype int32.
+    """
+    x = x.astype(jnp.int32)
+    planes = [(x >> n) & 1 for n in range(bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def from_bitplanes(planes):
+    """Recompose integer values from 0/1 bit-planes (LSB first)."""
+    bits = planes.shape[0]
+    weights = (2 ** jnp.arange(bits, dtype=jnp.int32)).reshape(
+        (bits,) + (1,) * (planes.ndim - 1)
+    )
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+
+
+def bitwise_conv2d(x, w, ibits, wbits, stride=1):
+    """Eq. 1 bit-serial convolution, reference implementation.
+
+    x: (C, H, W) unsigned ints < 2**ibits
+    w: (OC, C, KH, KW) unsigned ints < 2**wbits
+    Returns (OC, OH, OW) int32 — identical to a plain integer conv.
+    """
+    xp = bitplanes(x, ibits)  # (N, C, H, W)
+    wp = bitplanes(w, wbits)  # (M, OC, C, KH, KW)
+    kh, kw = w.shape[2], w.shape[3]
+    oh = (x.shape[1] - kh) // stride + 1
+    ow = (x.shape[2] - kw) // stride + 1
+    out = jnp.zeros((w.shape[0], oh, ow), dtype=jnp.int32)
+    for n in range(ibits):
+        for m in range(wbits):
+            # AND of bit-planes == product of 0/1 values; bitcount == sum.
+            acc = jnp.zeros((w.shape[0], oh, ow), dtype=jnp.int32)
+            for dy in range(kh):
+                for dx in range(kw):
+                    patch = xp[
+                        n,
+                        :,
+                        dy : dy + oh * stride : stride,
+                        dx : dx + ow * stride : stride,
+                    ]  # (C, OH, OW)
+                    wbit = wp[m, :, :, dy, dx]  # (OC, C)
+                    acc = acc + jnp.einsum(
+                        "chw,oc->ohw", patch, wbit, preferred_element_type=jnp.int32
+                    )
+            out = out + (acc << (n + m))
+    return out
+
+
+def conv2d_int(x, w, stride=1):
+    """Plain integer convolution (the value-level truth)."""
+    kh, kw = w.shape[2], w.shape[3]
+    oh = (x.shape[1] - kh) // stride + 1
+    ow = (x.shape[2] - kw) // stride + 1
+    out = jnp.zeros((w.shape[0], oh, ow), dtype=jnp.int32)
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            out = out + jnp.einsum(
+                "chw,oc->ohw",
+                patch.astype(jnp.int32),
+                w[:, :, dy, dx].astype(jnp.int32),
+                preferred_element_type=jnp.int32,
+            )
+    return out
+
+
+def quantize_ref(x, mul, add, shift, bits):
+    """Eq. 2 folded fixed-point quantization (matches QuantParams::apply)."""
+    y = (x.astype(jnp.int64) * jnp.int64(mul) + jnp.int64(add)) >> jnp.int64(shift)
+    return jnp.clip(y, 0, (1 << bits) - 1).astype(jnp.int32)
+
+
+def batchnorm_ref(x, mul, add, shift):
+    """Eq. 3 folded per-channel BN (matches BnParams::apply); x: (C, H, W)."""
+    m = mul.astype(jnp.int64).reshape(-1, 1, 1)
+    a = add.astype(jnp.int64).reshape(-1, 1, 1)
+    y = (x.astype(jnp.int64) * m + a) >> jnp.int64(shift)
+    return jnp.maximum(y, 0).astype(jnp.int32)
+
+
+def maxpool_ref(x, k, stride):
+    """Max pooling; x: (C, H, W)."""
+    c, h, w = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    out = jnp.full((c, oh, ow), jnp.iinfo(jnp.int32).min, dtype=jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            out = jnp.maximum(
+                out,
+                x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride].astype(
+                    jnp.int32
+                ),
+            )
+    return out
+
+
+def avgpool_ref(x, k, stride, shift=16):
+    """Fixed-point average pooling (matches avg_pool_scale)."""
+    mul = jnp.int64(round((1 << shift) / (k * k)))
+    c, h, w = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    s = jnp.zeros((c, oh, ow), dtype=jnp.int64)
+    for dy in range(k):
+        for dx in range(k):
+            s = s + x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride].astype(
+                jnp.int64
+            )
+    return ((s * mul + (1 << (shift - 1))) >> shift).astype(jnp.int32)
+
+
+def relu_ref(x):
+    """ReLU."""
+    return jnp.maximum(x, 0)

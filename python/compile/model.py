@@ -1,0 +1,69 @@
+"""L2: the quantized CNN forward pass in JAX, composed from the L1
+Pallas kernels.
+
+``cnn_forward`` mirrors the Rust ``small_cnn`` network node-for-node
+(conv → BN → ReLU → quant → maxpool → conv → ReLU → quant → avgpool)
+with identical integer semantics, so the AOT artifact's outputs must be
+bit-identical to both the Rust golden executor and the PIM functional
+simulator. All trained parameters (weights, BN, quantizer constants)
+are runtime inputs, so one compiled artifact serves any parameter set.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import pooling, quantize as qk
+from .kernels.bitwise_conv import bitwise_conv
+
+# Shapes of the SmallCNN functional network (must match
+# rust/src/cnn/network.rs::small_cnn).
+INPUT_SHAPE = (2, 14, 22)
+W1_SHAPE = (4, 2, 3, 3)
+W2_SHAPE = (6, 4, 3, 3)
+IBITS = 4
+WBITS = 4
+BN_SHIFT = 8
+
+
+def cnn_forward(x, w1, bn_mul, bn_add, q1, w2, q2):
+    """Forward pass of the SmallCNN.
+
+    Args:
+      x: (2, 14, 22) int32 in [0, 2^4).
+      w1: (4, 2, 3, 3) int32 weights in [0, 2^4).
+      bn_mul, bn_add: (4,) int32 folded BN parameters (shift = 8).
+      q1: (4,) int32 [mul, add, shift, maxv] quantizer after conv1.
+      w2: (6, 4, 3, 3) int32 weights.
+      q2: (4,) int32 quantizer after conv2.
+
+    Returns:
+      (6, 1, 2) int32 — the network output.
+    """
+    # conv1 (bit-serial Pallas kernel) → BN → ReLU → quantize.
+    y = bitwise_conv(x, w1, ibits=IBITS, wbits=WBITS, stride=1)
+    y = qk.batchnorm(y, bn_mul, bn_add, BN_SHIFT)
+    y = jnp.maximum(y, 0)
+    y = qk.quantize(y, q1[0], q1[1], q1[2], q1[3])
+    # maxpool 2/2.
+    y = pooling.maxpool(y, k=2, stride=2)
+    # conv2 → ReLU → quantize.
+    y = bitwise_conv(y, w2, ibits=IBITS, wbits=WBITS, stride=1)
+    y = jnp.maximum(y, 0)
+    y = qk.quantize(y, q2[0], q2[1], q2[2], q2[3])
+    # global-ish avgpool 3/3.
+    y = pooling.avgpool(y, k=3, stride=3)
+    return (y,)
+
+
+def bitconv_entry(x, w):
+    """Standalone bit-serial conv artifact (runtime cross-check shape)."""
+    return (bitwise_conv(x, w, ibits=3, wbits=3, stride=1),)
+
+
+def quantize_entry(x, params):
+    """Standalone quantizer artifact on a flat vector."""
+    return (qk.quantize(x, params[0], params[1], params[2], params[3]),)
+
+
+def maxpool_entry(x):
+    """Standalone 2×2/2 maxpool artifact."""
+    return (pooling.maxpool(x, k=2, stride=2),)

@@ -1,0 +1,172 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (and vs plain
+integer convolution, the value-level truth).
+
+Hypothesis sweeps shapes / bit-widths / strides; every comparison is
+exact (integer semantics), so assert_array_equal rather than allclose.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import pooling, quantize as qk, ref
+from compile.kernels.bitwise_conv import bitwise_conv
+
+
+def rand_ints(rng, shape, bits):
+    return rng.integers(0, 2**bits, size=shape, dtype=np.int32)
+
+
+# ----------------------------------------------------------------------
+# bitwise conv
+# ----------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 3),
+    oc=st.integers(1, 4),
+    k=st.integers(1, 3),
+    extra=st.integers(0, 5),
+    stride=st.integers(1, 2),
+    ibits=st.integers(1, 5),
+    wbits=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitwise_conv_matches_integer_conv(c, oc, k, extra, stride, ibits, wbits, seed):
+    rng = np.random.default_rng(seed)
+    h = k + extra
+    w = k + extra + 2
+    x = rand_ints(rng, (c, h, w), ibits)
+    wts = rand_ints(rng, (oc, c, k, k), wbits)
+    got = bitwise_conv(jnp.asarray(x), jnp.asarray(wts), ibits=ibits, wbits=wbits, stride=stride)
+    want = ref.conv2d_int(jnp.asarray(x), jnp.asarray(wts), stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitwise_conv_matches_eq1_reference():
+    rng = np.random.default_rng(7)
+    x = rand_ints(rng, (2, 8, 12), 3)
+    w = rand_ints(rng, (3, 2, 3, 3), 3)
+    got = bitwise_conv(jnp.asarray(x), jnp.asarray(w), ibits=3, wbits=3)
+    want = ref.bitwise_conv2d(jnp.asarray(x), jnp.asarray(w), ibits=3, wbits=3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitwise_conv_blocks_larger_than_l():
+    # L < block_l exercises the padding path.
+    rng = np.random.default_rng(9)
+    x = rand_ints(rng, (1, 4, 5), 2)
+    w = rand_ints(rng, (2, 1, 2, 2), 2)
+    got = bitwise_conv(jnp.asarray(x), jnp.asarray(w), ibits=2, wbits=2, block_l=256)
+    want = ref.conv2d_int(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitwise_conv_multi_block():
+    # L > block_l exercises the L-tiling grid dimension.
+    rng = np.random.default_rng(10)
+    x = rand_ints(rng, (2, 20, 30), 4)
+    w = rand_ints(rng, (4, 2, 3, 3), 4)
+    got = bitwise_conv(jnp.asarray(x), jnp.asarray(w), ibits=4, wbits=4, block_l=64)
+    want = ref.conv2d_int(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------------------
+# quantize / batchnorm
+# ----------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    mul=st.integers(1, 1 << 16),
+    shift=st.integers(0, 20),
+    bits=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(n, mul, shift, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 1 << 12, size=(n,), dtype=np.int32)
+    add = (1 << shift) // 2
+    maxv = (1 << bits) - 1
+    got = qk.quantize(jnp.asarray(x), mul, add, shift, maxv)
+    want = ref.quantize_ref(jnp.asarray(x), mul, add, shift, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batchnorm_matches_ref():
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 4096, size=(4, 6, 8), dtype=np.int32)
+    mul = rng.integers(1, 512, size=(4,), dtype=np.int32)
+    add = rng.integers(0, 1 << 10, size=(4,), dtype=np.int32)
+    got = qk.batchnorm(jnp.asarray(x), jnp.asarray(mul), jnp.asarray(add), 8)
+    want = ref.batchnorm_ref(jnp.asarray(x), jnp.asarray(mul), jnp.asarray(add), 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------------------
+# pooling
+# ----------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    k=st.integers(1, 3),
+    extra=st.integers(0, 6),
+    stride=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(c, k, extra, stride, seed):
+    rng = np.random.default_rng(seed)
+    h = k + extra
+    w = k + extra + 1
+    x = rng.integers(0, 256, size=(c, h, w), dtype=np.int32)
+    got = pooling.maxpool(jnp.asarray(x), k=k, stride=stride)
+    want = ref.maxpool_ref(jnp.asarray(x), k, stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 3),
+    k=st.integers(1, 4),
+    extra=st.integers(0, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_avgpool_matches_ref(c, k, extra, seed):
+    rng = np.random.default_rng(seed)
+    h = k + extra
+    w = k + extra + 2
+    x = rng.integers(0, 1024, size=(c, h, w), dtype=np.int32)
+    got = pooling.avgpool(jnp.asarray(x), k=k, stride=k)
+    want = ref.avgpool_ref(jnp.asarray(x), k, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_avgpool_rounds_half_up():
+    # (1+5+3+1)/4 = 2.5 → 3, matching Rust avg_pool_scale semantics.
+    x = jnp.asarray([[[1, 5], [3, 1]]], dtype=jnp.int32)
+    got = pooling.avgpool(x, k=2, stride=2)
+    assert int(got[0, 0, 0]) == 3
+
+
+def test_bitwise_conv_rectangular_kernel():
+    # kh != kw exercises the im2col ordering.
+    rng = np.random.default_rng(31)
+    x = rand_ints(rng, (2, 9, 14), 3)
+    w = rand_ints(rng, (3, 2, 2, 4), 3)
+    got = bitwise_conv(jnp.asarray(x), jnp.asarray(w), ibits=3, wbits=3)
+    want = ref.conv2d_int(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitwise_conv_single_bit_planes():
+    # Binary network case <1:1>: pure AND-popcount conv.
+    rng = np.random.default_rng(33)
+    x = rand_ints(rng, (3, 10, 10), 1)
+    w = rand_ints(rng, (2, 3, 3, 3), 1)
+    got = bitwise_conv(jnp.asarray(x), jnp.asarray(w), ibits=1, wbits=1)
+    want = ref.conv2d_int(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

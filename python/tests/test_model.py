@@ -1,0 +1,79 @@
+"""L2 correctness: the SmallCNN forward pass — shapes, determinism, and
+agreement with a hand-rolled numpy execution of the same integer
+pipeline."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_params(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 16, size=model.INPUT_SHAPE, dtype=np.int32)
+    w1 = rng.integers(0, 16, size=model.W1_SHAPE, dtype=np.int32)
+    # Identity-ish BN at shift 8.
+    bn_mul = np.full((4,), 256, dtype=np.int32)
+    bn_add = np.full((4,), 128, dtype=np.int32)
+    q1 = np.array([1, 1 << 6, 7, 15], dtype=np.int32)  # >>7 with rounding → 4 bits
+    w2 = rng.integers(0, 16, size=model.W2_SHAPE, dtype=np.int32)
+    q2 = np.array([1, 1 << 7, 8, 15], dtype=np.int32)
+    return x, w1, bn_mul, bn_add, q1, w2, q2
+
+
+def numpy_forward(x, w1, bn_mul, bn_add, q1, w2, q2):
+    y = np.asarray(ref.conv2d_int(jnp.asarray(x), jnp.asarray(w1)))
+    y = ((y.astype(np.int64) * bn_mul[:, None, None] + bn_add[:, None, None]) >> 8).clip(min=0)
+    y = np.maximum(y, 0)
+    y = ((y * q1[0] + q1[1]) >> q1[2]).clip(0, q1[3]).astype(np.int32)
+    # maxpool 2/2
+    c, h, w = y.shape
+    y = y[:, : h // 2 * 2, : w // 2 * 2].reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))
+    y = np.asarray(ref.conv2d_int(jnp.asarray(y), jnp.asarray(w2)))
+    y = np.maximum(y, 0)
+    y = ((y.astype(np.int64) * q2[0] + q2[1]) >> q2[2]).clip(0, q2[3]).astype(np.int32)
+    # avgpool 3/3 fixed point
+    mul = round((1 << 16) / 9)
+    c, h, w = y.shape
+    oh, ow = (h - 3) // 3 + 1, (w - 3) // 3 + 1
+    out = np.zeros((c, oh, ow), dtype=np.int64)
+    for dy in range(3):
+        for dx in range(3):
+            out += y[:, dy : dy + oh * 3 : 3, dx : dx + ow * 3 : 3]
+    return ((out * mul + (1 << 15)) >> 16).astype(np.int32)
+
+
+def test_forward_shapes():
+    args = make_params()
+    (y,) = model.cnn_forward(*(jnp.asarray(a) for a in args))
+    assert y.shape == (6, 1, 2)
+    assert y.dtype == jnp.int32
+
+
+def test_forward_matches_numpy_pipeline():
+    for seed in [0, 1, 7]:
+        args = make_params(seed)
+        (got,) = model.cnn_forward(*(jnp.asarray(a) for a in args))
+        want = numpy_forward(*args)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=f"seed {seed}")
+
+
+def test_forward_deterministic():
+    args = make_params(3)
+    (a,) = model.cnn_forward(*(jnp.asarray(x) for x in args))
+    (b,) = model.cnn_forward(*(jnp.asarray(x) for x in args))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_entry_points_lower():
+    """Every AOT entry must lower to HLO text without error."""
+    from compile import aot
+
+    for name, fn, ex_args in aot.entries():
+        import jax
+
+        text = aot.to_hlo_text(jax.jit(fn).lower(*ex_args))
+        assert "ENTRY" in text, name
+        assert len(text) > 100, name

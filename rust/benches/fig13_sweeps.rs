@@ -1,0 +1,50 @@
+//! Bench: regenerate Fig. 13a (capacity sweep) and Fig. 13b (bus-width
+//! sweep) — peak performance / energy efficiency / utilisation vs the
+//! design parameters, ResNet50 ⟨8:8⟩ workload.
+
+use std::time::Instant;
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::arch::stats::Phase;
+use nandspin::cnn::network::resnet50;
+use nandspin::coordinator::Coordinator;
+
+fn main() {
+    let net = resnet50(8);
+    let t0 = Instant::now();
+
+    println!("== Fig. 13a: effect of capacity on peak performance and energy efficiency ==");
+    println!(
+        "{:>9} {:>12} {:>14} {:>16} {:>12}",
+        "cap (MB)", "FPS", "GOPS/mm²", "GOPS/W/mm²", "area (mm²)"
+    );
+    for cap in [8usize, 16, 32, 64, 128, 256] {
+        let mut cfg = ArchConfig::paper();
+        cfg.capacity_mb = cap;
+        let m = Coordinator::new(cfg).analytic_metrics(&net, 8);
+        println!(
+            "{:>9} {:>12.1} {:>14.3} {:>16.3} {:>12.1}",
+            cap, m.fps(), m.gops_per_mm2(), m.efficiency_per_mm2(), m.area_mm2
+        );
+    }
+
+    println!();
+    println!("== Fig. 13b: effect of bus width on peak performance and utilisation ==");
+    println!("{:>10} {:>12} {:>14} {:>14}", "bus (bit)", "FPS", "GOPS/mm²", "util (%)");
+    for bus in [32usize, 64, 128, 256, 512] {
+        let mut cfg = ArchConfig::paper();
+        cfg.bus_width_bits = bus;
+        let coord = Coordinator::new(cfg);
+        let m = coord.analytic_metrics(&net, 8);
+        let st = coord.analytic_stats(&net, 8);
+        // Utilisation: fraction of time the compute units are busy, i.e.
+        // not stalled on data delivery (loads + inter-layer transfer).
+        let stalled = st[Phase::LoadData].latency_ns + st[Phase::DataTransfer].latency_ns;
+        let util = 1.0 - stalled / st.total_latency_ns();
+        println!(
+            "{:>10} {:>12.1} {:>14.3} {:>14.1}",
+            bus, m.fps(), m.gops_per_mm2(), util * 100.0
+        );
+    }
+    println!("\n[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,55 @@
+//! Bench: regenerate Fig. 14 — energy efficiency normalised to area for
+//! all six designs across ⟨W:I⟩ ∈ {1:1, 2:2, 4:4, 8:8} on
+//! AlexNet / VGG19 / ResNet50, plus the paper's headline ratios.
+
+use std::time::Instant;
+
+use nandspin::baselines::designs::BaselineKind;
+use nandspin::cnn::network::{alexnet, resnet50, vgg19};
+use nandspin::coordinator::Coordinator;
+use nandspin::workload::PRECISION_GRID;
+
+fn main() {
+    let t0 = Instant::now();
+    let coord = Coordinator::paper();
+    println!("== Fig. 14: energy efficiency normalised to area (GOPS/W/mm²) ==");
+    let mut ratios: Vec<(&str, f64)> = Vec::new();
+    for (name, mk) in [
+        ("AlexNet", alexnet as fn(u8) -> nandspin::cnn::network::Network),
+        ("VGG19", vgg19),
+        ("ResNet50", resnet50),
+    ] {
+        println!("--- {name} ---");
+        print!("{:<12}", "design");
+        for (w, i) in PRECISION_GRID {
+            print!("{:>12}", format!("<{w}:{i}>"));
+        }
+        println!();
+        let mut ours = Vec::new();
+        for (w, i) in PRECISION_GRID {
+            ours.push(coord.analytic_metrics(&mk(i), w).efficiency_per_mm2());
+        }
+        for kind in BaselineKind::ALL {
+            let b = kind.model();
+            print!("{:<12}", b.name);
+            for (gi, (w, i)) in PRECISION_GRID.into_iter().enumerate() {
+                let v = b.metrics(&mk(i), w).efficiency_per_mm2();
+                print!("{v:>12.3}");
+                ratios.push((b.name, ours[gi] / v));
+            }
+            println!();
+        }
+        print!("{:<12}", "Proposed");
+        for v in &ours {
+            print!("{v:>12.3}");
+        }
+        println!();
+    }
+    println!("\n== average efficiency improvement of Proposed (paper: DRAM 2.3x, ReRAM 12.3x, STT-CiM 1.4x, SOT 2.6x) ==");
+    for name in ["DRISA", "PRIME", "STT-CiM", "MRIMA", "IMCE"] {
+        let rs: Vec<f64> = ratios.iter().filter(|(n, _)| *n == name).map(|(_, r)| *r).collect();
+        let avg = rs.iter().sum::<f64>() / rs.len() as f64;
+        println!("  vs {name:<8}: {avg:>6.2}x");
+    }
+    println!("\n[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate Fig. 16 — latency and energy breakdown of the
+//! proposed accelerator on ResNet50 ⟨8:8⟩.
+
+use std::time::Instant;
+
+use nandspin::arch::stats::Phase;
+use nandspin::cnn::network::resnet50;
+use nandspin::coordinator::Coordinator;
+
+/// Paper shares for reference (latency %, energy %).
+const PAPER: [(&str, f64, f64); 6] = [
+    ("load data", 38.4, 32.6),
+    ("convolution", 33.9, 35.5),
+    ("data transfer", 4.8, 4.9),
+    ("pooling", 13.2, 15.4),
+    ("batch norm", 4.4, 5.1),
+    ("quantization", 5.3, 6.5),
+];
+
+fn main() {
+    let t0 = Instant::now();
+    let coord = Coordinator::paper();
+    let net = resnet50(8);
+    let st = coord.analytic_stats(&net, 8);
+    println!("== Fig. 16: ResNet50 ⟨8:8⟩ breakdown (measured vs paper) ==");
+    println!("total: {:.3} ms, {:.3} mJ ({:.1} FPS)", st.total_latency_ms(), st.total_energy_mj(),
+        1000.0 / st.total_latency_ms());
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>10}",
+        "phase", "lat %", "paper %", "energy %", "paper %"
+    );
+    for &p in &Phase::ALL {
+        let lat = 100.0 * st[p].latency_ns / st.total_latency_ns();
+        let en = 100.0 * st[p].energy_fj / st.total_energy_fj();
+        let (pl, pe) = PAPER
+            .iter()
+            .find(|(n, _, _)| *n == p.label())
+            .map(|&(_, l, e)| (l, e))
+            .unwrap_or((0.0, 0.0));
+        println!("{:<16} {:>10.1} {:>10.1} {:>10.1} {:>10.1}", p.label(), lat, pl, en, pe);
+    }
+    println!("\n[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig. 17 — area overhead breakdown of the add-on
+//! PIM circuits (plus the §5.3 8.9 % overhead claim and Table 3 area).
+
+use std::time::Instant;
+
+use nandspin::arch::area::AreaModel;
+use nandspin::arch::config::ArchConfig;
+
+fn main() {
+    let t0 = Instant::now();
+    let cfg = ArchConfig::paper();
+    let area = AreaModel::default();
+    let b = area.breakdown(&cfg);
+    println!("== Fig. 17: area overhead breakdown (measured vs paper) ==");
+    println!("base memory array : {:>8.2} mm²", b.base_mm2());
+    println!(
+        "PIM add-on        : {:>8.2} mm²  ({:.1} % overhead; paper: 8.9 %)",
+        b.addon_mm2(),
+        100.0 * b.overhead_ratio()
+    );
+    let paper = [("computation units", 47.0), ("buffer", 4.0), ("controller + mux", 21.0), ("other circuits", 28.0)];
+    for (s, (pname, pfrac)) in area.fig17_slices(&cfg).iter().zip(paper) {
+        assert_eq!(s.name, pname);
+        println!(
+            "  {:<18}: {:>6.2} mm²  ({:>4.1} %; paper {:>4.1} %)",
+            s.name,
+            s.mm2,
+            100.0 * s.fraction,
+            pfrac
+        );
+    }
+    println!("total             : {:>8.2} mm²  (Table 3: 64.5 mm²)", b.total_mm2());
+    println!("\n[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,79 @@
+//! Microbenchmarks of the simulator hot paths (the §Perf targets):
+//! row AND+count, bitwise conv stepper, in-memory addition, the full
+//! functional SmallCNN, and the analytic ResNet50 schedule.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::arch::stats::{Phase, Stats};
+use nandspin::cnn::network::{resnet50, small_cnn};
+use nandspin::cnn::ref_exec::ModelParams;
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::{AnalyticModel, Coordinator};
+use nandspin::device::energy::DeviceCosts;
+use nandspin::subarray::conv::{bitplane_conv_counts, BitKernel, ConvGeometry};
+use nandspin::subarray::primitives::add_columns;
+use nandspin::subarray::Subarray;
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<38} {:>12.3} µs/iter  ({iters} iters)", per * 1e6);
+    per
+}
+
+fn main() {
+    println!("== hotpath microbenchmarks ==");
+    let mut stats = Stats::default();
+
+    // Row AND + bit-count (the innermost conv op).
+    let mut sub = Subarray::new(256, 128, 16, DeviceCosts::default());
+    for r in 0..32 {
+        sub.write_row(r, (r as u128).wrapping_mul(0x9e3779b9) | 1, &mut stats, Phase::LoadData);
+    }
+    sub.buffer_write(0, u128::MAX, &mut stats, Phase::LoadData);
+    let per = bench("and_count (row AND + counter)", 200_000, || {
+        sub.and_count(black_box(7), 0, &mut stats, Phase::Convolution);
+    });
+    println!("  -> {:.1} M row-ops/s ({:.2} G bit-ops/s)", 1e-6 / per, 128e-9 / per);
+
+    // Bit-plane conv stepper (3x3 over 32x64 plane).
+    let geo = ConvGeometry { in_h: 32, in_w: 64, stride: 1 };
+    let kernel = BitKernel::new(3, 3, vec![true, false, true, true, true, false, false, true, true]);
+    bench("bitplane_conv_counts 3x3 @32x64", 2_000, || {
+        sub.counters.reset();
+        black_box(bitplane_conv_counts(&mut sub, 0, geo, &kernel, &mut stats, Phase::Convolution));
+    });
+
+    // In-memory 8-operand addition.
+    let mut sub2 = Subarray::new(256, 128, 16, DeviceCosts::default());
+    for b in 0..64 {
+        sub2.write_row(b, (b as u128).wrapping_mul(0xdeadbeef) | 3, &mut stats, Phase::LoadData);
+    }
+    let bases: Vec<usize> = (0..8).map(|i| i * 8).collect();
+    bench("add_columns 8 operands x 8 bits", 5_000, || {
+        black_box(add_columns(&mut sub2, &bases, 8, 128, &mut stats, Phase::Pooling));
+    });
+
+    // Full functional SmallCNN inference.
+    let net = small_cnn(4);
+    let params = ModelParams::random(&net, 4, 1);
+    let input = QTensor::random(2, 14, 22, 4, 2);
+    let coord = Coordinator::paper();
+    bench("functional SmallCNN inference", 3, || {
+        black_box(coord.functional_run(&net, &params, &input));
+    });
+
+    // Analytic ResNet50 schedule (the sweep inner loop).
+    let model = AnalyticModel::new(ArchConfig::paper());
+    let net50 = resnet50(8);
+    bench("analytic ResNet50 schedule", 50, || {
+        black_box(model.network_stats(&net50, 8));
+    });
+}

@@ -1,0 +1,64 @@
+//! Area model wrapper: Fig. 17 breakdown and Table 3 figures.
+
+
+use crate::arch::config::ArchConfig;
+use crate::nvsim::{AreaBreakdown, NvSimModel};
+
+/// High-level area model for the proposed accelerator.
+#[derive(Debug, Clone, Default)]
+pub struct AreaModel {
+    nvsim: NvSimModel,
+}
+
+/// One Fig. 17 pie slice.
+#[derive(Debug, Clone)]
+pub struct AreaSlice {
+    /// Component name.
+    pub name: &'static str,
+    /// Area in mm².
+    pub mm2: f64,
+    /// Fraction of the total add-on.
+    pub fraction: f64,
+}
+
+impl AreaModel {
+    /// Full structural breakdown for `cfg`.
+    pub fn breakdown(&self, cfg: &ArchConfig) -> AreaBreakdown {
+        self.nvsim.area(cfg)
+    }
+
+    /// Total chip area in mm² (Table 3 row).
+    pub fn total_mm2(&self, cfg: &ArchConfig) -> f64 {
+        self.breakdown(cfg).total_mm2()
+    }
+
+    /// Fig. 17: the add-on area pie (computation units / buffer /
+    /// controller+mux / other).
+    pub fn fig17_slices(&self, cfg: &ArchConfig) -> Vec<AreaSlice> {
+        let b = self.breakdown(cfg);
+        let addon = b.addon_mm2();
+        let mk = |name, mm2: f64| AreaSlice { name, mm2, fraction: mm2 / addon };
+        vec![
+            mk("computation units", b.addon_compute_mm2),
+            mk("buffer", b.addon_buffer_mm2),
+            mk("controller + mux", b.addon_ctrl_mux_mm2),
+            mk("other circuits", b.addon_other_mm2),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig17_slices_sum_to_one() {
+        let m = AreaModel::default();
+        let slices = m.fig17_slices(&ArchConfig::paper());
+        let total: f64 = slices.iter().map(|s| s.fraction).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert_eq!(slices.len(), 4);
+        // Computation units dominate (Fig. 17: ~47 %).
+        assert!(slices[0].fraction > slices[1].fraction);
+    }
+}

@@ -1,0 +1,158 @@
+//! Architecture configuration: the Fig. 2 hierarchy parameters and the
+//! §5.2 experimental operating point (4×4 subarrays of 256×128 per mat,
+//! 4×4 mats per group, 64 MB total, 128-bit bus).
+
+
+use crate::device::energy::DeviceCosts;
+use crate::device::nand_spin::MTJS_PER_DEVICE;
+
+/// Full architecture configuration.
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    /// MTJ rows per subarray (paper: 256).
+    pub rows: usize,
+    /// Columns (SAs / bit-counters) per subarray (paper: 128).
+    pub cols: usize,
+    /// Subarrays per mat along each dimension (paper: 4×4).
+    pub subarrays_per_mat: (usize, usize),
+    /// Mats per bank group along each dimension (paper: 4×4).
+    pub mats_per_bank: (usize, usize),
+    /// Total memory capacity in MB (paper design point: 64).
+    pub capacity_mb: usize,
+    /// Shared data-bus width in bits (paper design point: 128).
+    pub bus_width_bits: usize,
+    /// Weight-buffer rows per subarray (holds 1-bit weight rows + the
+    /// comparison scratch rows).
+    pub buffer_rows: usize,
+    /// Device/periphery cost scalars.
+    pub costs: DeviceCosts,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            rows: 256,
+            cols: 128,
+            subarrays_per_mat: (4, 4),
+            mats_per_bank: (4, 4),
+            capacity_mb: 64,
+            bus_width_bits: 128,
+            // Enough rows for one 1-bit weight matrix of the largest
+            // mainstream kernel (11×11 in AlexNet) plus comparison scratch.
+            buffer_rows: 16,
+            costs: DeviceCosts::default(),
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Paper §5.2 operating point (the default).
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// Subarray capacity in bits.
+    pub fn subarray_bits(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Subarrays per mat.
+    pub fn subarrays_in_mat(&self) -> usize {
+        self.subarrays_per_mat.0 * self.subarrays_per_mat.1
+    }
+
+    /// Mats per bank group.
+    pub fn mats_in_bank(&self) -> usize {
+        self.mats_per_bank.0 * self.mats_per_bank.1
+    }
+
+    /// Bits per mat.
+    pub fn mat_bits(&self) -> usize {
+        self.subarray_bits() * self.subarrays_in_mat()
+    }
+
+    /// Bits per bank group.
+    pub fn bank_bits(&self) -> usize {
+        self.mat_bits() * self.mats_in_bank()
+    }
+
+    /// Number of bank groups needed to reach `capacity_mb`.
+    pub fn num_banks(&self) -> usize {
+        let total_bits = self.capacity_mb * 1024 * 1024 * 8;
+        total_bits.div_ceil(self.bank_bits())
+    }
+
+    /// Total number of subarrays in the configured capacity — the
+    /// compute-parallelism budget of the accelerator.
+    pub fn total_subarrays(&self) -> usize {
+        self.num_banks() * self.mats_in_bank() * self.subarrays_in_mat()
+    }
+
+    /// NAND-SPIN strip rows per subarray (each strip stacks
+    /// [`MTJS_PER_DEVICE`] MTJ rows).
+    pub fn strip_rows(&self) -> usize {
+        self.rows / MTJS_PER_DEVICE
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rows % MTJS_PER_DEVICE != 0 {
+            return Err(format!(
+                "rows ({}) must be a multiple of MTJs per device ({MTJS_PER_DEVICE})",
+                self.rows
+            ));
+        }
+        if self.cols == 0 || self.cols > 128 {
+            return Err(format!(
+                "cols ({}) must be in 1..=128 (one u128 word per row)",
+                self.cols
+            ));
+        }
+        if self.bus_width_bits == 0 {
+            return Err("bus width must be non-zero".into());
+        }
+        if self.buffer_rows < 2 {
+            return Err("buffer needs >= 2 rows (comparison uses two scratch rows)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_point_geometry() {
+        let c = ArchConfig::paper();
+        c.validate().unwrap();
+        assert_eq!(c.subarray_bits(), 256 * 128); // 4 KiB
+        assert_eq!(c.mat_bits(), 16 * 4096 * 8); // 64 KiB
+        assert_eq!(c.bank_bits(), 1024 * 1024 * 8); // 1 MiB
+        assert_eq!(c.num_banks(), 64); // 64 MB total
+        assert_eq!(c.total_subarrays(), 64 * 16 * 16);
+        assert_eq!(c.strip_rows(), 32);
+    }
+
+    #[test]
+    fn capacity_scales_banks() {
+        let mut c = ArchConfig::paper();
+        for cap in [8, 16, 32, 64, 128, 256] {
+            c.capacity_mb = cap;
+            assert_eq!(c.num_banks(), cap, "1 MiB per bank group");
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ArchConfig::paper();
+        c.rows = 255;
+        assert!(c.validate().is_err());
+        let mut c = ArchConfig::paper();
+        c.cols = 129;
+        assert!(c.validate().is_err());
+        let mut c = ArchConfig::paper();
+        c.buffer_rows = 1;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Architecture-level configuration, statistics accounting and area model.
+
+pub mod area;
+pub mod config;
+pub mod stats;
+
+pub use area::AreaModel;
+pub use config::ArchConfig;
+pub use stats::{Phase, Stats};

@@ -1,0 +1,289 @@
+//! Latency / energy / op-count accounting with the Fig. 16 breakdown
+//! categories.
+//!
+//! Two composition rules mirror the hardware: subarrays within a step run
+//! in *parallel* (`merge_parallel`: energy sums, time is the max) while
+//! successive steps are *serial* (`merge_serial`: both sum). The
+//! coordinator chooses which rule applies at each schedule point.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Breakdown categories of Fig. 16 (latency & energy breakdown for
+/// ResNet50) plus a readout/other bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Loading inputs/weights from outside and distributing them into
+    /// arrays (Fig. 16: "load", 38.4 % latency / 32.6 % energy).
+    LoadData,
+    /// Bitwise convolution: AND + bit-count + partial-sum accumulation.
+    Convolution,
+    /// In-mat / inter-mat data movement of intermediate results.
+    DataTransfer,
+    /// Pooling-layer comparisons / averaging.
+    Pooling,
+    /// Batch normalisation (Eq. 3).
+    BatchNorm,
+    /// Quantization (Eq. 2).
+    Quantization,
+    /// Everything else (result readout, control).
+    Other,
+}
+
+impl Phase {
+    /// All phases in Fig. 16 presentation order.
+    pub const ALL: [Phase; 7] = [
+        Phase::LoadData,
+        Phase::Convolution,
+        Phase::DataTransfer,
+        Phase::Pooling,
+        Phase::BatchNorm,
+        Phase::Quantization,
+        Phase::Other,
+    ];
+
+    /// Stable index for dense storage.
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            Phase::LoadData => 0,
+            Phase::Convolution => 1,
+            Phase::DataTransfer => 2,
+            Phase::Pooling => 3,
+            Phase::BatchNorm => 4,
+            Phase::Quantization => 5,
+            Phase::Other => 6,
+        }
+    }
+
+    /// Human label matching the paper's figure.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::LoadData => "load data",
+            Phase::Convolution => "convolution",
+            Phase::DataTransfer => "data transfer",
+            Phase::Pooling => "pooling",
+            Phase::BatchNorm => "batch norm",
+            Phase::Quantization => "quantization",
+            Phase::Other => "other",
+        }
+    }
+}
+
+/// Energy/latency accumulated for one phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseStats {
+    /// Energy in femtojoules.
+    pub energy_fj: f64,
+    /// Latency in nanoseconds.
+    pub latency_ns: f64,
+}
+
+/// Raw operation counts — useful for cross-checking analytic vs functional
+/// paths and for the op-level regression tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Strip (SOT) erase operations.
+    pub erases: u64,
+    /// Program steps (one MTJ position across a row).
+    pub program_steps: u64,
+    /// Individual bits switched AP→P.
+    pub programmed_bits: u64,
+    /// Row read operations.
+    pub reads: u64,
+    /// Row AND operations.
+    pub ands: u64,
+    /// Bit-counter accumulate steps.
+    pub bitcounts: u64,
+    /// Weight-buffer row accesses.
+    pub buffer_accesses: u64,
+    /// Bits moved on local (in-mat) buses.
+    pub local_bus_bits: u64,
+    /// Bits moved on the global (inter-mat / I/O) bus.
+    pub global_bus_bits: u64,
+}
+
+impl OpCounts {
+    fn add(&mut self, o: &OpCounts) {
+        self.erases += o.erases;
+        self.program_steps += o.program_steps;
+        self.programmed_bits += o.programmed_bits;
+        self.reads += o.reads;
+        self.ands += o.ands;
+        self.bitcounts += o.bitcounts;
+        self.buffer_accesses += o.buffer_accesses;
+        self.local_bus_bits += o.local_bus_bits;
+        self.global_bus_bits += o.global_bus_bits;
+    }
+}
+
+/// Full statistics record.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Stats {
+    phases: [PhaseStats; 7],
+    /// Op counts (not phase-resolved).
+    pub ops: OpCounts,
+}
+
+impl Index<Phase> for Stats {
+    type Output = PhaseStats;
+    fn index(&self, p: Phase) -> &PhaseStats {
+        &self.phases[p.idx()]
+    }
+}
+
+impl IndexMut<Phase> for Stats {
+    fn index_mut(&mut self, p: Phase) -> &mut PhaseStats {
+        &mut self.phases[p.idx()]
+    }
+}
+
+impl Stats {
+    /// Record `energy_fj` and `latency_ns` against `phase`.
+    #[inline]
+    pub fn record(&mut self, phase: Phase, energy_fj: f64, latency_ns: f64) {
+        let p = &mut self.phases[phase.idx()];
+        p.energy_fj += energy_fj;
+        p.latency_ns += latency_ns;
+    }
+
+    /// Total energy across phases (fJ).
+    pub fn total_energy_fj(&self) -> f64 {
+        self.phases.iter().map(|p| p.energy_fj).sum()
+    }
+
+    /// Total latency across phases (ns).
+    pub fn total_latency_ns(&self) -> f64 {
+        self.phases.iter().map(|p| p.latency_ns).sum()
+    }
+
+    /// Total energy in millijoules.
+    pub fn total_energy_mj(&self) -> f64 {
+        self.total_energy_fj() * 1e-12
+    }
+
+    /// Total latency in milliseconds.
+    pub fn total_latency_ms(&self) -> f64 {
+        self.total_latency_ns() * 1e-6
+    }
+
+    /// Serial composition: this step happens after `other` — both energy
+    /// and latency accumulate.
+    pub fn merge_serial(&mut self, other: &Stats) {
+        for i in 0..self.phases.len() {
+            self.phases[i].energy_fj += other.phases[i].energy_fj;
+            self.phases[i].latency_ns += other.phases[i].latency_ns;
+        }
+        self.ops.add(&other.ops);
+    }
+
+    /// Parallel composition: `others` ran concurrently — energies sum,
+    /// per-phase latency is the maximum over the group.
+    pub fn merge_parallel(&mut self, others: &[Stats]) {
+        for i in 0..self.phases.len() {
+            let mut max_lat = 0.0f64;
+            for o in others {
+                self.phases[i].energy_fj += o.phases[i].energy_fj;
+                max_lat = max_lat.max(o.phases[i].latency_ns);
+            }
+            self.phases[i].latency_ns += max_lat;
+        }
+        for o in others {
+            self.ops.add(&o.ops);
+        }
+    }
+
+    /// Per-phase latency fractions (sums to 1 unless empty).
+    pub fn latency_breakdown(&self) -> Vec<(Phase, f64)> {
+        let t = self.total_latency_ns();
+        Phase::ALL
+            .iter()
+            .map(|&p| (p, if t > 0.0 { self[p].latency_ns / t } else { 0.0 }))
+            .collect()
+    }
+
+    /// Per-phase energy fractions.
+    pub fn energy_breakdown(&self) -> Vec<(Phase, f64)> {
+        let e = self.total_energy_fj();
+        Phase::ALL
+            .iter()
+            .map(|&p| (p, if e > 0.0 { self[p].energy_fj / e } else { 0.0 }))
+            .collect()
+    }
+}
+
+impl fmt::Display for Stats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "total: {:.3} ms, {:.3} mJ",
+            self.total_latency_ms(),
+            self.total_energy_mj()
+        )?;
+        for &p in &Phase::ALL {
+            let s = self[p];
+            if s.latency_ns == 0.0 && s.energy_fj == 0.0 {
+                continue;
+            }
+            writeln!(
+                f,
+                "  {:>14}: {:>10.3} ms ({:>5.1} %)  {:>10.3} mJ ({:>5.1} %)",
+                p.label(),
+                s.latency_ns * 1e-6,
+                100.0 * s.latency_ns / self.total_latency_ns().max(f64::MIN_POSITIVE),
+                s.energy_fj * 1e-12,
+                100.0 * s.energy_fj / self.total_energy_fj().max(f64::MIN_POSITIVE),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_totals() {
+        let mut s = Stats::default();
+        s.record(Phase::Convolution, 100.0, 2.0);
+        s.record(Phase::LoadData, 50.0, 8.0);
+        assert_eq!(s.total_energy_fj(), 150.0);
+        assert_eq!(s.total_latency_ns(), 10.0);
+        assert_eq!(s[Phase::Convolution].energy_fj, 100.0);
+    }
+
+    #[test]
+    fn parallel_merge_takes_max_latency() {
+        let mut a = Stats::default();
+        let mut x = Stats::default();
+        let mut y = Stats::default();
+        x.record(Phase::Convolution, 10.0, 5.0);
+        y.record(Phase::Convolution, 20.0, 3.0);
+        a.merge_parallel(&[x, y]);
+        assert_eq!(a[Phase::Convolution].energy_fj, 30.0);
+        assert_eq!(a[Phase::Convolution].latency_ns, 5.0);
+    }
+
+    #[test]
+    fn serial_merge_sums_both() {
+        let mut a = Stats::default();
+        let mut b = Stats::default();
+        a.record(Phase::Pooling, 10.0, 5.0);
+        b.record(Phase::Pooling, 1.0, 1.0);
+        a.merge_serial(&b);
+        assert_eq!(a[Phase::Pooling].energy_fj, 11.0);
+        assert_eq!(a[Phase::Pooling].latency_ns, 6.0);
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let mut s = Stats::default();
+        s.record(Phase::Convolution, 30.0, 3.0);
+        s.record(Phase::LoadData, 70.0, 7.0);
+        let lat: f64 = s.latency_breakdown().iter().map(|(_, f)| f).sum();
+        let en: f64 = s.energy_breakdown().iter().map(|(_, f)| f).sum();
+        assert!((lat - 1.0).abs() < 1e-12);
+        assert!((en - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,140 @@
+//! Bank controller: generates the control-signal schedule (Table 1) for
+//! memory and compute operations and tracks issue statistics.
+//!
+//! The controller in the paper sequences the per-operation signal sets
+//! (WE/ER/Cx/Ry/FU/REF); the functional simulator applies those semantics
+//! directly in [`crate::subarray`], so what remains architecturally
+//! visible here is the *schedule*: which op class was issued, and the
+//! signal-level invariants checked by [`SignalSet::validate`].
+
+
+/// Operation classes the controller can issue (Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// SOT strip erase.
+    Erase,
+    /// STT program step.
+    Program,
+    /// SPCSA read.
+    Read,
+    /// SPCSA AND (compute mode).
+    And,
+}
+
+/// Control-signal levels for one operation (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SignalSet {
+    /// Write-enable path transistor.
+    pub we: bool,
+    /// Erase path transistor.
+    pub er: bool,
+    /// Column select (`C_x`) — data-dependent during program.
+    pub cx: bool,
+    /// Row select (`R_y`).
+    pub ry: bool,
+    /// Function input to the SA: high for read, operand value for AND.
+    pub fu: bool,
+    /// Reference-branch enable.
+    pub refb: bool,
+}
+
+impl SignalSet {
+    /// Canonical signal set for an op class (Table 1), with `data` giving
+    /// the data-dependent levels (program bit `D`, AND operand `W`).
+    pub fn for_op(op: OpClass, data: bool) -> Self {
+        match op {
+            OpClass::Erase => Self { we: true, er: true, cx: false, ry: false, fu: false, refb: false },
+            OpClass::Program => Self { we: true, er: false, cx: data, ry: true, fu: false, refb: false },
+            OpClass::Read => Self { we: false, er: true, cx: false, ry: true, fu: true, refb: true },
+            OpClass::And => Self { we: false, er: true, cx: false, ry: true, fu: data, refb: true },
+        }
+    }
+
+    /// Check electrical invariants: the write path and the sense path are
+    /// mutually exclusive; sensing requires the reference branch.
+    pub fn validate(&self) -> Result<(), &'static str> {
+        if self.we && self.refb {
+            return Err("write path and sense path enabled simultaneously");
+        }
+        if self.fu && !self.refb {
+            return Err("FU driven while the SA reference branch is off");
+        }
+        if self.we && self.er && (self.cx || self.ry) {
+            return Err("erase must deselect all word/column lines");
+        }
+        Ok(())
+    }
+}
+
+/// Controller issue statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Controller {
+    /// Erase ops issued.
+    pub issued_erases: u64,
+    /// Program steps issued.
+    pub issued_programs: u64,
+    /// Read ops issued.
+    pub issued_reads: u64,
+    /// AND ops issued.
+    pub issued_ands: u64,
+    /// Bus transfers issued.
+    pub issued_transfers: u64,
+}
+
+impl Controller {
+    /// Record an issue of `op`, returning the validated signal set.
+    pub fn issue(&mut self, op: OpClass, data: bool) -> SignalSet {
+        let sig = SignalSet::for_op(op, data);
+        debug_assert!(sig.validate().is_ok());
+        match op {
+            OpClass::Erase => self.issued_erases += 1,
+            OpClass::Program => self.issued_programs += 1,
+            OpClass::Read => self.issued_reads += 1,
+            OpClass::And => self.issued_ands += 1,
+        }
+        sig
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_signal_sets_are_valid() {
+        for op in [OpClass::Erase, OpClass::Program, OpClass::Read, OpClass::And] {
+            for data in [false, true] {
+                SignalSet::for_op(op, data).validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn table1_levels_match_paper() {
+        let erase = SignalSet::for_op(OpClass::Erase, false);
+        assert!(erase.we && erase.er && !erase.fu && !erase.refb);
+        let prog1 = SignalSet::for_op(OpClass::Program, true);
+        assert!(prog1.we && !prog1.er && prog1.cx && prog1.ry);
+        let read = SignalSet::for_op(OpClass::Read, true);
+        assert!(!read.we && read.er && read.fu && read.refb);
+        let and0 = SignalSet::for_op(OpClass::And, false);
+        assert!(!and0.fu && and0.refb, "AND with W=0 holds FU low");
+    }
+
+    #[test]
+    fn controller_counts_issues() {
+        let mut c = Controller::default();
+        c.issue(OpClass::Erase, false);
+        c.issue(OpClass::Program, true);
+        c.issue(OpClass::And, false);
+        assert_eq!((c.issued_erases, c.issued_programs, c.issued_ands), (1, 1, 1));
+    }
+
+    #[test]
+    fn invalid_combinations_rejected() {
+        let bad = SignalSet { we: true, er: false, cx: false, ry: false, fu: true, refb: true };
+        assert!(bad.validate().is_err());
+        let bad2 = SignalSet { we: false, er: false, cx: false, ry: false, fu: true, refb: false };
+        assert!(bad2.validate().is_err());
+    }
+}

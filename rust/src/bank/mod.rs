@@ -1,0 +1,75 @@
+//! Bank level (Fig. 2): a grid of mats with a global buffer and the
+//! controller that schedules computations and communications.
+
+pub mod controller;
+
+pub use controller::Controller;
+
+use crate::arch::config::ArchConfig;
+use crate::arch::stats::{Phase, Stats};
+use crate::mat::{Bus, Mat};
+
+/// One fully-functional bank group: `mats_per_bank` mats, a global data
+/// buffer and the shared global bus.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    /// Mats, row-major over the (4×4) grid.
+    pub mats: Vec<Mat>,
+    /// Global (inter-mat / I/O) bus.
+    pub global_bus: Bus,
+    /// Controller state.
+    pub controller: Controller,
+}
+
+impl Bank {
+    /// Build a bank per `cfg`.
+    pub fn new(cfg: &ArchConfig) -> Self {
+        let mats = (0..cfg.mats_in_bank()).map(|_| Mat::new(cfg)).collect();
+        Self {
+            mats,
+            global_bus: Bus::global(cfg),
+            controller: Controller::default(),
+        }
+    }
+
+    /// Number of mats.
+    pub fn len(&self) -> usize {
+        self.mats.len()
+    }
+
+    /// True if empty (never for valid configs).
+    pub fn is_empty(&self) -> bool {
+        self.mats.is_empty()
+    }
+
+    /// Charge an inter-mat or I/O transfer of `bits` bits on the global
+    /// bus (data entering/leaving the bank or crossing mats).
+    pub fn transfer(&mut self, bits: u64, stats: &mut Stats, phase: Phase) {
+        self.controller.issued_transfers += 1;
+        self.global_bus.transfer(bits, stats, phase);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_geometry() {
+        let cfg = ArchConfig::paper();
+        let b = Bank::new(&cfg);
+        assert_eq!(b.len(), 16);
+        assert_eq!(b.mats[0].len(), 16);
+    }
+
+    #[test]
+    fn transfer_counts_and_charges() {
+        let cfg = ArchConfig::paper();
+        let mut b = Bank::new(&cfg);
+        let mut st = Stats::default();
+        b.transfer(256, &mut st, Phase::DataTransfer);
+        assert_eq!(b.controller.issued_transfers, 1);
+        assert_eq!(st.ops.global_bus_bits, 256);
+        assert!(st[Phase::DataTransfer].latency_ns > 0.0);
+    }
+}

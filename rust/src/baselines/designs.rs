@@ -1,0 +1,167 @@
+//! The five comparison designs with their structural parameters.
+//!
+//! Per-op energies/latencies come from each design's paper (DRAM
+//! tRC-class multi-cycle logic for DRISA; ADC-limited analog MACs for
+//! PRIME; SA-based bit-line addition for STT-CiM; bulk bitwise MRAM ops
+//! for MRIMA; SOT bit-wise convolution for IMCE). The `lanes` value is
+//! the Table-3 calibration pin: it is solved so that ResNet50 ⟨8:8⟩ at
+//! 64 MB reproduces each design's published throughput (checked by the
+//! `table3_calibration` test within ±25 %).
+
+use super::{BaselineModel, PrecisionScaling};
+
+/// Identifier for the comparison designs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// DRISA: DRAM-based reconfigurable in-situ accelerator.
+    Drisa,
+    /// PRIME: ReRAM crossbar PIM.
+    Prime,
+    /// STT-CiM: compute-in STT-MRAM via sensing.
+    SttCim,
+    /// MRIMA: MRAM-based in-memory accelerator.
+    Mrima,
+    /// IMCE: SOT-MRAM bit-wise convolution engine.
+    Imce,
+}
+
+impl BaselineKind {
+    /// Build the calibrated model.
+    pub fn model(self) -> BaselineModel {
+        match self {
+            // Multi-cycle in-DRAM AND/OR/shift logic: huge row
+            // parallelism, slow per-op (3T1C / tRC-class timing), cheap
+            // writes, DRAM-density area.
+            BaselineKind::Drisa => BaselineModel {
+                name: "DRISA",
+                technology: "DRAM",
+                area_mm2: 117.2,
+                lanes: 6.004e+04,
+                ns_per_bitop: 4.0,
+                fj_per_bitop: 130.0,
+                precision: PrecisionScaling::BitSerial,
+                write_ns_per_bit: 2.0e-4,
+                write_fj_per_bit: 20.0,
+                aux_bitops_per_elem_bit: 8.0,
+                load_cycles_per_bit: 1.0,
+            },
+            // Analog crossbar MACs gated by DAC sweeps and ADC
+            // conversions; few effective lanes, expensive per-op, and
+            // the ADC/DAC dominate energy.
+            BaselineKind::Prime => BaselineModel {
+                name: "PRIME",
+                technology: "ReRAM",
+                area_mm2: 78.2,
+                lanes: 9.052e+04,
+                ns_per_bitop: 100.0,
+                fj_per_bitop: 3400.0,
+                precision: PrecisionScaling::AnalogCrossbar,
+                write_ns_per_bit: 1.0e-3,
+                write_fj_per_bit: 2000.0,
+                aux_bitops_per_elem_bit: 4.0,
+                load_cycles_per_bit: 1.0,
+            },
+            // Bit-line addition in sense amps @1 GHz; STT writes are the
+            // expensive part (no SOT erase assist).
+            BaselineKind::SttCim => BaselineModel {
+                name: "STT-CiM",
+                technology: "STT-RAM",
+                area_mm2: 57.7,
+                lanes: 1.428e+04,
+                ns_per_bitop: 1.0,
+                fj_per_bitop: 165.0,
+                precision: PrecisionScaling::BitSerial,
+                write_ns_per_bit: 6.0e-4,
+                write_fj_per_bit: 500.0,
+                aux_bitops_per_elem_bit: 4.0,
+                load_cycles_per_bit: 2.0,
+            },
+            // Bulk bitwise in-MRAM ops; similar sensing path to STT-CiM
+            // with somewhat better scheduling.
+            BaselineKind::Mrima => BaselineModel {
+                name: "MRIMA",
+                technology: "STT-RAM",
+                area_mm2: 55.6,
+                lanes: 1.698e+04,
+                ns_per_bitop: 1.0,
+                fj_per_bitop: 150.0,
+                precision: PrecisionScaling::BitSerial,
+                write_ns_per_bit: 6.0e-4,
+                write_fj_per_bit: 450.0,
+                aux_bitops_per_elem_bit: 4.0,
+                load_cycles_per_bit: 2.0,
+            },
+            // SOT-MRAM convolution engine: two-transistor cells halve the
+            // density (biggest area), moderate speed, no weight-reuse
+            // buffer (more data movement → fewer effective lanes).
+            BaselineKind::Imce => BaselineModel {
+                name: "IMCE",
+                technology: "SOT-RAM",
+                area_mm2: 128.3,
+                lanes: 9.083e+03,
+                ns_per_bitop: 1.5,
+                fj_per_bitop: 136.0,
+                precision: PrecisionScaling::BitSerial,
+                write_ns_per_bit: 4.0e-4,
+                write_fj_per_bit: 300.0,
+                aux_bitops_per_elem_bit: 6.0,
+                load_cycles_per_bit: 2.0,
+            },
+        }
+    }
+
+    /// Published Table-3 throughput (FPS) — the calibration pin.
+    pub fn table3_fps(self) -> f64 {
+        match self {
+            BaselineKind::Drisa => 51.7,
+            BaselineKind::Prime => 9.4,
+            BaselineKind::SttCim => 45.6,
+            BaselineKind::Mrima => 52.3,
+            BaselineKind::Imce => 21.8,
+        }
+    }
+
+    /// All kinds in Table-3 order.
+    pub const ALL: [BaselineKind; 5] = [
+        BaselineKind::Drisa,
+        BaselineKind::Prime,
+        BaselineKind::SttCim,
+        BaselineKind::Mrima,
+        BaselineKind::Imce,
+    ];
+}
+
+/// All five calibrated baseline models (Table-3 order).
+pub fn all_baselines() -> Vec<BaselineModel> {
+    BaselineKind::ALL.iter().map(|k| k.model()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::network::resnet50;
+
+    #[test]
+    fn table3_calibration() {
+        let net = resnet50(8);
+        for kind in BaselineKind::ALL {
+            let m = kind.model().metrics(&net, 8);
+            let target = kind.table3_fps();
+            let ratio = m.fps() / target;
+            assert!(
+                (0.75..=1.33).contains(&ratio),
+                "{}: fps {:.1} vs Table-3 {:.1} (ratio {:.2})",
+                kind.model().name,
+                m.fps(),
+                target,
+                ratio
+            );
+        }
+    }
+
+    #[test]
+    fn area_matches_table3() {
+        assert_eq!(BaselineKind::Drisa.model().area_mm2, 117.2);
+        assert_eq!(BaselineKind::Imce.model().area_mm2, 128.3);
+    }
+}

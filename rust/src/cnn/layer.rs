@@ -1,0 +1,152 @@
+//! Layer IR: the operations the accelerator schedules (paper §4.2).
+
+
+/// Shape of an activation tensor (C, H, W).
+pub type Shape = (usize, usize, usize);
+
+/// One network layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Layer {
+    /// Convolution (`out_c` filters of `kh×kw`, stride `s`, zero-pad `p`).
+    /// Fully-connected layers are expressed as convolutions whose kernel
+    /// covers the whole input (paper §4.2).
+    Conv {
+        /// Output channels.
+        out_c: usize,
+        /// Kernel height.
+        kh: usize,
+        /// Kernel width.
+        kw: usize,
+        /// Stride.
+        stride: usize,
+        /// Symmetric zero padding.
+        pad: usize,
+    },
+    /// Max pooling over `k×k` windows with stride `s`.
+    MaxPool {
+        /// Window size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+    },
+    /// Average pooling over `k×k` windows with stride `s`.
+    AvgPool {
+        /// Window size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+    },
+    /// Batch normalisation (Eq. 3), per channel.
+    BatchNorm,
+    /// ReLU activation.
+    Relu,
+    /// Quantization to `bits` (Eq. 2) — brings wide accumulators back to
+    /// the working precision.
+    Quantize {
+        /// Target bit-width.
+        bits: u8,
+    },
+    /// Residual element-wise addition with the output of an earlier layer
+    /// (index into the network's layer list, post-execution shape must
+    /// match). Used by the ResNet50 preset.
+    Residual {
+        /// Source layer index.
+        from: usize,
+    },
+}
+
+impl Layer {
+    /// Output shape for an input of shape `s`.
+    ///
+    /// # Panics
+    /// If the layer is not applicable to `s` (e.g. kernel larger than
+    /// input without padding).
+    pub fn out_shape(&self, s: Shape) -> Shape {
+        let (c, h, w) = s;
+        match *self {
+            Layer::Conv { out_c, kh, kw, stride, pad } => {
+                let h2 = (h + 2 * pad).checked_sub(kh).expect("kernel taller than input") / stride + 1;
+                let w2 = (w + 2 * pad).checked_sub(kw).expect("kernel wider than input") / stride + 1;
+                (out_c, h2, w2)
+            }
+            Layer::MaxPool { k, stride } | Layer::AvgPool { k, stride } => {
+                ((c), (h - k) / stride + 1, (w - k) / stride + 1)
+            }
+            Layer::BatchNorm | Layer::Relu | Layer::Quantize { .. } | Layer::Residual { .. } => s,
+        }
+    }
+
+    /// Multiply-accumulate count for an input of shape `s` (0 for
+    /// non-conv layers; pooling/BN/quant op costs are modelled
+    /// separately).
+    pub fn macs(&self, s: Shape) -> u64 {
+        match *self {
+            Layer::Conv { out_c, kh, kw, .. } => {
+                let (in_c, _, _) = s;
+                let (oc, oh, ow) = self.out_shape(s);
+                debug_assert_eq!(oc, out_c);
+                (oc * oh * ow) as u64 * (in_c * kh * kw) as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Number of scalar elements this layer produces.
+    pub fn out_elems(&self, s: Shape) -> u64 {
+        let (c, h, w) = self.out_shape(s);
+        (c * h * w) as u64
+    }
+
+    /// Short mnemonic for logs.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Layer::Conv { .. } => "conv",
+            Layer::MaxPool { .. } => "maxpool",
+            Layer::AvgPool { .. } => "avgpool",
+            Layer::BatchNorm => "bn",
+            Layer::Relu => "relu",
+            Layer::Quantize { .. } => "quant",
+            Layer::Residual { .. } => "residual",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_and_macs() {
+        let l = Layer::Conv { out_c: 64, kh: 3, kw: 3, stride: 1, pad: 1 };
+        assert_eq!(l.out_shape((3, 224, 224)), (64, 224, 224));
+        assert_eq!(l.macs((3, 224, 224)), 64 * 224 * 224 * 3 * 3 * 3);
+    }
+
+    #[test]
+    fn strided_conv_shape() {
+        // AlexNet conv1: 96 filters 11×11 stride 4 on 3×227×227.
+        let l = Layer::Conv { out_c: 96, kh: 11, kw: 11, stride: 4, pad: 0 };
+        assert_eq!(l.out_shape((3, 227, 227)), (96, 55, 55));
+    }
+
+    #[test]
+    fn pool_shape() {
+        let l = Layer::MaxPool { k: 2, stride: 2 };
+        assert_eq!(l.out_shape((64, 112, 112)), (64, 56, 56));
+        assert_eq!(l.macs((64, 112, 112)), 0);
+    }
+
+    #[test]
+    fn pointwise_layers_preserve_shape() {
+        for l in [Layer::BatchNorm, Layer::Relu, Layer::Quantize { bits: 8 }] {
+            assert_eq!(l.out_shape((7, 9, 11)), (7, 9, 11));
+        }
+    }
+
+    #[test]
+    fn fc_as_full_kernel_conv() {
+        // FC 4096 on a 256×6×6 input = conv with 6×6 kernel.
+        let l = Layer::Conv { out_c: 4096, kh: 6, kw: 6, stride: 1, pad: 0 };
+        assert_eq!(l.out_shape((256, 6, 6)), (4096, 1, 1));
+    }
+}

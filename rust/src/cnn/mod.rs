@@ -1,0 +1,18 @@
+//! Quantized CNN intermediate representation, tensors, bit-plane
+//! decomposition, quantization / batch-norm semantics and the pure-Rust
+//! golden executor.
+//!
+//! Everything in this module is *integer-exact*: the same semantics are
+//! implemented three times (here, in the PIM functional simulator, and in
+//! the JAX/Pallas model) and must agree bit-for-bit.
+
+pub mod layer;
+pub mod network;
+pub mod quantize;
+pub mod ref_exec;
+pub mod tensor;
+
+pub use layer::Layer;
+pub use network::Network;
+pub use quantize::{BnParams, QuantParams};
+pub use tensor::{Kernel4, QTensor};

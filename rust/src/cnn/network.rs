@@ -1,0 +1,331 @@
+//! Network IR and the paper's benchmark models (AlexNet, VGG19,
+//! ResNet50) plus small functional-mode networks.
+
+
+use super::layer::{Layer, Shape};
+
+/// One node of the network graph: a layer plus an optional explicit input
+/// (defaults to the previous node; the network input for node 0).
+/// Explicit inputs express ResNet-style branches.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Node {
+    /// The operation.
+    pub layer: Layer,
+    /// Input node index; `None` = previous node's output.
+    pub input: Option<usize>,
+}
+
+/// A whole network.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    /// Model name (used in reports).
+    pub name: String,
+    /// Input shape (C, H, W).
+    pub input: Shape,
+    /// Input activation bit-width.
+    pub input_bits: u8,
+    /// Topologically-ordered nodes.
+    pub nodes: Vec<Node>,
+}
+
+impl Network {
+    /// Output shape of every node (index-aligned with `nodes`).
+    pub fn shapes(&self) -> Vec<Shape> {
+        let mut out = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let in_shape = match node.input {
+                Some(j) => {
+                    assert!(j < i, "node {i} reads from later node {j}");
+                    out[j]
+                }
+                None if i == 0 => self.input,
+                None => out[i - 1],
+            };
+            if let Layer::Residual { from } = node.layer {
+                assert!(from < i, "residual from later node");
+                assert_eq!(out[from], in_shape, "residual shape mismatch at node {i}");
+            }
+            out.push(node.layer.out_shape(in_shape));
+        }
+        out
+    }
+
+    /// Input shape of node `i`.
+    pub fn in_shape(&self, i: usize) -> Shape {
+        match self.nodes[i].input {
+            Some(j) => self.shapes()[j],
+            None if i == 0 => self.input,
+            None => self.shapes()[i - 1],
+        }
+    }
+
+    /// Total multiply-accumulates of one inference.
+    pub fn total_macs(&self) -> u64 {
+        let shapes = self.shapes();
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let s = match n.input {
+                    Some(j) => shapes[j],
+                    None if i == 0 => self.input,
+                    None => shapes[i - 1],
+                };
+                n.layer.macs(s)
+            })
+            .sum()
+    }
+
+    /// Total ops (paper convention: 1 MAC = 2 ops).
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+
+    /// Total weight parameter count (conv kernels only).
+    pub fn total_weights(&self) -> u64 {
+        let shapes = self.shapes();
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let (in_c, _, _) = match n.input {
+                    Some(j) => shapes[j],
+                    None if i == 0 => self.input,
+                    None => shapes[i - 1],
+                };
+                match n.layer {
+                    Layer::Conv { out_c, kh, kw, .. } => (out_c * in_c * kh * kw) as u64,
+                    _ => 0,
+                }
+            })
+            .sum()
+    }
+}
+
+/// Builder for sequential-with-branches networks.
+struct Builder {
+    nodes: Vec<Node>,
+}
+
+impl Builder {
+    fn new() -> Self {
+        Self { nodes: Vec::new() }
+    }
+
+    /// Push a node consuming the previous output; returns its index.
+    fn push(&mut self, layer: Layer) -> usize {
+        self.nodes.push(Node { layer, input: None });
+        self.nodes.len() - 1
+    }
+
+    /// Push a node with an explicit input; returns its index.
+    fn push_from(&mut self, layer: Layer, input: usize) -> usize {
+        self.nodes.push(Node { layer, input: Some(input) });
+        self.nodes.len() - 1
+    }
+
+    /// conv → BN → ReLU → quantize, returns the quantize node index.
+    fn conv_bn_relu(&mut self, out_c: usize, k: usize, stride: usize, pad: usize, bits: u8) -> usize {
+        self.push(Layer::Conv { out_c, kh: k, kw: k, stride, pad });
+        self.push(Layer::BatchNorm);
+        self.push(Layer::Relu);
+        self.push(Layer::Quantize { bits })
+    }
+}
+
+/// AlexNet with the paper's quantized inference pipeline
+/// (conv → BN → ReLU → quantize; FCs as full-kernel convs).
+pub fn alexnet(bits: u8) -> Network {
+    let mut b = Builder::new();
+    b.conv_bn_relu(96, 11, 4, 0, bits);
+    b.push(Layer::MaxPool { k: 3, stride: 2 });
+    b.conv_bn_relu(256, 5, 1, 2, bits);
+    b.push(Layer::MaxPool { k: 3, stride: 2 });
+    b.conv_bn_relu(384, 3, 1, 1, bits);
+    b.conv_bn_relu(384, 3, 1, 1, bits);
+    b.conv_bn_relu(256, 3, 1, 1, bits);
+    b.push(Layer::MaxPool { k: 3, stride: 2 });
+    // FC layers as convs over the remaining 6×6 spatial extent.
+    b.push(Layer::Conv { out_c: 4096, kh: 6, kw: 6, stride: 1, pad: 0 });
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    b.push(Layer::Conv { out_c: 4096, kh: 1, kw: 1, stride: 1, pad: 0 });
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    b.push(Layer::Conv { out_c: 1000, kh: 1, kw: 1, stride: 1, pad: 0 });
+    Network { name: "AlexNet".into(), input: (3, 227, 227), input_bits: bits, nodes: b.nodes }
+}
+
+/// VGG19 (16 convs + 3 FCs) with the quantized pipeline.
+pub fn vgg19(bits: u8) -> Network {
+    let mut b = Builder::new();
+    let blocks: [(usize, usize); 5] = [(64, 2), (128, 2), (256, 4), (512, 4), (512, 4)];
+    for (c, reps) in blocks {
+        for _ in 0..reps {
+            b.conv_bn_relu(c, 3, 1, 1, bits);
+        }
+        b.push(Layer::MaxPool { k: 2, stride: 2 });
+    }
+    b.push(Layer::Conv { out_c: 4096, kh: 7, kw: 7, stride: 1, pad: 0 });
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    b.push(Layer::Conv { out_c: 4096, kh: 1, kw: 1, stride: 1, pad: 0 });
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    b.push(Layer::Conv { out_c: 1000, kh: 1, kw: 1, stride: 1, pad: 0 });
+    Network { name: "VGG19".into(), input: (3, 224, 224), input_bits: bits, nodes: b.nodes }
+}
+
+/// ResNet50 with bottleneck blocks and projection shortcuts.
+pub fn resnet50(bits: u8) -> Network {
+    let mut b = Builder::new();
+    b.conv_bn_relu(64, 7, 2, 3, bits);
+    b.push(Layer::MaxPool { k: 3, stride: 2 });
+
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 256, 3), (128, 512, 4), (256, 1024, 6), (512, 2048, 3)];
+    let mut block_in = b.nodes.len() - 1; // index producing the stage input
+    for (si, (mid, out, reps)) in stages.into_iter().enumerate() {
+        for r in 0..reps {
+            let stride = if si > 0 && r == 0 { 2 } else { 1 };
+            // Main path: 1×1 (stride) → 3×3 → 1×1.
+            b.push_from(Layer::Conv { out_c: mid, kh: 1, kw: 1, stride, pad: 0 }, block_in);
+            b.push(Layer::BatchNorm);
+            b.push(Layer::Relu);
+            b.push(Layer::Quantize { bits });
+            b.conv_bn_relu(mid, 3, 1, 1, bits);
+            b.push(Layer::Conv { out_c: out, kh: 1, kw: 1, stride: 1, pad: 0 });
+            b.push(Layer::BatchNorm);
+            let main_end = b.push(Layer::Quantize { bits });
+            // Shortcut: projection on the first block of a stage,
+            // identity otherwise.
+            let skip = if r == 0 {
+                let _proj = b.push_from(
+                    Layer::Conv { out_c: out, kh: 1, kw: 1, stride, pad: 0 },
+                    block_in,
+                );
+                b.push(Layer::BatchNorm);
+                b.push(Layer::Quantize { bits })
+            } else {
+                block_in
+            };
+            // Merge: residual add + ReLU + requantize.
+            let merged = b.push_from(Layer::Residual { from: skip }, main_end);
+            b.push(Layer::Relu);
+            block_in = b.push(Layer::Quantize { bits });
+            let _ = merged;
+        }
+    }
+    b.push(Layer::AvgPool { k: 7, stride: 7 });
+    b.push(Layer::Conv { out_c: 1000, kh: 1, kw: 1, stride: 1, pad: 0 });
+    Network { name: "ResNet50".into(), input: (3, 224, 224), input_bits: bits, nodes: b.nodes }
+}
+
+/// Small CNN for the bit-exact functional path (fits one mat: every
+/// feature map ≤ 128 columns wide).
+pub fn small_cnn(bits: u8) -> Network {
+    let mut b = Builder::new();
+    b.push(Layer::Conv { out_c: 4, kh: 3, kw: 3, stride: 1, pad: 0 });
+    b.push(Layer::BatchNorm);
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    b.push(Layer::MaxPool { k: 2, stride: 2 });
+    b.push(Layer::Conv { out_c: 6, kh: 3, kw: 3, stride: 1, pad: 0 });
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    b.push(Layer::AvgPool { k: 3, stride: 3 });
+    Network { name: "SmallCNN".into(), input: (2, 14, 22), input_bits: bits, nodes: b.nodes }
+}
+
+/// Small residual network for the bit-exact functional path: one
+/// padded conv stage plus a ResNet-style block (main path + identity
+/// skip + residual add), exercising `Residual` and padding in the
+/// functional engine.
+pub fn small_resnet(bits: u8) -> Network {
+    let mut b = Builder::new();
+    // Stem: padded 3×3 conv keeps 12×18.
+    b.push(Layer::Conv { out_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 });
+    b.push(Layer::Relu);
+    let stem = b.push(Layer::Quantize { bits });
+    // Main path: two padded convs preserving shape.
+    b.push_from(Layer::Conv { out_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 }, stem);
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    b.push(Layer::Conv { out_c: 4, kh: 1, kw: 1, stride: 1, pad: 0 });
+    let main_end = b.push(Layer::Quantize { bits });
+    // Merge with the identity skip.
+    let merged = b.push_from(Layer::Residual { from: stem }, main_end);
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    let _ = merged;
+    b.push(Layer::AvgPool { k: 2, stride: 2 });
+    Network { name: "SmallResNet".into(), input: (2, 12, 18), input_bits: bits, nodes: b.nodes }
+}
+
+/// Single-conv micro network (kernel tests / quickstart).
+pub fn micro_cnn(bits: u8) -> Network {
+    let mut b = Builder::new();
+    b.push(Layer::Conv { out_c: 2, kh: 2, kw: 2, stride: 1, pad: 0 });
+    b.push(Layer::Quantize { bits });
+    Network { name: "MicroCNN".into(), input: (1, 4, 6), input_bits: bits, nodes: b.nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_macs_in_known_range() {
+        let n = alexnet(8);
+        let macs = n.total_macs();
+        // AlexNet ≈ 0.7–1.2 GMACs depending on FC handling.
+        assert!(macs > 600e6 as u64 && macs < 1500e6 as u64, "{macs}");
+        assert_eq!(n.shapes().last().unwrap(), &(1000, 1, 1));
+    }
+
+    #[test]
+    fn vgg19_macs_in_known_range() {
+        let n = vgg19(8);
+        let macs = n.total_macs();
+        // VGG19 ≈ 19.6 GMACs.
+        assert!(macs > 18e9 as u64 && macs < 21e9 as u64, "{macs}");
+        assert_eq!(n.shapes().last().unwrap(), &(1000, 1, 1));
+    }
+
+    #[test]
+    fn resnet50_macs_in_known_range() {
+        let n = resnet50(8);
+        let macs = n.total_macs();
+        // ResNet50 ≈ 3.8–4.1 GMACs.
+        assert!(macs > 3.4e9 as u64 && macs < 4.6e9 as u64, "{macs}");
+        assert_eq!(n.shapes().last().unwrap(), &(1000, 1, 1));
+    }
+
+    #[test]
+    fn resnet50_shapes_are_consistent() {
+        // shapes() asserts residual shape agreement internally.
+        let n = resnet50(8);
+        let shapes = n.shapes();
+        // Unpadded 3/2 max-pool gives 55×55 (vs. 56×56 with pad=1 in the
+        // torchvision variant) — stage extents follow from there.
+        assert!(shapes.contains(&(256, 55, 55)));
+        assert!(shapes.contains(&(512, 28, 28)));
+        assert!(shapes.contains(&(1024, 14, 14)));
+        assert!(shapes.contains(&(2048, 7, 7)));
+    }
+
+    #[test]
+    fn small_cnn_fits_subarray_width() {
+        let n = small_cnn(4);
+        for (c, _h, w) in n.shapes() {
+            assert!(w <= 128, "width {w} exceeds subarray columns");
+            assert!(c <= 16);
+        }
+    }
+
+    #[test]
+    fn weights_counted() {
+        let n = micro_cnn(4);
+        assert_eq!(n.total_weights(), 2 * 1 * 2 * 2);
+    }
+}

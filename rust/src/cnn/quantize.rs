@@ -1,0 +1,187 @@
+//! Quantization (Eq. 2) and batch normalisation (Eq. 3) in the
+//! fixed-point form the accelerator executes.
+//!
+//! The paper evaluates both transformations in-memory as an addition plus
+//! a multiplication by a *precomputed* factor. We mirror that: the float
+//! parameters are folded offline into integer `(mul, add, shift)`
+//! triples, and the online op is exactly
+//!
+//! ```text
+//! y = clamp((x · mul + add) >> shift, 0, 2^bits − 1)
+//! ```
+//!
+//! which all three implementations (Rust golden, PIM simulator, JAX
+//! model) perform identically, guaranteeing bit-exact agreement.
+
+
+/// Fixed-point quantization parameters (Eq. 2 folded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantParams {
+    /// Multiplier.
+    pub mul: u32,
+    /// Pre-shift additive term (also absorbs −Q_min·scale and rounding).
+    pub add: i64,
+    /// Right-shift amount.
+    pub shift: u8,
+    /// Output bit-width `k`.
+    pub bits: u8,
+}
+
+impl QuantParams {
+    /// Fold the float Eq. 2 transform
+    /// `Q_o = round((Q_i − Q_min) · (2^k − 1)/(Q_max − Q_min))`
+    /// into fixed point with `shift`-bit precision.
+    pub fn fold(q_min: f64, q_max: f64, bits: u8, shift: u8) -> Self {
+        assert!(q_max > q_min);
+        let scale = ((1u64 << bits) - 1) as f64 / (q_max - q_min);
+        let mul = (scale * (1u64 << shift) as f64).round() as u32;
+        // add = −Q_min·scale·2^shift + rounding-half.
+        let add = (-q_min * scale * (1u64 << shift) as f64).round() as i64
+            + (1i64 << shift) / 2;
+        Self { mul, add, shift, bits }
+    }
+
+    /// Identity-ish requantization: divide by `2^shift` with rounding
+    /// (used to bring wide conv accumulators back to `bits` width).
+    pub fn rescale(shift: u8, bits: u8) -> Self {
+        Self { mul: 1, add: (1i64 << shift) / 2, shift, bits }
+    }
+
+    /// Apply to one value (saturating).
+    #[inline]
+    pub fn apply(&self, x: i64) -> u32 {
+        let max = ((1u64 << self.bits) - 1) as i64;
+        let y = (x * self.mul as i64 + self.add) >> self.shift;
+        y.clamp(0, max) as u32
+    }
+}
+
+/// Per-channel fixed-point batch-norm parameters (Eq. 3 folded):
+/// `y = (x · mul + add) >> shift`, where `mul` encodes `γ/√(σ²+ε)` and
+/// `add` encodes `β − μγ/√(σ²+ε)` in the same fixed point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BnParams {
+    /// Per-channel multiplier.
+    pub mul: Vec<u32>,
+    /// Per-channel additive term.
+    pub add: Vec<i64>,
+    /// Shared right-shift.
+    pub shift: u8,
+}
+
+impl BnParams {
+    /// Fold float BN statistics into fixed point.
+    ///
+    /// # Panics
+    /// If the per-channel slices disagree in length.
+    pub fn fold(gamma: &[f64], beta: &[f64], mu: &[f64], sigma2: &[f64], shift: u8) -> Self {
+        assert!(gamma.len() == beta.len() && beta.len() == mu.len() && mu.len() == sigma2.len());
+        const EPS: f64 = 1e-5;
+        let one = (1u64 << shift) as f64;
+        let mut mul = Vec::with_capacity(gamma.len());
+        let mut add = Vec::with_capacity(gamma.len());
+        for i in 0..gamma.len() {
+            let inv_std = gamma[i] / (sigma2[i] + EPS).sqrt();
+            assert!(inv_std >= 0.0, "negative BN scale needs signed datapath");
+            mul.push((inv_std * one).round() as u32);
+            add.push(((beta[i] - mu[i] * inv_std) * one).round() as i64 + (1i64 << shift) / 2);
+        }
+        Self { mul, add, shift }
+    }
+
+    /// Identity BN for `c` channels (testing / pass-through).
+    pub fn identity(c: usize, shift: u8) -> Self {
+        Self {
+            mul: vec![1u32 << shift; c],
+            add: vec![(1i64 << shift) / 2; c],
+            shift,
+        }
+    }
+
+    /// Apply to one value of channel `c`, clamping at 0 (the datapath is
+    /// unsigned; a following ReLU would clamp anyway).
+    #[inline]
+    pub fn apply(&self, c: usize, x: i64) -> i64 {
+        ((x * self.mul[c] as i64 + self.add[c]) >> self.shift).max(0)
+    }
+
+    /// Number of channels.
+    pub fn channels(&self) -> usize {
+        self.mul.len()
+    }
+}
+
+/// ReLU on the signless datapath: negatives cannot be represented, so the
+/// hardware realises ReLU by checking the *sign bit of the pre-BN
+/// accumulator* (paper §4.2: "the MSB of the input is read out first and
+/// used to determine whether to write zero"). On the integer path it is
+/// simply a max with zero.
+#[inline]
+pub fn relu(x: i64) -> i64 {
+    x.max(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_matches_float_reference() {
+        let p = QuantParams::fold(0.0, 255.0, 8, 16);
+        for x in [0i64, 1, 17, 128, 200, 255] {
+            let float_ref = ((x as f64 - 0.0) * 255.0 / 255.0).round() as u32;
+            assert_eq!(p.apply(x), float_ref, "x={x}");
+        }
+    }
+
+    #[test]
+    fn quant_range_mapping() {
+        // Map [10, 522] → 4 bits.
+        let p = QuantParams::fold(10.0, 522.0, 4, 16);
+        assert_eq!(p.apply(10), 0);
+        assert_eq!(p.apply(522), 15);
+        let mid = p.apply(266);
+        assert!(mid >= 7 && mid <= 8, "midpoint → ~7.5, got {mid}");
+    }
+
+    #[test]
+    fn quant_saturates() {
+        let p = QuantParams::fold(0.0, 100.0, 4, 16);
+        assert_eq!(p.apply(-50), 0);
+        assert_eq!(p.apply(1000), 15);
+    }
+
+    #[test]
+    fn rescale_rounds() {
+        let p = QuantParams::rescale(4, 8);
+        assert_eq!(p.apply(16), 1);
+        assert_eq!(p.apply(23), 1); // 23/16 = 1.4375 → 1
+        assert_eq!(p.apply(24), 2); // 1.5 → 2
+    }
+
+    #[test]
+    fn bn_identity_is_identity() {
+        let bn = BnParams::identity(3, 8);
+        for x in [0i64, 5, 100, 4096] {
+            for c in 0..3 {
+                assert_eq!(bn.apply(c, x), x);
+            }
+        }
+    }
+
+    #[test]
+    fn bn_fold_matches_float() {
+        let bn = BnParams::fold(&[2.0], &[3.0], &[10.0], &[4.0 - 1e-5], 16);
+        // y = (x − 10)/2 · 2 + 3 = x − 10 + 3 = x − 7.
+        for x in [7i64, 10, 100] {
+            let expect = (x - 7).max(0);
+            assert_eq!(bn.apply(0, x), expect, "x={x}");
+        }
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        assert_eq!(relu(-5), 0);
+        assert_eq!(relu(5), 5);
+    }
+}

@@ -1,0 +1,356 @@
+//! Pure-Rust golden executor: the integer-exact reference every other
+//! implementation (PIM simulator, JAX/Pallas artifact) must match
+//! bit-for-bit.
+
+use crate::util::Rng;
+
+use super::layer::{Layer, Shape};
+use super::network::Network;
+use super::quantize::{relu, BnParams, QuantParams};
+use super::tensor::{Kernel4, QTensor};
+
+/// Wide-accumulator tensor used between quantization points.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WideTensor {
+    /// Channels.
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    /// CHW data.
+    pub data: Vec<i64>,
+}
+
+impl WideTensor {
+    /// Zero tensor.
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w, data: vec![0; c * h * w] }
+    }
+
+    /// Value at (c, y, x).
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> i64 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Mutable value at (c, y, x).
+    #[inline]
+    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut i64 {
+        &mut self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Lift a quantized tensor.
+    pub fn from_q(t: &QTensor) -> Self {
+        Self { c: t.c, h: t.h, w: t.w, data: t.data().iter().map(|&v| v as i64).collect() }
+    }
+
+    /// Lower to a quantized tensor.
+    ///
+    /// # Panics
+    /// If any value is outside the `bits` range.
+    pub fn to_q(&self, bits: u8) -> QTensor {
+        let data = self
+            .data
+            .iter()
+            .map(|&v| {
+                assert!(v >= 0 && v <= QTensor::max_value(bits) as i64, "value {v} out of range");
+                v as u32
+            })
+            .collect();
+        QTensor::from_vec(self.c, self.h, self.w, bits, data)
+    }
+}
+
+/// Fixed-point average-pool scale: `avg = (sum · mul + 2^(shift−1)) >> shift`
+/// with `mul = round(2^shift / k²)`. Shared by all implementations.
+pub fn avg_pool_scale(k: usize) -> (u32, u8) {
+    const SHIFT: u8 = 16;
+    let mul = ((1u64 << SHIFT) as f64 / (k * k) as f64).round() as u32;
+    (mul, SHIFT)
+}
+
+/// Concrete parameters for every parameterised node of a network,
+/// index-aligned by node kind occurrence order.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    /// One kernel per `Conv` node, in node order.
+    pub conv_weights: Vec<Kernel4>,
+    /// One set per `BatchNorm` node, in node order.
+    pub bn: Vec<BnParams>,
+    /// One set per `Quantize` node, in node order.
+    pub quant: Vec<QuantParams>,
+}
+
+impl ModelParams {
+    /// Deterministic pseudo-random parameters: random `w_bits` weights,
+    /// near-identity BN, and rescaling quantizers sized to keep values in
+    /// range — a stand-in for trained weights (throughput/energy depend
+    /// on shapes, not values; see DESIGN.md §2).
+    pub fn random(net: &Network, w_bits: u8, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let shapes = net.shapes();
+        let mut conv_weights = Vec::new();
+        let mut bn = Vec::new();
+        let mut quant = Vec::new();
+        for (i, node) in net.nodes.iter().enumerate() {
+            let in_shape: Shape = match node.input {
+                Some(j) => shapes[j],
+                None if i == 0 => net.input,
+                None => shapes[i - 1],
+            };
+            match node.layer {
+                Layer::Conv { out_c, kh, kw, .. } => {
+                    conv_weights.push(Kernel4::random(
+                        out_c,
+                        in_shape.0,
+                        kh,
+                        kw,
+                        w_bits,
+                        rng.gen_seed(),
+                    ));
+                }
+                Layer::BatchNorm => {
+                    let (c, _, _) = shapes[i];
+                    bn.push(BnParams::identity(c, 8));
+                }
+                Layer::Quantize { bits } => {
+                    // Rescale so a typical accumulator fits `bits`:
+                    // divide by 2^s where s ≈ log2(max_acc / max_out).
+                    let macs_bits = {
+                        let prev = &net.nodes[..i];
+                        let last_conv = prev.iter().rev().find_map(|n| match n.layer {
+                            Layer::Conv { kh, kw, .. } => Some((kh * kw) as u32),
+                            _ => None,
+                        });
+                        let fan_in = last_conv.unwrap_or(1) * in_shape.0.max(1) as u32;
+                        32 - fan_in.leading_zeros()
+                    };
+                    let in_bits = net.input_bits as u32 + w_bits as u32;
+                    // Random uniform values average half the max, so the
+                    // accumulator typically needs ~2 fewer bits than the
+                    // worst case; keep a margin of 2.
+                    let s = (in_bits + macs_bits)
+                        .saturating_sub(bits as u32 + 2)
+                        .min(40) as u8;
+                    quant.push(QuantParams::rescale(s, bits));
+                }
+                _ => {}
+            }
+        }
+        Self { conv_weights, bn, quant }
+    }
+}
+
+/// Execute `net` on `input`, returning every node's output (wide form).
+///
+/// # Panics
+/// On IR inconsistencies (shape mismatches, missing params).
+pub fn execute(net: &Network, params: &ModelParams, input: &QTensor) -> Vec<WideTensor> {
+    assert_eq!((input.c, input.h, input.w), net.input, "input shape mismatch");
+    let mut outs: Vec<WideTensor> = Vec::with_capacity(net.nodes.len());
+    let input_wide = WideTensor::from_q(input);
+    let (mut ci, mut bi, mut qi) = (0usize, 0usize, 0usize);
+
+    for (i, node) in net.nodes.iter().enumerate() {
+        let src: &WideTensor = match node.input {
+            Some(j) => &outs[j],
+            None if i == 0 => &input_wide,
+            None => &outs[i - 1],
+        };
+        let out = match node.layer {
+            Layer::Conv { out_c, kh, kw, stride, pad } => {
+                let k = &params.conv_weights[ci];
+                ci += 1;
+                assert_eq!((k.oc, k.ic, k.kh, k.kw), (out_c, src.c, kh, kw));
+                conv2d(src, k, stride, pad)
+            }
+            Layer::MaxPool { k, stride } => max_pool(src, k, stride),
+            Layer::AvgPool { k, stride } => avg_pool(src, k, stride),
+            Layer::BatchNorm => {
+                let p = &params.bn[bi];
+                bi += 1;
+                batch_norm(src, p)
+            }
+            Layer::Relu => map(src, relu),
+            Layer::Quantize { .. } => {
+                let p = params.quant[qi];
+                qi += 1;
+                map(src, move |v| p.apply(v) as i64)
+            }
+            Layer::Residual { from } => residual(src, &outs[from]),
+        };
+        outs.push(out);
+    }
+    outs
+}
+
+/// Final output of [`execute`] as a quantized tensor.
+pub fn output_q(net: &Network, outs: &[WideTensor], bits: u8) -> QTensor {
+    let _ = net;
+    outs.last().expect("empty network").to_q(bits)
+}
+
+fn conv2d(x: &WideTensor, k: &Kernel4, stride: usize, pad: usize) -> WideTensor {
+    let oh = (x.h + 2 * pad - k.kh) / stride + 1;
+    let ow = (x.w + 2 * pad - k.kw) / stride + 1;
+    let mut y = WideTensor::zeros(k.oc, oh, ow);
+    for oc in 0..k.oc {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i64;
+                for ic in 0..k.ic {
+                    for ky in 0..k.kh {
+                        for kx in 0..k.kw {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if iy < 0 || ix < 0 || iy >= x.h as isize || ix >= x.w as isize {
+                                continue;
+                            }
+                            acc += x.at(ic, iy as usize, ix as usize)
+                                * k.at(oc, ic, ky, kx) as i64;
+                        }
+                    }
+                }
+                *y.at_mut(oc, oy, ox) = acc;
+            }
+        }
+    }
+    y
+}
+
+fn max_pool(x: &WideTensor, k: usize, stride: usize) -> WideTensor {
+    let oh = (x.h - k) / stride + 1;
+    let ow = (x.w - k) / stride + 1;
+    let mut y = WideTensor::zeros(x.c, oh, ow);
+    for c in 0..x.c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = i64::MIN;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        m = m.max(x.at(c, oy * stride + dy, ox * stride + dx));
+                    }
+                }
+                *y.at_mut(c, oy, ox) = m;
+            }
+        }
+    }
+    y
+}
+
+fn avg_pool(x: &WideTensor, k: usize, stride: usize) -> WideTensor {
+    let (mul, shift) = avg_pool_scale(k);
+    let oh = (x.h - k) / stride + 1;
+    let ow = (x.w - k) / stride + 1;
+    let mut y = WideTensor::zeros(x.c, oh, ow);
+    for c in 0..x.c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut s = 0i64;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        s += x.at(c, oy * stride + dy, ox * stride + dx);
+                    }
+                }
+                *y.at_mut(c, oy, ox) = (s * mul as i64 + (1i64 << (shift - 1))) >> shift;
+            }
+        }
+    }
+    y
+}
+
+fn batch_norm(x: &WideTensor, p: &BnParams) -> WideTensor {
+    assert_eq!(p.channels(), x.c);
+    let mut y = WideTensor::zeros(x.c, x.h, x.w);
+    for c in 0..x.c {
+        for i in 0..x.h * x.w {
+            y.data[c * x.h * x.w + i] = p.apply(c, x.data[c * x.h * x.w + i]);
+        }
+    }
+    y
+}
+
+fn map(x: &WideTensor, f: impl Fn(i64) -> i64) -> WideTensor {
+    WideTensor { c: x.c, h: x.h, w: x.w, data: x.data.iter().map(|&v| f(v)).collect() }
+}
+
+fn residual(a: &WideTensor, b: &WideTensor) -> WideTensor {
+    assert_eq!((a.c, a.h, a.w), (b.c, b.h, b.w), "residual shape mismatch");
+    WideTensor {
+        c: a.c,
+        h: a.h,
+        w: a.w,
+        data: a.data.iter().zip(&b.data).map(|(&x, &y)| x + y).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::network::{micro_cnn, small_cnn};
+
+    #[test]
+    fn conv2d_hand_checked() {
+        // 1×2×2 input [[1,2],[3,4]], single 2×2 kernel [[1,0],[0,1]] → 1+4.
+        let x = WideTensor { c: 1, h: 2, w: 2, data: vec![1, 2, 3, 4] };
+        let k = Kernel4::from_vec(1, 1, 2, 2, 2, vec![1, 0, 0, 1]);
+        let y = conv2d(&x, &k, 1, 0);
+        assert_eq!(y.data, vec![5]);
+    }
+
+    #[test]
+    fn conv2d_padding() {
+        let x = WideTensor { c: 1, h: 2, w: 2, data: vec![1, 2, 3, 4] };
+        let k = Kernel4::from_vec(1, 1, 3, 3, 1, vec![0, 0, 0, 0, 1, 0, 0, 0, 0]);
+        let y = conv2d(&x, &k, 1, 1);
+        assert_eq!((y.h, y.w), (2, 2));
+        assert_eq!(y.data, vec![1, 2, 3, 4], "identity kernel with pad 1");
+    }
+
+    #[test]
+    fn pooling_hand_checked() {
+        let x = WideTensor { c: 1, h: 2, w: 4, data: vec![1, 5, 2, 0, 3, 1, 8, 2] };
+        let y = max_pool(&x, 2, 2);
+        assert_eq!(y.data, vec![5, 8]);
+        let a = avg_pool(&x, 2, 2);
+        // (1+5+3+1)/4 = 2.5 → 3 (round half up); (2+0+8+2)/4 = 3.
+        assert_eq!(a.data, vec![3, 3]);
+    }
+
+    #[test]
+    fn avg_pool_scale_is_exact_for_powers_of_two() {
+        let (mul, shift) = avg_pool_scale(2);
+        assert_eq!(mul as u64, 1u64 << (shift - 2));
+    }
+
+    #[test]
+    fn micro_network_runs() {
+        let net = micro_cnn(4);
+        let params = ModelParams::random(&net, 4, 1);
+        let input = QTensor::random(1, 4, 6, 4, 2);
+        let outs = execute(&net, &params, &input);
+        assert_eq!(outs.len(), net.nodes.len());
+        let last = outs.last().unwrap();
+        assert_eq!((last.c, last.h, last.w), (2, 3, 5));
+        // Quantized output within 4 bits.
+        assert!(last.data.iter().all(|&v| v >= 0 && v < 16));
+    }
+
+    #[test]
+    fn small_cnn_runs_and_is_deterministic() {
+        let net = small_cnn(4);
+        let params = ModelParams::random(&net, 4, 7);
+        let input = QTensor::random(2, 14, 22, 4, 3);
+        let a = execute(&net, &params, &input);
+        let b = execute(&net, &params, &input);
+        assert_eq!(a.last(), b.last());
+    }
+
+    #[test]
+    fn residual_adds() {
+        let a = WideTensor { c: 1, h: 1, w: 3, data: vec![1, 2, 3] };
+        let b = WideTensor { c: 1, h: 1, w: 3, data: vec![10, 20, 30] };
+        assert_eq!(residual(&a, &b).data, vec![11, 22, 33]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Quantized integer tensors and bit-plane decomposition.
+//!
+//! The PIM dataflow operates on *bit-planes*: an M-bit feature map is M
+//! 1-bit matrices stored in M subarrays; an N-bit weight tensor is N
+//! 1-bit matrices broadcast to the subarray buffers (paper §4.1).
+
+use crate::util::Rng;
+
+/// A quantized activation tensor in CHW layout, unsigned `bits`-bit
+/// values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QTensor {
+    /// Channels.
+    pub c: usize,
+    /// Height.
+    pub h: usize,
+    /// Width.
+    pub w: usize,
+    /// Value bit-width.
+    pub bits: u8,
+    data: Vec<u32>,
+}
+
+impl QTensor {
+    /// Zero tensor.
+    pub fn zeros(c: usize, h: usize, w: usize, bits: u8) -> Self {
+        assert!(bits >= 1 && bits <= 16);
+        Self { c, h, w, bits, data: vec![0; c * h * w] }
+    }
+
+    /// Build from raw CHW data.
+    ///
+    /// # Panics
+    /// If the length mismatches or any value overflows `bits`.
+    pub fn from_vec(c: usize, h: usize, w: usize, bits: u8, data: Vec<u32>) -> Self {
+        assert_eq!(data.len(), c * h * w);
+        let max = Self::max_value(bits);
+        assert!(data.iter().all(|&v| v <= max), "value exceeds {bits}-bit range");
+        Self { c, h, w, bits, data }
+    }
+
+    /// Pseudo-random tensor (deterministic per seed) — synthetic workload.
+    pub fn random(c: usize, h: usize, w: usize, bits: u8, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let max = Self::max_value(bits);
+        let data = (0..c * h * w).map(|_| rng.gen_range_inclusive(max)).collect();
+        Self { c, h, w, bits, data }
+    }
+
+    /// Largest representable value for a bit-width.
+    #[inline]
+    pub fn max_value(bits: u8) -> u32 {
+        if bits >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << bits) - 1
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Value at (c, y, x).
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> u32 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Mutable value at (c, y, x).
+    #[inline]
+    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut u32 {
+        &mut self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Raw CHW slice.
+    pub fn data(&self) -> &[u32] {
+        &self.data
+    }
+
+    /// Bit-plane `n` of channel `c` as H rows of W bools:
+    /// `plane[y][x] = bit n of self[c][y][x]`.
+    pub fn bitplane(&self, c: usize, n: u8) -> Vec<Vec<bool>> {
+        (0..self.h)
+            .map(|y| (0..self.w).map(|x| (self.at(c, y, x) >> n) & 1 == 1).collect())
+            .collect()
+    }
+
+    /// Bit-plane rows packed as u128 words (bit x = column x), ready for
+    /// subarray storage. `w` must be ≤ 128.
+    pub fn bitplane_rows(&self, c: usize, n: u8) -> Vec<u128> {
+        assert!(self.w <= 128);
+        (0..self.h)
+            .map(|y| {
+                let mut word = 0u128;
+                for x in 0..self.w {
+                    if (self.at(c, y, x) >> n) & 1 == 1 {
+                        word |= 1 << x;
+                    }
+                }
+                word
+            })
+            .collect()
+    }
+}
+
+/// A quantized convolution kernel in OIHW layout, unsigned `bits`-bit
+/// values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Kernel4 {
+    /// Output channels.
+    pub oc: usize,
+    /// Input channels.
+    pub ic: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Value bit-width.
+    pub bits: u8,
+    data: Vec<u32>,
+}
+
+impl Kernel4 {
+    /// Zero kernel.
+    pub fn zeros(oc: usize, ic: usize, kh: usize, kw: usize, bits: u8) -> Self {
+        Self { oc, ic, kh, kw, bits, data: vec![0; oc * ic * kh * kw] }
+    }
+
+    /// Build from raw OIHW data.
+    pub fn from_vec(oc: usize, ic: usize, kh: usize, kw: usize, bits: u8, data: Vec<u32>) -> Self {
+        assert_eq!(data.len(), oc * ic * kh * kw);
+        let max = QTensor::max_value(bits);
+        assert!(data.iter().all(|&v| v <= max));
+        Self { oc, ic, kh, kw, bits, data }
+    }
+
+    /// Pseudo-random kernel (deterministic per seed).
+    pub fn random(oc: usize, ic: usize, kh: usize, kw: usize, bits: u8, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let max = QTensor::max_value(bits);
+        let data = (0..oc * ic * kh * kw).map(|_| rng.gen_range_inclusive(max)).collect();
+        Self { oc, ic, kh, kw, bits, data }
+    }
+
+    /// Value at (oc, ic, ky, kx).
+    #[inline]
+    pub fn at(&self, oc: usize, ic: usize, ky: usize, kx: usize) -> u32 {
+        self.data[((oc * self.ic + ic) * self.kh + ky) * self.kw + kx]
+    }
+
+    /// Raw OIHW slice.
+    pub fn data(&self) -> &[u32] {
+        &self.data
+    }
+
+    /// Bit-plane `m` of filter (oc, ic) as a row-major bool vec
+    /// (kh × kw) — the 1-bit weight matrix broadcast to a subarray buffer.
+    pub fn bitplane(&self, oc: usize, ic: usize, m: u8) -> Vec<bool> {
+        let mut bits = Vec::with_capacity(self.kh * self.kw);
+        for ky in 0..self.kh {
+            for kx in 0..self.kw {
+                bits.push((self.at(oc, ic, ky, kx) >> m) & 1 == 1);
+            }
+        }
+        bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitplanes_reconstruct_values() {
+        let t = QTensor::random(2, 4, 6, 8, 42);
+        for c in 0..2 {
+            for y in 0..4 {
+                for x in 0..6 {
+                    let mut v = 0u32;
+                    for n in 0..8 {
+                        if t.bitplane(c, n)[y][x] {
+                            v |= 1 << n;
+                        }
+                    }
+                    assert_eq!(v, t.at(c, y, x));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitplane_rows_match_bitplane() {
+        let t = QTensor::random(1, 5, 120, 4, 7);
+        for n in 0..4 {
+            let rows = t.bitplane_rows(0, n);
+            let plane = t.bitplane(0, n);
+            for (y, row) in rows.iter().enumerate() {
+                for x in 0..120 {
+                    assert_eq!((row >> x) & 1 == 1, plane[y][x]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_respects_bit_range() {
+        let t = QTensor::random(3, 8, 8, 3, 1);
+        assert!(t.data().iter().all(|&v| v < 8));
+        let k = Kernel4::random(4, 3, 3, 3, 2, 2);
+        assert!(k.data().iter().all(|&v| v < 4));
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(QTensor::random(2, 3, 4, 8, 9), QTensor::random(2, 3, 4, 8, 9));
+        assert_ne!(QTensor::random(2, 3, 4, 8, 9), QTensor::random(2, 3, 4, 8, 10));
+    }
+
+    #[test]
+    fn kernel_bitplane_layout_is_row_major() {
+        let mut k = Kernel4::zeros(1, 1, 2, 3, 4);
+        // Set value 1 at (ky=1, kx=2).
+        k.data[1 * 3 + 2] = 1;
+        let plane = k.bitplane(0, 0, 0);
+        assert_eq!(plane, vec![false, false, false, false, false, true]);
+    }
+}

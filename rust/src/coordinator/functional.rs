@@ -1,0 +1,680 @@
+//! Bit-accurate functional execution of a quantized CNN on simulated
+//! NAND-SPIN subarrays.
+//!
+//! Every layer is executed with *real* subarray operations — erase,
+//! program, read, AND + bit-count, and the composed primitives of
+//! Figs. 8–11 — on real bit contents; results are read back from the
+//! arrays. The outputs must equal [`crate::cnn::ref_exec`] bit-for-bit
+//! (checked by integration tests and the `cnn_inference` example), while
+//! the accumulated [`Stats`] reflect the same op mix the analytic model
+//! counts.
+//!
+//! Scope: feature maps up to the subarray width (≤ 128 columns); the
+//! full-scale networks use the analytic path.
+
+use crate::arch::config::ArchConfig;
+use crate::arch::stats::{Phase, Stats};
+use crate::cnn::layer::Layer;
+use crate::cnn::network::Network;
+use crate::cnn::quantize::{BnParams, QuantParams};
+use crate::cnn::ref_exec::{avg_pool_scale, ModelParams, WideTensor};
+use crate::cnn::tensor::QTensor;
+use crate::subarray::conv::{bitplane_conv_counts, window_sums, BitKernel, ConvGeometry};
+use crate::subarray::primitives::{add_columns, compare_columns, multiply_columns, CompareScratch};
+use crate::subarray::Subarray;
+
+/// Bits reserved per accumulator operand slot (strip-aligned).
+const ACC_BITS: usize = 24;
+
+/// Bit width of a non-negative value.
+fn width_of(v: i64) -> usize {
+    debug_assert!(v >= 0);
+    (64 - (v as u64).leading_zeros()).max(1) as usize
+}
+
+/// Largest value in a tensor (≥ 0 datapath).
+fn tensor_width(t: &WideTensor) -> usize {
+    width_of(t.data.iter().copied().max().unwrap_or(0))
+}
+
+/// The functional engine.
+pub struct FunctionalEngine {
+    cfg: ArchConfig,
+    /// Accumulated cost statistics.
+    pub stats: Stats,
+}
+
+impl FunctionalEngine {
+    /// New engine for `cfg`.
+    pub fn new(cfg: ArchConfig) -> Self {
+        cfg.validate().expect("invalid config");
+        Self { cfg, stats: Stats::default() }
+    }
+
+    fn fresh_subarray(&self) -> Subarray {
+        Subarray::new(self.cfg.rows, self.cfg.cols, self.cfg.buffer_rows.max(16), self.cfg.costs)
+    }
+
+    /// Charge an inter-layer / off-chip transfer.
+    fn charge_transfer(&mut self, bits: u64, phase: Phase) {
+        let c = &self.cfg.costs;
+        let cycles = bits.div_ceil(self.cfg.bus_width_bits as u64);
+        let (e, per_bit) = match phase {
+            Phase::LoadData => (c.global_bus_energy_per_bit_fj, true),
+            _ => (c.bus_energy_per_bit_fj, true),
+        };
+        let _ = per_bit;
+        if phase == Phase::LoadData {
+            self.stats.ops.global_bus_bits += bits;
+        } else {
+            self.stats.ops.local_bus_bits += bits;
+        }
+        self.stats.record(phase, e * bits as f64, cycles as f64 * c.bus_cycle_ns);
+    }
+
+    /// Store `values` (non-negative, `bits` wide) vertically in `sub` at
+    /// rows `base..base+bits`, one value per column.
+    fn store_vertical(
+        &mut self,
+        sub: &mut Subarray,
+        base: usize,
+        bits: usize,
+        values: &[i64],
+        phase: Phase,
+    ) {
+        assert!(values.len() <= sub.cols());
+        for b in 0..bits {
+            let mut word = 0u128;
+            for (col, &v) in values.iter().enumerate() {
+                debug_assert!(v >= 0);
+                if (v >> b) & 1 == 1 {
+                    word |= 1 << col;
+                }
+            }
+            sub.write_row(base + b, word, &mut self.stats, phase);
+        }
+    }
+
+    /// Read back `cols` vertical values of `bits` bits at `base`.
+    fn load_vertical(
+        &mut self,
+        sub: &Subarray,
+        base: usize,
+        bits: usize,
+        cols: usize,
+        phase: Phase,
+    ) -> Vec<i64> {
+        let mut vals = vec![0i64; cols];
+        for b in 0..bits {
+            let row = sub.read_row(base + b, &mut self.stats, phase);
+            for (col, v) in vals.iter_mut().enumerate() {
+                *v |= (((row >> col) & 1) as i64) << b;
+            }
+        }
+        vals
+    }
+
+    /// Run `net` with `params` on `input`, returning all node outputs
+    /// (identical to [`crate::cnn::ref_exec::execute`]).
+    pub fn run(&mut self, net: &Network, params: &ModelParams, input: &QTensor) -> Vec<WideTensor> {
+        assert_eq!((input.c, input.h, input.w), net.input);
+        assert!(input.w <= self.cfg.cols, "feature map wider than subarray");
+        let input_wide = WideTensor::from_q(input);
+        // Off-chip load of the input image.
+        self.charge_transfer(
+            (input.c * input.h * input.w * input.bits as usize) as u64,
+            Phase::LoadData,
+        );
+        let mut outs: Vec<WideTensor> = Vec::with_capacity(net.nodes.len());
+        let (mut ci, mut bi, mut qi) = (0usize, 0usize, 0usize);
+        let mut act_bits = net.input_bits as usize;
+
+        for (i, node) in net.nodes.iter().enumerate() {
+            let src = match node.input {
+                Some(j) => outs[j].clone(),
+                None if i == 0 => input_wide.clone(),
+                None => outs[i - 1].clone(),
+            };
+            let out = match node.layer {
+                Layer::Conv { out_c, kh, kw, stride, pad } => {
+                    let k = params.conv_weights[ci].clone();
+                    ci += 1;
+                    let _ = out_c;
+                    let y = self.conv_layer(&src, act_bits, &k, kh, kw, stride, pad, i == 0);
+                    act_bits = tensor_width(&y);
+                    y
+                }
+                Layer::MaxPool { k, stride } => self.maxpool_layer(&src, act_bits, k, stride),
+                Layer::AvgPool { k, stride } => {
+                    let y = self.avgpool_layer(&src, act_bits, k, stride);
+                    act_bits = tensor_width(&y);
+                    y
+                }
+                Layer::BatchNorm => {
+                    let p = params.bn[bi].clone();
+                    bi += 1;
+                    let y = self.bn_layer(&src, act_bits, &p);
+                    act_bits = tensor_width(&y);
+                    y
+                }
+                Layer::Relu => {
+                    // Values are non-negative on the unsigned datapath;
+                    // charge the MSB-check pass (§4.2).
+                    let groups = ((src.c * src.h * src.w) as u64)
+                        .div_ceil(self.cfg.cols as u64);
+                    let c = self.cfg.costs;
+                    self.stats.ops.reads += groups;
+                    self.stats.record(
+                        Phase::Other,
+                        groups as f64 * self.cfg.cols as f64 * c.read_energy_per_bit_fj,
+                        groups as f64 * c.read_latency_ns,
+                    );
+                    src.clone()
+                }
+                Layer::Quantize { bits } => {
+                    let p = params.quant[qi];
+                    qi += 1;
+                    let y = self.quantize_layer(&src, act_bits, p);
+                    act_bits = bits as usize;
+                    y
+                }
+                Layer::Residual { from } => {
+                    let y = self.residual_layer(&src, &outs[from], act_bits);
+                    act_bits = tensor_width(&y);
+                    y
+                }
+            };
+            outs.push(out);
+        }
+        outs
+    }
+
+    // ================================================================
+    // Convolution (Fig. 8 + Eq. 1 + cross-writing accumulation)
+    // ================================================================
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv_layer(
+        &mut self,
+        x: &WideTensor,
+        ibits: usize,
+        k: &crate::cnn::tensor::Kernel4,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        first: bool,
+    ) -> WideTensor {
+        // Zero padding is free in NAND-SPIN: padded cells are simply
+        // left in the erased (AP = 0) state, so we materialise the
+        // padded bit-planes and store them directly.
+        let x = if pad == 0 {
+            x.clone()
+        } else {
+            let mut p = WideTensor::zeros(x.c, x.h + 2 * pad, x.w + 2 * pad);
+            for c in 0..x.c {
+                for y in 0..x.h {
+                    for xx in 0..x.w {
+                        *p.at_mut(c, y + pad, xx + pad) = x.at(c, y, xx);
+                    }
+                }
+            }
+            p
+        };
+        let x = &x;
+        let xq = x.to_q(ibits as u8);
+        let geo = ConvGeometry { in_h: x.h, in_w: x.w, stride };
+        let oh = geo.out_h(kh);
+        let ow = geo.out_w(kw);
+        let mbits = k.bits as usize;
+
+        // --- load every (channel, bit-plane) into its own subarray.
+        let phase = if first { Phase::LoadData } else { Phase::DataTransfer };
+        let mut planes: Vec<Vec<Subarray>> = Vec::with_capacity(x.c); // [ic][n]
+        for ic in 0..x.c {
+            let mut per_bit = Vec::with_capacity(ibits);
+            for n in 0..ibits {
+                let rows = xq.bitplane_rows(ic, n as u8);
+                let mut sub = self.fresh_subarray();
+                self.charge_transfer((x.h * x.w) as u64, phase);
+                // Whole-strip writes (8 rows at a time).
+                for (strip, chunk) in rows.chunks(8).enumerate() {
+                    let mut data = [0u128; 8];
+                    data[..chunk.len()].copy_from_slice(chunk);
+                    sub.write_strip(strip, &data, &mut self.stats, phase);
+                }
+                per_bit.push(sub);
+            }
+            planes.push(per_bit);
+        }
+
+        // --- weights arrive over the global bus once per layer.
+        self.charge_transfer((k.oc * k.ic * kh * kw * mbits) as u64, Phase::LoadData);
+
+        let mut y = WideTensor::zeros(k.oc, oh, ow);
+        // One accumulation subarray per output row, reused across filters.
+        let mut acc = ColumnAccumulator::new(self.fresh_subarray(), ow);
+
+        let count_bits = width_of((kh * kw) as i64) as u64;
+        for oc in 0..k.oc {
+            // One bit-plane convolution pass per (weight-plane, channel,
+            // input-plane); the per-row partials feed the accumulators.
+            let mut partials: Vec<(usize, Vec<Vec<u32>>)> = Vec::new();
+            for m in 0..mbits {
+                for ic in 0..x.c {
+                    let kernel = BitKernel::new(kh, kw, k.bitplane(oc, ic, m as u8));
+                    for n in 0..ibits {
+                        let sub = &mut planes[ic][n];
+                        let counts = bitplane_conv_counts(
+                            sub,
+                            0,
+                            geo,
+                            &kernel,
+                            &mut self.stats,
+                            Phase::Convolution,
+                        );
+                        let sums = window_sums(&counts, geo, &kernel);
+                        // In-mat transfer of the drained counts to the
+                        // accumulation subarray.
+                        self.charge_transfer((oh * ow) as u64 * count_bits, Phase::DataTransfer);
+                        partials.push((n + m, sums));
+                    }
+                }
+            }
+            for or in 0..oh {
+                acc.reset(&mut self.stats);
+                for (shift, sums) in &partials {
+                    acc.push(&sums[or], *shift, &mut self.stats);
+                }
+                let row_vals = acc.finish(&mut self.stats);
+                for ocx in 0..ow {
+                    *y.at_mut(oc, or, ocx) = row_vals[ocx] as i64;
+                }
+            }
+        }
+        y
+    }
+
+    // ================================================================
+    // Pooling
+    // ================================================================
+
+    fn maxpool_layer(&mut self, x: &WideTensor, bits: usize, k: usize, stride: usize) -> WideTensor {
+        let oh = (x.h - k) / stride + 1;
+        let ow = (x.w - k) / stride + 1;
+        let mut y = WideTensor::zeros(x.c, oh, ow);
+        let cols = self.cfg.cols;
+        let b = bits.max(1);
+        // Row layout: A (current max) at 0.., B (candidate) at b..,
+        // tag/result in the first strip after the operands.
+        let scratch_strip = (2 * b).div_ceil(8);
+        let scratch = CompareScratch {
+            tag_row: scratch_strip * 8,
+            result_row: scratch_strip * 8 + 1,
+            buf_tag: 0,
+            buf_diff: 1,
+        };
+
+        for c in 0..x.c {
+            // Batch output positions into column groups.
+            let positions: Vec<(usize, usize)> =
+                (0..oh).flat_map(|r| (0..ow).map(move |q| (r, q))).collect();
+            for batch in positions.chunks(cols) {
+                let mut sub = self.fresh_subarray();
+                // Window element (0,0) seeds the running max.
+                let seed: Vec<i64> = batch
+                    .iter()
+                    .map(|&(r, q)| x.at(c, r * stride, q * stride))
+                    .collect();
+                self.charge_transfer((seed.len() * b) as u64, Phase::DataTransfer);
+                self.store_vertical(&mut sub, 0, b, &seed, Phase::Pooling);
+                let mut cur = seed;
+                for idx in 1..k * k {
+                    let (dy, dx) = (idx / k, idx % k);
+                    let cand: Vec<i64> = batch
+                        .iter()
+                        .map(|&(r, q)| x.at(c, r * stride + dy, q * stride + dx))
+                        .collect();
+                    self.charge_transfer((cand.len() * b) as u64, Phase::DataTransfer);
+                    self.store_vertical(&mut sub, b, b, &cand, Phase::Pooling);
+                    // result bit = 1 ⇔ candidate > current max.
+                    let result = compare_columns(
+                        &mut sub,
+                        b,
+                        0,
+                        b,
+                        scratch,
+                        &mut self.stats,
+                        Phase::Pooling,
+                    );
+                    // Masked select copy back into A (read both, rewrite).
+                    for bit in 0..b {
+                        let a_row = sub.read_row(bit, &mut self.stats, Phase::Pooling);
+                        let b_row = sub.read_row(b + bit, &mut self.stats, Phase::Pooling);
+                        let merged = (b_row & result) | (a_row & !result);
+                        sub.write_row(bit, merged, &mut self.stats, Phase::Pooling);
+                    }
+                    for (j, cv) in cand.iter().enumerate() {
+                        if (result >> j) & 1 == 1 {
+                            cur[j] = *cv;
+                        }
+                    }
+                }
+                // Read the winners back out.
+                let vals = self.load_vertical(&sub, 0, b, batch.len(), Phase::Pooling);
+                debug_assert_eq!(vals, cur, "in-array max must match tracked max");
+                for (&(r, q), v) in batch.iter().zip(&vals) {
+                    *y.at_mut(c, r, q) = *v;
+                }
+            }
+        }
+        y
+    }
+
+    fn avgpool_layer(&mut self, x: &WideTensor, bits: usize, k: usize, stride: usize) -> WideTensor {
+        let (mul, shift) = avg_pool_scale(k);
+        let oh = (x.h - k) / stride + 1;
+        let ow = (x.w - k) / stride + 1;
+        let mut y = WideTensor::zeros(x.c, oh, ow);
+        let cols = self.cfg.cols;
+        let b = bits.max(1);
+
+        for c in 0..x.c {
+            let positions: Vec<(usize, usize)> =
+                (0..oh).flat_map(|r| (0..ow).map(move |q| (r, q))).collect();
+            for batch in positions.chunks(cols) {
+                // Sum the k² window elements with one multi-operand add.
+                let mut sub = self.fresh_subarray();
+                let mut bases = Vec::with_capacity(k * k);
+                for idx in 0..k * k {
+                    let (dy, dx) = (idx / k, idx % k);
+                    let vals: Vec<i64> = batch
+                        .iter()
+                        .map(|&(r, q)| x.at(c, r * stride + dy, q * stride + dx))
+                        .collect();
+                    self.charge_transfer((vals.len() * b) as u64, Phase::DataTransfer);
+                    let base = idx * b;
+                    self.store_vertical(&mut sub, base, b, &vals, Phase::Pooling);
+                    bases.push(base);
+                }
+                let sum_base = ((k * k * b).div_ceil(8) + 1) * 8;
+                let sum_w =
+                    add_columns(&mut sub, &bases, b, sum_base, &mut self.stats, Phase::Pooling);
+                let sums = self.load_vertical(&sub, sum_base, sum_w, batch.len(), Phase::Pooling);
+                // avg = (sum·mul + 2^(shift−1)) >> shift via the in-memory
+                // multiply + rounding-add.
+                let avgs = self.scale_shift(
+                    &sums,
+                    sum_w,
+                    mul,
+                    1i64 << (shift - 1),
+                    shift,
+                    Phase::Pooling,
+                );
+                for (&(r, q), v) in batch.iter().zip(&avgs) {
+                    *y.at_mut(c, r, q) = *v;
+                }
+            }
+        }
+        y
+    }
+
+    // ================================================================
+    // Affine transforms (BN / quantize) — Fig. 10 multiply + Fig. 9 add
+    // ================================================================
+
+    /// In-memory `(v·mul + add + 2^(shift−1)·0) >> shift` for a batch of
+    /// column values (`add` already contains any rounding term).
+    fn scale_shift(
+        &mut self,
+        values: &[i64],
+        vbits: usize,
+        mul: u32,
+        add: i64,
+        shift: u8,
+        phase: Phase,
+    ) -> Vec<i64> {
+        assert!(add >= 0, "unsigned datapath");
+        let mut sub = self.fresh_subarray();
+        let vbits = vbits.max(1);
+        self.store_vertical(&mut sub, 0, vbits, values, phase);
+        // Multiplier bits into the buffer (shared across columns).
+        let mbits = width_of(mul as i64).max(1);
+        let mut buf_rows = Vec::with_capacity(mbits);
+        for j in 0..mbits {
+            let word = if (mul >> j) & 1 == 1 { u128::MAX } else { 0 };
+            sub.buffer_write(j, word, &mut self.stats, phase);
+            buf_rows.push(j);
+        }
+        let prod_base = (vbits.div_ceil(8) + 1) * 8;
+        let prod_w = multiply_columns(
+            &mut sub,
+            0,
+            vbits,
+            &buf_rows,
+            prod_base,
+            &mut self.stats,
+            phase,
+        );
+        let (res_base, res_w) = if add > 0 {
+            // Write the additive constant as a second operand and add.
+            let abits = width_of(add).max(prod_w);
+            let add_base = prod_base + ((prod_w.div_ceil(8) + 1) * 8).max(abits.div_ceil(8) * 8);
+            let addv = vec![add; values.len()];
+            self.store_vertical(&mut sub, add_base, abits, &addv, phase);
+            // Pad product operand width to match: add_columns wants equal
+            // widths, so treat both as `abits`-wide (upper product rows
+            // are erased ⇒ zero).
+            let sum_base = add_base + (abits.div_ceil(8) + 1) * 8;
+            assert!(sum_base + abits + 2 <= self.cfg.rows, "layout overflow");
+            let w = add_columns(
+                &mut sub,
+                &[prod_base, add_base],
+                abits.max(prod_w),
+                sum_base,
+                &mut self.stats,
+                phase,
+            );
+            (sum_base, w)
+        } else {
+            (prod_base, prod_w)
+        };
+        // Shift = read from row `shift` upward.
+        let hi = res_w.saturating_sub(shift as usize).max(1);
+        self.load_vertical(&sub, res_base + shift as usize, hi, values.len(), phase)
+    }
+
+    fn bn_layer(&mut self, x: &WideTensor, bits: usize, p: &BnParams) -> WideTensor {
+        let mut y = WideTensor::zeros(x.c, x.h, x.w);
+        let hw = x.h * x.w;
+        for c in 0..x.c {
+            let vals: Vec<i64> = x.data[c * hw..(c + 1) * hw].to_vec();
+            let mut out = Vec::with_capacity(hw);
+            for batch in vals.chunks(self.cfg.cols) {
+                out.extend(self.scale_shift(
+                    batch,
+                    bits,
+                    p.mul[c],
+                    p.add[c],
+                    p.shift,
+                    Phase::BatchNorm,
+                ));
+            }
+            y.data[c * hw..(c + 1) * hw].copy_from_slice(&out);
+        }
+        y
+    }
+
+    fn quantize_layer(&mut self, x: &WideTensor, bits: usize, p: QuantParams) -> WideTensor {
+        let max = ((1u64 << p.bits) - 1) as i64;
+        let mut y = WideTensor::zeros(x.c, x.h, x.w);
+        for (i, chunk) in x.data.chunks(self.cfg.cols).enumerate() {
+            let shifted =
+                self.scale_shift(chunk, bits, p.mul, p.add, p.shift, Phase::Quantization);
+            // Saturation: the high rows above `p.bits` were read as part
+            // of `shifted`; clamp columns that overflow (the hardware
+            // selects the all-ones pattern via the overflow OR).
+            for (j, v) in shifted.iter().enumerate() {
+                y.data[i * self.cfg.cols + j] = (*v).min(max);
+            }
+        }
+        y
+    }
+
+    fn residual_layer(&mut self, a: &WideTensor, b: &WideTensor, bits: usize) -> WideTensor {
+        assert_eq!((a.c, a.h, a.w), (b.c, b.h, b.w));
+        let wa = tensor_width(a).max(bits);
+        let wb = tensor_width(b).max(bits);
+        let w = wa.max(wb);
+        let mut y = WideTensor::zeros(a.c, a.h, a.w);
+        for (i, (ca, cb)) in a
+            .data
+            .chunks(self.cfg.cols)
+            .zip(b.data.chunks(self.cfg.cols))
+            .enumerate()
+        {
+            let mut sub = self.fresh_subarray();
+            self.store_vertical(&mut sub, 0, w, ca, Phase::Convolution);
+            let b_base = (w.div_ceil(8) + 1) * 8;
+            self.store_vertical(&mut sub, b_base, w, cb, Phase::Convolution);
+            let res_base = b_base + (w.div_ceil(8) + 1) * 8;
+            let rw = add_columns(
+                &mut sub,
+                &[0, b_base],
+                w,
+                res_base,
+                &mut self.stats,
+                Phase::Convolution,
+            );
+            let vals = self.load_vertical(&sub, res_base, rw, ca.len(), Phase::Convolution);
+            y.data[i * self.cfg.cols..i * self.cfg.cols + vals.len()].copy_from_slice(&vals);
+        }
+        y
+    }
+}
+
+/// Cross-writing accumulation subarray: partial counts are written as
+/// vertical operands at their 2^(n+m) row offset (the paper's "shift by
+/// writing to different rows") and folded with multi-operand in-memory
+/// addition when the operand slots fill up.
+struct ColumnAccumulator {
+    sub: Subarray,
+    cols: usize,
+    used: usize,
+    slots: usize,
+}
+
+impl ColumnAccumulator {
+    fn new(sub: Subarray, cols: usize) -> Self {
+        let slots = sub.num_rows() / ACC_BITS - 2; // leave room for result
+        Self { sub, cols, used: 0, slots }
+    }
+
+    fn reset(&mut self, stats: &mut Stats) {
+        // Erase all operand strips (fresh accumulation).
+        for s in 0..self.sub.strip_rows() {
+            self.sub.erase_strip(s, stats, Phase::Convolution);
+        }
+        self.used = 0;
+    }
+
+    /// Push one partial-count vector shifted by `shift` rows.
+    fn push(&mut self, counts: &[u32], shift: usize, stats: &mut Stats) {
+        if self.used == self.slots {
+            self.fold(stats);
+        }
+        let base = self.used * ACC_BITS;
+        let cb = 32 - counts.iter().copied().max().unwrap_or(0).leading_zeros() as usize;
+        assert!(shift + cb <= ACC_BITS, "operand exceeds slot width");
+        for b in 0..cb {
+            let mut word = 0u128;
+            for (col, &v) in counts.iter().enumerate() {
+                if (v >> b) & 1 == 1 {
+                    word |= 1 << col;
+                }
+            }
+            if word != 0 {
+                let row = base + shift + b;
+                self.sub.program_row(row / 8, row % 8, word, stats, Phase::Convolution);
+            }
+        }
+        self.used += 1;
+    }
+
+    /// Fold all used slots into slot 0.
+    fn fold(&mut self, stats: &mut Stats) {
+        if self.used <= 1 {
+            return;
+        }
+        let bases: Vec<usize> = (0..self.used).map(|s| s * ACC_BITS).collect();
+        let res_base = self.slots * ACC_BITS;
+        let res_base = res_base.div_ceil(8) * 8;
+        let w = add_columns(&mut self.sub, &bases, ACC_BITS, res_base, stats, Phase::Convolution);
+        assert!(w <= ACC_BITS + 6);
+        // Read the fold result, clear operands, rewrite into slot 0.
+        let mut rows = Vec::with_capacity(w.min(ACC_BITS));
+        for b in 0..w.min(ACC_BITS) {
+            rows.push(self.sub.read_row(res_base + b, stats, Phase::Convolution));
+        }
+        for s in 0..(self.used * ACC_BITS).div_ceil(8) {
+            self.sub.erase_strip(s, stats, Phase::Convolution);
+        }
+        for (b, &word) in rows.iter().enumerate() {
+            if word != 0 {
+                self.sub.program_row(b / 8, b % 8, word, stats, Phase::Convolution);
+            }
+        }
+        self.used = 1;
+    }
+
+    /// Fold and read out the per-column totals.
+    fn finish(&mut self, stats: &mut Stats) -> Vec<u64> {
+        self.fold(stats);
+        let mut vals = vec![0u64; self.cols];
+        for b in 0..ACC_BITS {
+            let row = self.sub.read_row(b, stats, Phase::Convolution);
+            for (col, v) in vals.iter_mut().enumerate() {
+                *v |= (((row >> col) & 1) as u64) << b;
+            }
+        }
+        vals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::network::{micro_cnn, small_cnn};
+    use crate::cnn::ref_exec;
+
+    fn check_network(net: &Network, w_bits: u8, seed: u64) {
+        let params = ModelParams::random(net, w_bits, seed);
+        let input = QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, seed + 1);
+        let golden = ref_exec::execute(net, &params, &input);
+        let mut eng = FunctionalEngine::new(ArchConfig::paper());
+        let got = eng.run(net, &params, &input);
+        assert_eq!(got.len(), golden.len());
+        for (i, (a, b)) in got.iter().zip(&golden).enumerate() {
+            assert_eq!(a, b, "node {i} ({}) mismatch", net.nodes[i].layer.mnemonic());
+        }
+        // The run must have exercised the array: ANDs, programs, erases.
+        assert!(eng.stats.ops.ands > 0);
+        assert!(eng.stats.ops.erases > 0);
+        assert!(eng.stats.total_latency_ns() > 0.0);
+    }
+
+    #[test]
+    fn micro_cnn_matches_golden() {
+        check_network(&micro_cnn(4), 2, 11);
+    }
+
+    #[test]
+    fn small_cnn_matches_golden_bit_exactly() {
+        check_network(&small_cnn(4), 4, 42);
+    }
+
+    #[test]
+    fn small_cnn_other_seeds() {
+        check_network(&small_cnn(3), 3, 1234);
+    }
+}

@@ -1,0 +1,116 @@
+//! The inference coordinator: the paper's system contribution at L3.
+//!
+//! Two execution engines share one cost model:
+//!
+//! * [`functional::FunctionalEngine`] — bit-accurate execution of every
+//!   layer on simulated NAND-SPIN subarrays (small networks; outputs are
+//!   checked against the golden executor and the PJRT artifact).
+//! * [`analytic::AnalyticModel`] — closed-form op-count model for the
+//!   full-scale benchmark networks (AlexNet / VGG19 / ResNet50) and the
+//!   design-space sweeps; generates the paper's figures.
+
+pub mod analytic;
+pub mod functional;
+pub mod server;
+
+pub use analytic::{AnalyticModel, Calibration};
+pub use functional::FunctionalEngine;
+pub use server::{serve, Completion, Request, ServeReport};
+
+use crate::arch::area::AreaModel;
+use crate::arch::config::ArchConfig;
+use crate::arch::stats::Stats;
+use crate::cnn::network::Network;
+use crate::cnn::ref_exec::{ModelParams, WideTensor};
+use crate::cnn::tensor::QTensor;
+use crate::metrics::Metrics;
+
+/// High-level façade over the two engines.
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    /// Architecture configuration.
+    pub cfg: ArchConfig,
+}
+
+impl Coordinator {
+    /// Coordinator for `cfg`.
+    pub fn new(cfg: ArchConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Paper operating point.
+    pub fn paper() -> Self {
+        Self::new(ArchConfig::paper())
+    }
+
+    /// Analytic inference stats for a network at weight precision `wbits`.
+    pub fn analytic_stats(&self, net: &Network, wbits: u8) -> Stats {
+        AnalyticModel::new(self.cfg.clone()).network_stats(net, wbits)
+    }
+
+    /// Analytic metrics (FPS / GOPS / efficiency) for a network.
+    pub fn analytic_metrics(&self, net: &Network, wbits: u8) -> Metrics {
+        let stats = self.analytic_stats(net, wbits);
+        let area = AreaModel::default().total_mm2(&self.cfg);
+        Metrics::from_stats(
+            format!("NAND-SPIN/{}/w{}i{}", net.name, wbits, net.input_bits),
+            net.total_ops() as f64,
+            &stats,
+            area,
+        )
+    }
+
+    /// Steady-state throughput metrics: weights resident across the
+    /// batch (loaded once), per-image cost excludes the weight stream —
+    /// the serving condition Table 3's FPS numbers describe.
+    pub fn throughput_metrics(&self, net: &Network, wbits: u8) -> Metrics {
+        let mut model = AnalyticModel::new(self.cfg.clone());
+        model.cal.weights_resident = true;
+        let stats = model.network_stats(net, wbits);
+        let area = AreaModel::default().total_mm2(&self.cfg);
+        Metrics::from_stats(
+            format!("NAND-SPIN/{}/w{}i{} (resident)", net.name, wbits, net.input_bits),
+            net.total_ops() as f64,
+            &stats,
+            area,
+        )
+    }
+
+    /// Bit-accurate functional run; returns all node outputs plus stats.
+    pub fn functional_run(
+        &self,
+        net: &Network,
+        params: &ModelParams,
+        input: &QTensor,
+    ) -> (Vec<WideTensor>, Stats) {
+        let mut eng = FunctionalEngine::new(self.cfg.clone());
+        let outs = eng.run(net, params, input);
+        (outs, eng.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::network::{resnet50, small_cnn};
+    use crate::cnn::ref_exec;
+
+    #[test]
+    fn analytic_metrics_have_positive_fps() {
+        let c = Coordinator::paper();
+        let m = c.analytic_metrics(&resnet50(8), 8);
+        assert!(m.fps() > 1.0 && m.fps() < 100_000.0, "fps {}", m.fps());
+        assert!(m.gops() > 0.0);
+    }
+
+    #[test]
+    fn functional_run_agrees_with_golden() {
+        let net = small_cnn(3);
+        let params = ModelParams::random(&net, 3, 5);
+        let input = QTensor::random(2, 14, 22, 3, 6);
+        let golden = ref_exec::execute(&net, &params, &input);
+        let (outs, stats) = Coordinator::paper().functional_run(&net, &params, &input);
+        assert_eq!(outs.last(), golden.last());
+        assert!(stats.ops.ands > 0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Multi-worker inference service: the L3 serving loop.
+//!
+//! A bounded request queue feeds `workers` threads, each owning its own
+//! functional engine (one engine ≙ one PIM chip); completions stream
+//! back with per-request simulated latency/energy plus host-side queue
+//! timing. This is the process topology a deployment would run — the
+//! paper's accelerator behind a batching front-end. (Thread-based: the
+//! build is offline, so no async runtime; the queue discipline is FIFO
+//! with backpressure from the bounded channel.)
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use crate::arch::config::ArchConfig;
+use crate::arch::stats::Stats;
+use crate::cnn::network::Network;
+use crate::cnn::ref_exec::{ModelParams, WideTensor};
+use crate::cnn::tensor::QTensor;
+
+use super::functional::FunctionalEngine;
+
+/// One inference request.
+#[derive(Debug)]
+pub struct Request {
+    /// Caller-assigned id.
+    pub id: u64,
+    /// Input image.
+    pub image: QTensor,
+}
+
+/// One completed inference.
+#[derive(Debug)]
+pub struct Completion {
+    /// Request id.
+    pub id: u64,
+    /// Final network output.
+    pub output: WideTensor,
+    /// Simulated PIM stats for this inference.
+    pub stats: Stats,
+    /// Host wall-clock the request spent queued + executing, seconds.
+    pub host_seconds: f64,
+    /// Worker that served the request.
+    pub worker: usize,
+}
+
+/// Summary of a served batch.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// All completions, in completion order.
+    pub completions: Vec<Completion>,
+    /// Total host wall-clock, seconds.
+    pub wall_seconds: f64,
+}
+
+impl ServeReport {
+    /// Aggregate simulated PIM latency (ms) across requests.
+    pub fn total_sim_ms(&self) -> f64 {
+        self.completions.iter().map(|c| c.stats.total_latency_ms()).sum()
+    }
+
+    /// Simulated steady-state throughput: requests per simulated second,
+    /// with per-chip parallelism across workers.
+    pub fn sim_fps(&self, workers: usize) -> f64 {
+        let per_chip_ms = self.total_sim_ms() / workers.max(1) as f64;
+        self.completions.len() as f64 / (per_chip_ms * 1e-3)
+    }
+}
+
+/// Serve `requests` on `workers` parallel engines (one simulated PIM
+/// chip each) with a bounded FIFO queue.
+///
+/// # Panics
+/// If a worker thread panics (functional-engine divergence).
+pub fn serve(
+    cfg: &ArchConfig,
+    net: &Network,
+    params: &ModelParams,
+    requests: Vec<Request>,
+    workers: usize,
+) -> ServeReport {
+    let started = Instant::now();
+    let (req_tx, req_rx) = mpsc::sync_channel::<(Request, Instant)>(workers * 2);
+    let req_rx = Arc::new(Mutex::new(req_rx));
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+
+    let n = requests.len();
+    thread::scope(|scope| {
+        for w in 0..workers.max(1) {
+            let req_rx = Arc::clone(&req_rx);
+            let done_tx = done_tx.clone();
+            let cfg = cfg.clone();
+            let net = net.clone();
+            let params = params.clone();
+            scope.spawn(move || {
+                loop {
+                    let msg = req_rx.lock().expect("queue lock").recv();
+                    let Ok((req, enqueued)) = msg else { break };
+                    let mut engine = FunctionalEngine::new(cfg.clone());
+                    let outs = engine.run(&net, &params, &req.image);
+                    let output = outs.into_iter().last().expect("non-empty network");
+                    done_tx
+                        .send(Completion {
+                            id: req.id,
+                            output,
+                            stats: engine.stats,
+                            host_seconds: enqueued.elapsed().as_secs_f64(),
+                            worker: w,
+                        })
+                        .expect("completion channel");
+                }
+            });
+        }
+        drop(done_tx);
+
+        // Feed the queue (backpressure via the bounded channel).
+        for req in requests {
+            req_tx.send((req, Instant::now())).expect("request channel");
+        }
+        drop(req_tx);
+    });
+
+    let completions: Vec<Completion> = done_rx.into_iter().collect();
+    assert_eq!(completions.len(), n, "all requests must complete");
+    ServeReport { completions, wall_seconds: started.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::network::small_cnn;
+    use crate::cnn::ref_exec;
+
+    #[test]
+    fn serves_all_requests_correctly_across_workers() {
+        let net = small_cnn(3);
+        let params = ModelParams::random(&net, 3, 2);
+        let images: Vec<QTensor> =
+            (0..6).map(|i| QTensor::random(2, 14, 22, 3, 100 + i)).collect();
+        let requests = images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| Request { id: i as u64, image: img.clone() })
+            .collect();
+        let report = serve(&ArchConfig::paper(), &net, &params, requests, 3);
+        assert_eq!(report.completions.len(), 6);
+        // Every completion matches the golden executor, regardless of
+        // which worker served it.
+        for c in &report.completions {
+            let golden = ref_exec::execute(&net, &params, &images[c.id as usize]);
+            assert_eq!(&c.output, golden.last().unwrap(), "request {}", c.id);
+            assert!(c.stats.total_latency_ns() > 0.0);
+        }
+        // Multiple workers actually participated.
+        let distinct: std::collections::HashSet<usize> =
+            report.completions.iter().map(|c| c.worker).collect();
+        assert!(distinct.len() >= 2, "expected >=2 workers, got {distinct:?}");
+        assert!(report.sim_fps(3) > 0.0);
+    }
+
+    #[test]
+    fn single_worker_is_fifo_correct() {
+        let net = small_cnn(2);
+        let params = ModelParams::random(&net, 2, 5);
+        let requests = (0..3)
+            .map(|i| Request { id: i, image: QTensor::random(2, 14, 22, 2, 7 + i) })
+            .collect();
+        let report = serve(&ArchConfig::paper(), &net, &params, requests, 1);
+        let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "single worker preserves FIFO order");
+    }
+}

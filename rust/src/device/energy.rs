@@ -1,0 +1,140 @@
+//! Calibrated per-operation latency/energy scalars.
+//!
+//! These are the numbers the paper's circuit-level SPICE simulation
+//! produced (§5.1) and that its architecture simulator consumed:
+//!
+//! * erase: 180 fJ per NAND-SPIN device (8 MTJs), average 0.3 ns per MTJ
+//!   → 2.4 ns per strip erase;
+//! * program: 840 fJ per device, 5 ns per bit;
+//! * read: 0.17 ns and 4.0 fJ per bit.
+//!
+//! Values the paper does not state explicitly (bit-counter, buffer and bus
+//! energies) are derived from typical 45 nm post-synthesis figures and
+//! flagged `ASSUMED` — see EXPERIMENTS.md for the sensitivity discussion.
+
+
+use super::nand_spin::MTJS_PER_DEVICE;
+
+/// Per-operation cost scalars for the NAND-SPIN array and its periphery.
+///
+/// Energies in femtojoules, latencies in nanoseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceCosts {
+    /// SOT strip erase: energy per NAND-SPIN device (8 MTJs). Paper: 180 fJ.
+    pub erase_energy_per_device_fj: f64,
+    /// SOT strip erase latency (whole strip; 0.3 ns × 8 MTJs). Paper-derived.
+    pub erase_latency_ns: f64,
+    /// STT program: energy per device when all 8 bits switch. Paper: 840 fJ.
+    pub program_energy_per_device_fj: f64,
+    /// STT program latency per bit-position step. Paper: 5 ns.
+    pub program_latency_per_bit_ns: f64,
+    /// Read latency per row access. Paper: 0.17 ns.
+    pub read_latency_ns: f64,
+    /// Read energy per bit. Paper: 4.0 fJ.
+    pub read_energy_per_bit_fj: f64,
+    /// AND op latency — same sensing path as a read (Fig. 5d).
+    pub and_latency_ns: f64,
+    /// AND op energy per bit — read path + FU driver. Slightly above read.
+    pub and_energy_per_bit_fj: f64,
+    /// Bit-counter accumulate per column per op. ASSUMED: 45 nm
+    /// post-synthesis ripple-count stage, pipelined under the sense latency.
+    pub bitcount_energy_per_bit_fj: f64,
+    /// Bit-counter latency when not hidden (standalone count/shift step).
+    pub bitcount_latency_ns: f64,
+    /// Subarray weight-buffer access energy per bit (small SRAM row).
+    /// ASSUMED.
+    pub buffer_energy_per_bit_fj: f64,
+    /// Subarray weight-buffer access latency.
+    pub buffer_latency_ns: f64,
+    /// In-mat bus energy per bit per hop. ASSUMED: short on-chip wire.
+    pub bus_energy_per_bit_fj: f64,
+    /// Off-chip (DRAM) access energy per bit for loading weights/inputs.
+    /// ASSUMED: ~40 pJ/bit, standard DDR access energy — this is what
+    /// makes "load data" ≈ 1/3 of inference energy (Fig. 16b).
+    pub offchip_energy_per_bit_fj: f64,
+    /// Inter-mat (global) bus energy per bit. ASSUMED: long on-chip wire.
+    pub global_bus_energy_per_bit_fj: f64,
+    /// Bus clock period (control logic @ 1 GHz).
+    pub bus_cycle_ns: f64,
+    /// Array static/leakage power in µW per subarray (NVM arrays have
+    /// near-zero cell leakage; this is periphery only). ASSUMED.
+    pub leakage_uw_per_subarray: f64,
+}
+
+impl Default for DeviceCosts {
+    fn default() -> Self {
+        Self {
+            erase_energy_per_device_fj: 180.0,
+            erase_latency_ns: 0.3 * MTJS_PER_DEVICE as f64,
+            program_energy_per_device_fj: 840.0,
+            program_latency_per_bit_ns: 5.0,
+            read_latency_ns: 0.17,
+            read_energy_per_bit_fj: 4.0,
+            and_latency_ns: 0.17,
+            and_energy_per_bit_fj: 4.4,
+            bitcount_energy_per_bit_fj: 1.2,
+            bitcount_latency_ns: 0.25,
+            buffer_energy_per_bit_fj: 0.8,
+            buffer_latency_ns: 0.2,
+            bus_energy_per_bit_fj: 20.0,
+            global_bus_energy_per_bit_fj: 120.0,
+            offchip_energy_per_bit_fj: 40_000.0,
+            bus_cycle_ns: 1.0,
+            leakage_uw_per_subarray: 2.0,
+        }
+    }
+}
+
+impl DeviceCosts {
+    /// Energy to program a single bit (AP→P switch). The paper's 840 fJ is
+    /// for a whole device (8 MTJs): 105 fJ per switched bit.
+    pub fn program_energy_per_bit_fj(&self) -> f64 {
+        self.program_energy_per_device_fj / MTJS_PER_DEVICE as f64
+    }
+
+    /// Total latency to write one full row of NAND-SPIN devices: one strip
+    /// erase plus [`MTJS_PER_DEVICE`] program steps (§3.2 memory mode).
+    pub fn row_write_latency_ns(&self) -> f64 {
+        self.erase_latency_ns + MTJS_PER_DEVICE as f64 * self.program_latency_per_bit_ns
+    }
+
+    /// Energy to erase one full row of `devices` NAND-SPIN strips.
+    pub fn row_erase_energy_fj(&self, devices: usize) -> f64 {
+        self.erase_energy_per_device_fj * devices as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scalars_are_pinned() {
+        let c = DeviceCosts::default();
+        assert_eq!(c.erase_energy_per_device_fj, 180.0);
+        assert_eq!(c.program_energy_per_device_fj, 840.0);
+        assert_eq!(c.read_latency_ns, 0.17);
+        assert_eq!(c.read_energy_per_bit_fj, 4.0);
+        assert!((c.erase_latency_ns - 2.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_write_is_erase_plus_eight_programs() {
+        let c = DeviceCosts::default();
+        assert!((c.row_write_latency_ns() - (2.4 + 40.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_bit_program_energy() {
+        let c = DeviceCosts::default();
+        assert!((c.program_energy_per_bit_fj() - 105.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn write_dominates_read() {
+        // §3.2: writes are the expensive asymmetric op; reads are cheap.
+        let c = DeviceCosts::default();
+        assert!(c.row_write_latency_ns() > 100.0 * c.read_latency_ns);
+        assert!(c.program_energy_per_bit_fj() > 10.0 * c.read_energy_per_bit_fj);
+    }
+}

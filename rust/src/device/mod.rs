@@ -1,0 +1,23 @@
+//! Device layer: MTJ, NAND-SPIN strip, SPCSA sense amplifier, switching
+//! margins and the calibrated per-operation latency/energy scalars.
+//!
+//! The paper characterises the hybrid CMOS/MTJ circuit with a Verilog-A
+//! LLG compact model in Cadence Spectre/SPICE (45 nm PDK) and feeds the
+//! resulting per-op scalars into a modified NVSim plus an architecture
+//! simulator. We reproduce the same split: [`llg`] re-derives the switching
+//! currents/margins from the Table 2 device constants, [`energy`] pins the
+//! per-op scalars to the values the paper reports from SPICE, and the
+//! functional models ([`mtj`], [`nand_spin`], [`spcsa`]) implement the
+//! Table 1 signal semantics bit-accurately.
+
+pub mod energy;
+pub mod llg;
+pub mod mtj;
+pub mod nand_spin;
+pub mod spcsa;
+pub mod variation;
+
+pub use energy::DeviceCosts;
+pub use mtj::{Mtj, MtjState};
+pub use nand_spin::{NandSpinDevice, MTJS_PER_DEVICE};
+pub use spcsa::Spcsa;

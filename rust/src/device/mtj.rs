@@ -1,0 +1,202 @@
+//! Magnetic tunnel junction (MTJ) state machine and resistance model.
+//!
+//! An MTJ stores one bit in the relative orientation of its free and
+//! pinned layers: parallel (P, low resistance) or anti-parallel (AP, high
+//! resistance). The paper stores data *complementarily*: an MTJ in the AP
+//! state represents binary `0`, the P state represents binary `1`
+//! (Fig. 4c) — `P` is reached by the STT program step, `AP` by the SOT
+//! erase step.
+
+
+/// Magnetisation state of the free layer relative to the pinned layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtjState {
+    /// Parallel: low resistance, stores logic `1` in the paper's
+    /// complementary encoding.
+    Parallel,
+    /// Anti-parallel: high resistance, stores logic `0`. This is the
+    /// post-erase default.
+    AntiParallel,
+}
+
+impl MtjState {
+    /// The stored logic bit under the paper's complementary encoding.
+    #[inline]
+    pub fn bit(self) -> bool {
+        matches!(self, MtjState::Parallel)
+    }
+
+    /// State representing a stored logic bit.
+    #[inline]
+    pub fn from_bit(bit: bool) -> Self {
+        if bit {
+            MtjState::Parallel
+        } else {
+            MtjState::AntiParallel
+        }
+    }
+}
+
+/// Electrical / magnetic constants of the MTJ stack (paper Table 2 plus the
+/// standard derived quantities used by the sensing model).
+#[derive(Debug, Clone, Copy)]
+pub struct MtjParams {
+    /// Resistance-area product in Ω·µm² (Table 2: 5 Ω·µm²).
+    pub ra_product_ohm_um2: f64,
+    /// Tunnel magnetoresistance ratio (Table 2: 120 % → 1.2).
+    pub tmr: f64,
+    /// MTJ diameter in nm (typical perpendicular MTJ, 40 nm).
+    pub diameter_nm: f64,
+    /// Tunnelling spin polarisation (Table 2: 0.62).
+    pub spin_polarization: f64,
+    /// Gilbert damping constant (Table 2: 0.02).
+    pub gilbert_damping: f64,
+    /// Saturation magnetisation in kA/m (Table 2: 1150 kA/m).
+    pub saturation_magnetization_ka_m: f64,
+    /// Uniaxial anisotropy constant in J/m³ (Table 2: 1.16e6).
+    pub anisotropy_j_m3: f64,
+    /// Free-layer thickness in nm (typical 1.1 nm CoFeB).
+    pub free_layer_thickness_nm: f64,
+}
+
+impl Default for MtjParams {
+    fn default() -> Self {
+        Self {
+            ra_product_ohm_um2: 5.0,
+            tmr: 1.2,
+            diameter_nm: 40.0,
+            spin_polarization: 0.62,
+            gilbert_damping: 0.02,
+            saturation_magnetization_ka_m: 1150.0,
+            anisotropy_j_m3: 1.16e6,
+            free_layer_thickness_nm: 1.1,
+        }
+    }
+}
+
+impl MtjParams {
+    /// Junction area in µm².
+    pub fn area_um2(&self) -> f64 {
+        let r_um = self.diameter_nm * 1e-3 / 2.0;
+        std::f64::consts::PI * r_um * r_um
+    }
+
+    /// Low (parallel) resistance in Ω: `R_L = RA / A`.
+    pub fn r_low_ohm(&self) -> f64 {
+        self.ra_product_ohm_um2 / self.area_um2()
+    }
+
+    /// High (anti-parallel) resistance in Ω: `R_H = R_L (1 + TMR)`.
+    pub fn r_high_ohm(&self) -> f64 {
+        self.r_low_ohm() * (1.0 + self.tmr)
+    }
+
+    /// SPCSA reference resistance `(R_H + R_L) / 2` (paper §3.2).
+    pub fn r_ref_ohm(&self) -> f64 {
+        0.5 * (self.r_high_ohm() + self.r_low_ohm())
+    }
+}
+
+/// A single MTJ: one bit of NAND-SPIN storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mtj {
+    state: MtjState,
+}
+
+impl Default for Mtj {
+    fn default() -> Self {
+        // Power-on state is undefined in silicon; we model the post-erase
+        // default so fresh arrays behave like erased ones.
+        Self { state: MtjState::AntiParallel }
+    }
+}
+
+impl Mtj {
+    /// Current magnetisation state.
+    #[inline]
+    pub fn state(&self) -> MtjState {
+        self.state
+    }
+
+    /// Stored logic bit (complementary encoding, Fig. 4c).
+    #[inline]
+    pub fn bit(&self) -> bool {
+        self.state.bit()
+    }
+
+    /// SOT erase: unconditionally switch to AP (stored `0`).
+    /// Paper §2.1 step 1 — the current along the heavy-metal strip resets
+    /// every MTJ on the strip regardless of prior state.
+    #[inline]
+    pub fn erase(&mut self) {
+        self.state = MtjState::AntiParallel;
+    }
+
+    /// STT program: AP→P switching (stored `1`).
+    ///
+    /// Programming is *unipolar* in NAND-SPIN: the program current only
+    /// performs the AP→P transition; a P-state MTJ stays P. Writing a `0`
+    /// is achieved by *not* programming after the erase (column signal
+    /// `Cx = 0` blocks the current — Table 1).
+    #[inline]
+    pub fn program(&mut self) {
+        self.state = MtjState::Parallel;
+    }
+
+    /// Resistance of this MTJ in Ω under `params`.
+    pub fn resistance_ohm(&self, params: &MtjParams) -> f64 {
+        match self.state {
+            MtjState::Parallel => params.r_low_ohm(),
+            MtjState::AntiParallel => params.r_high_ohm(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complementary_encoding_matches_fig4c() {
+        assert!(!MtjState::AntiParallel.bit(), "AP stores 0");
+        assert!(MtjState::Parallel.bit(), "P stores 1");
+        assert_eq!(MtjState::from_bit(true), MtjState::Parallel);
+        assert_eq!(MtjState::from_bit(false), MtjState::AntiParallel);
+    }
+
+    #[test]
+    fn erase_then_program_writes_one() {
+        let mut m = Mtj::default();
+        m.erase();
+        assert!(!m.bit());
+        m.program();
+        assert!(m.bit());
+    }
+
+    #[test]
+    fn program_is_unipolar() {
+        let mut m = Mtj::default();
+        m.program();
+        m.program(); // idempotent
+        assert!(m.bit());
+        m.erase();
+        assert!(!m.bit());
+    }
+
+    #[test]
+    fn resistance_ratio_is_tmr() {
+        let p = MtjParams::default();
+        let hi = p.r_high_ohm();
+        let lo = p.r_low_ohm();
+        assert!((hi / lo - 2.2).abs() < 1e-9, "TMR 120% → R_H/R_L = 2.2");
+        assert!((p.r_ref_ohm() - 0.5 * (hi + lo)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_resistance_values_are_physical() {
+        let p = MtjParams::default();
+        // 40 nm MTJ with RA = 5 Ω·µm² → R_L ≈ 4 kΩ, R_H ≈ 8.75 kΩ.
+        assert!(p.r_low_ohm() > 1e3 && p.r_low_ohm() < 1e4);
+        assert!(p.r_high_ohm() > p.r_low_ohm());
+    }
+}

@@ -1,0 +1,115 @@
+//! NAND-SPIN multi-bit device: a heavy-metal strip carrying
+//! [`MTJS_PER_DEVICE`] MTJs, organised like a NAND flash string (Fig. 1d).
+//!
+//! Write is two-step (§2.1):
+//! 1. **Erase** — PT+NT conduct, a SOT current along the strip resets every
+//!    MTJ to AP (stored `0`).
+//! 2. **Program** — per selected MTJ, WL + PT conduct and the STT current
+//!    through the junction switches AP→P (stored `1`). A blocked column
+//!    signal leaves the bit at `0`.
+
+
+use super::mtj::{Mtj, MtjParams};
+
+/// MTJs per heavy-metal strip — fixed at 8 in the paper's design
+/// (`M×N = 128×8` bits per device row, §3.2).
+pub const MTJS_PER_DEVICE: usize = 8;
+
+/// One NAND-SPIN device: 8 MTJs sharing a heavy-metal strip.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NandSpinDevice {
+    mtjs: [Mtj; MTJS_PER_DEVICE],
+}
+
+impl NandSpinDevice {
+    /// SOT erase of the full strip: all MTJs → AP (`0`).
+    pub fn erase(&mut self) {
+        for m in &mut self.mtjs {
+            m.erase();
+        }
+    }
+
+    /// STT program of MTJ `pos`: AP→P (`1`). Unipolar — never clears.
+    ///
+    /// # Panics
+    /// If `pos >= MTJS_PER_DEVICE`.
+    pub fn program(&mut self, pos: usize) {
+        self.mtjs[pos].program();
+    }
+
+    /// Read the stored bit at `pos`.
+    pub fn read(&self, pos: usize) -> bool {
+        self.mtjs[pos].bit()
+    }
+
+    /// Write the whole strip: erase then program the `1` bits of `byte`
+    /// (bit `i` of `byte` → MTJ `i`). Returns the number of programmed
+    /// (switched) bits, which determines program energy.
+    pub fn write_byte(&mut self, byte: u8) -> u32 {
+        self.erase();
+        for pos in 0..MTJS_PER_DEVICE {
+            if byte >> pos & 1 == 1 {
+                self.program(pos);
+            }
+        }
+        byte.count_ones()
+    }
+
+    /// Read the whole strip as a byte (bit `i` ← MTJ `i`).
+    pub fn read_byte(&self) -> u8 {
+        let mut b = 0u8;
+        for pos in 0..MTJS_PER_DEVICE {
+            b |= (self.read(pos) as u8) << pos;
+        }
+        b
+    }
+
+    /// Resistance seen by the sense path when MTJ `pos` is selected.
+    pub fn path_resistance_ohm(&self, pos: usize, params: &MtjParams) -> f64 {
+        self.mtjs[pos].resistance_ohm(params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let mut d = NandSpinDevice::default();
+        for byte in [0x00u8, 0xff, 0xa5, 0x5a, 0x01, 0x80] {
+            let switched = d.write_byte(byte);
+            assert_eq!(d.read_byte(), byte);
+            assert_eq!(switched, byte.count_ones());
+        }
+    }
+
+    #[test]
+    fn erase_clears_all() {
+        let mut d = NandSpinDevice::default();
+        d.write_byte(0xff);
+        d.erase();
+        assert_eq!(d.read_byte(), 0);
+    }
+
+    #[test]
+    fn program_without_erase_accumulates_ones() {
+        // The unipolar property: programming can only add 1s. Overwriting
+        // without an erase ORs the patterns — the reason the controller
+        // always erases first.
+        let mut d = NandSpinDevice::default();
+        d.write_byte(0x0f);
+        for pos in 4..8 {
+            d.program(pos);
+        }
+        assert_eq!(d.read_byte(), 0xff);
+    }
+
+    #[test]
+    fn path_resistance_tracks_state() {
+        let p = MtjParams::default();
+        let mut d = NandSpinDevice::default();
+        d.write_byte(0b0000_0001);
+        assert!(d.path_resistance_ohm(0, &p) < d.path_resistance_ohm(1, &p));
+    }
+}

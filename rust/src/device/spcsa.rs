@@ -1,0 +1,91 @@
+//! Separated pre-charge sense amplifier (SPCSA, Fig. 4b) — the central
+//! functional unit of the subarray. One SA per column performs both read
+//! and AND operations by comparing the discharge speed of the selected
+//! cell path against a reference branch of resistance `(R_H + R_L)/2`.
+//!
+//! Truth table (Fig. 4c / Table 1, complementary data encoding):
+//!
+//! | op   | FU          | MTJ state | R_path vs R_ref | OUT        |
+//! |------|-------------|-----------|-----------------|------------|
+//! | read | 1 (always)  | P (D=1)   | lower           | 1          |
+//! | read | 1 (always)  | AP (D=0)  | higher          | 0          |
+//! | AND  | W           | P (D=1)   | lower iff W=1   | W AND D    |
+//! | AND  | W = 0       | any       | path cut → high | 0          |
+
+
+use super::mtj::MtjParams;
+
+/// Functional + electrical model of one SPCSA.
+#[derive(Debug, Clone, Copy)]
+pub struct Spcsa {
+    /// Reference branch resistance, Ω.
+    pub r_ref_ohm: f64,
+}
+
+impl Spcsa {
+    /// Build the SA with the reference set to `(R_H + R_L)/2` (§3.2).
+    pub fn new(params: &MtjParams) -> Self {
+        Self { r_ref_ohm: params.r_ref_ohm() }
+    }
+
+    /// Electrical decision: output `1` iff the cell path resistance is
+    /// below the reference (fast discharge branch wins the latch race).
+    #[inline]
+    pub fn sense(&self, r_path_ohm: f64) -> bool {
+        r_path_ohm < self.r_ref_ohm
+    }
+
+    /// Read operation: `FU` held high; output is the stored bit.
+    #[inline]
+    pub fn read(&self, params: &MtjParams, stored_bit: bool) -> bool {
+        let r = if stored_bit { params.r_low_ohm() } else { params.r_high_ohm() };
+        self.sense(r)
+    }
+
+    /// AND operation (Fig. 5d): `FU` carries operand `w`; a low `FU` cuts
+    /// the discharge path so `R_path` is effectively infinite and the SA
+    /// outputs `0`; a high `FU` reduces to a read.
+    #[inline]
+    pub fn and(&self, params: &MtjParams, stored_bit: bool, w: bool) -> bool {
+        if !w {
+            // Discharge path blocked: V_path stays high, reference wins.
+            return false;
+        }
+        self.read(params, stored_bit)
+    }
+}
+
+impl Default for Spcsa {
+    fn default() -> Self {
+        Self::new(&MtjParams::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_recovers_stored_bit() {
+        let p = MtjParams::default();
+        let sa = Spcsa::new(&p);
+        assert!(sa.read(&p, true));
+        assert!(!sa.read(&p, false));
+    }
+
+    #[test]
+    fn and_truth_table() {
+        let p = MtjParams::default();
+        let sa = Spcsa::new(&p);
+        for (d, w) in [(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(sa.and(&p, d, w), d & w, "AND({d},{w})");
+        }
+    }
+
+    #[test]
+    fn reference_sits_between_states() {
+        let p = MtjParams::default();
+        let sa = Spcsa::new(&p);
+        assert!(p.r_low_ohm() < sa.r_ref_ohm && sa.r_ref_ohm < p.r_high_ohm());
+    }
+}

@@ -1,0 +1,122 @@
+//! Process-variation analysis of the SPCSA sensing path.
+//!
+//! The paper's §3.2 leans on the reliability-enhanced separated
+//! pre-charge SA (Zhang et al., TMAG 2017) and §4.1 notes that designs
+//! which compute by activating *two* word lines "may cause logic
+//! failures … hard to guarantee reliability" — which is why NAND-SPIN
+//! computes with a single selected cell against a fixed reference.
+//!
+//! This module quantifies that argument: Monte-Carlo over log-normal
+//! resistance variation of the MTJ and the reference branch, measuring
+//! the read/AND decision error rate of (a) the single-cell SPCSA scheme
+//! and (b) a two-cell bit-line scheme (two series cells vs a 1.5R
+//! reference), reproducing the reliability gap the paper claims.
+
+use crate::device::mtj::MtjParams;
+use crate::util::Rng;
+
+/// One Monte-Carlo estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorRates {
+    /// Single-cell SPCSA read error rate (proposed scheme).
+    pub single_cell: f64,
+    /// Two-cell series bit-line compute error rate (prior-art scheme).
+    pub dual_cell: f64,
+}
+
+/// Sample a log-normal factor with standard deviation `sigma` (of the
+/// underlying normal) using Box–Muller on the deterministic PRNG.
+fn lognormal(rng: &mut Rng, sigma: f64) -> f64 {
+    let u1 = (rng.next_u64() as f64 + 1.0) / (u64::MAX as f64 + 2.0);
+    let u2 = (rng.next_u64() as f64 + 1.0) / (u64::MAX as f64 + 2.0);
+    let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+    (sigma * z).exp()
+}
+
+/// Monte-Carlo the sensing error rates at relative resistance-variation
+/// `sigma` with `trials` samples per scheme.
+pub fn sensing_error_rates(params: &MtjParams, sigma: f64, trials: u32, seed: u64) -> ErrorRates {
+    let mut rng = Rng::seed_from_u64(seed);
+    let (rl, rh) = (params.r_low_ohm(), params.r_high_ohm());
+    let rref = params.r_ref_ohm();
+
+    let mut single_err = 0u32;
+    let mut dual_err = 0u32;
+    for _ in 0..trials {
+        // --- single-cell SPCSA: cell vs (R_H + R_L)/2 reference.
+        let bit = rng.gen_bool();
+        let cell = if bit { rl } else { rh } * lognormal(&mut rng, sigma);
+        let reference = rref * lognormal(&mut rng, sigma);
+        let sensed = cell < reference;
+        if sensed != bit {
+            single_err += 1;
+        }
+
+        // --- dual-cell series scheme (e.g. bit-line AND): two cells in
+        // series vs a reference between (R_H+R_L) and 2R_L; decision
+        // margins are halved relative to the swing.
+        let a = rng.gen_bool();
+        let b = rng.gen_bool();
+        let r1 = if a { rl } else { rh } * lognormal(&mut rng, sigma);
+        let r2 = if b { rl } else { rh } * lognormal(&mut rng, sigma);
+        let dual_ref = (2.0 * rl + (rl + rh)) / 2.0 * lognormal(&mut rng, sigma);
+        let sensed_and = r1 + r2 < dual_ref;
+        if sensed_and != (a && b) {
+            dual_err += 1;
+        }
+    }
+    ErrorRates {
+        single_cell: single_err as f64 / trials as f64,
+        dual_cell: dual_err as f64 / trials as f64,
+    }
+}
+
+/// Sweep of sigma values for reporting (CLI / EXPERIMENTS.md).
+pub fn margin_sweep(params: &MtjParams, seed: u64) -> Vec<(f64, ErrorRates)> {
+    [0.02, 0.05, 0.08, 0.10, 0.15]
+        .iter()
+        .map(|&s| (s, sensing_error_rates(params, s, 200_000, seed)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_variation_means_no_errors() {
+        let r = sensing_error_rates(&MtjParams::default(), 0.0, 10_000, 1);
+        assert_eq!(r.single_cell, 0.0);
+        assert_eq!(r.dual_cell, 0.0);
+    }
+
+    #[test]
+    fn single_cell_is_more_reliable_than_dual_cell() {
+        // The paper's reliability argument: at realistic variation the
+        // single-cell SPCSA scheme must have a lower error rate than the
+        // two-cell series scheme.
+        for sigma in [0.05, 0.08, 0.10, 0.15] {
+            let r = sensing_error_rates(&MtjParams::default(), sigma, 100_000, 7);
+            assert!(
+                r.single_cell <= r.dual_cell,
+                "sigma {sigma}: single {} vs dual {}",
+                r.single_cell,
+                r.dual_cell
+            );
+        }
+    }
+
+    #[test]
+    fn small_variation_is_safe() {
+        // TMR 120 % gives a wide margin: 5 % sigma ⇒ error ≪ 1e-2.
+        let r = sensing_error_rates(&MtjParams::default(), 0.05, 200_000, 3);
+        assert!(r.single_cell < 1e-2, "{}", r.single_cell);
+    }
+
+    #[test]
+    fn errors_grow_with_variation() {
+        let lo = sensing_error_rates(&MtjParams::default(), 0.05, 200_000, 5);
+        let hi = sensing_error_rates(&MtjParams::default(), 0.15, 200_000, 5);
+        assert!(hi.single_cell > lo.single_cell);
+    }
+}

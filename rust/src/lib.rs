@@ -1,0 +1,61 @@
+//! # nandspin — NAND-SPIN Processing-in-MRAM CNN accelerator
+//!
+//! Reproduction of Zhao et al., *"NAND-SPIN-Based Processing-in-MRAM
+//! Architecture for Convolutional Neural Network Acceleration"*
+//! (Sci China Inf Sci, 2022).
+//!
+//! The crate is organised bottom-up, mirroring the paper's device → circuit
+//! → architecture evaluation flow:
+//!
+//! * [`device`] — MTJ / NAND-SPIN strip functional model, SPCSA sense
+//!   amplifier, macrospin switching-margin model, and the calibrated per-op
+//!   latency/energy scalars reported in §5.1 of the paper.
+//! * [`subarray`] — the 256×128 NAND-SPIN subarray with per-column
+//!   bit-counters and a weight buffer; memory-mode ops (erase/program/read)
+//!   and compute-mode ops (row AND + bit-count), plus the composed
+//!   in-memory primitives: bitwise convolution, addition, multiplication
+//!   and comparison (paper Figs. 8–11).
+//! * [`mat`] / [`bank`] — the hierarchy of Fig. 2: 4×4 subarrays per mat
+//!   with a local buffer and shared bus, 4×4 mats per bank with a global
+//!   buffer and controller.
+//! * [`nvsim`] — an NVSim-like analytic estimator for periphery
+//!   latency/energy/area (the paper used a modified NVSim).
+//! * [`arch`] — architecture configuration, statistics accounting with the
+//!   Fig. 16 breakdown categories, and the Fig. 17 area model.
+//! * [`cnn`] — integer tensors, bit-plane decomposition, quantization
+//!   (Eq. 2), batch-norm (Eq. 3), layer IR, AlexNet/VGG19/ResNet50 presets,
+//!   and a pure-Rust golden executor.
+//! * [`mapping`] — the paper's data-mapping scheme: bit-planes across
+//!   subarrays, weight reuse via the subarray buffer, and the cross-writing
+//!   partial-sum placement.
+//! * [`coordinator`] — the inference scheduler that decomposes a network
+//!   into primitive op streams, drives the simulator (functional mode) or
+//!   the analytic model (full-scale mode), and produces the paper's
+//!   metrics.
+//! * [`baselines`] — analytic cost models for DRISA, PRIME, STT-CiM,
+//!   MRIMA and IMCE, calibrated to their published Table-3 operating
+//!   points.
+//! * [`runtime`] — PJRT (CPU) runtime that loads the AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and cross-checks the simulator's
+//!   functional outputs.
+//! * [`workload`] — synthetic image / workload generators.
+
+pub mod arch;
+pub mod bank;
+pub mod baselines;
+pub mod cnn;
+pub mod coordinator;
+pub mod device;
+pub mod mapping;
+pub mod mat;
+pub mod metrics;
+pub mod nvsim;
+pub mod runtime;
+pub mod subarray;
+pub mod util;
+pub mod workload;
+
+pub use arch::config::ArchConfig;
+pub use arch::stats::{Phase, Stats};
+pub use cnn::network::Network;
+pub use coordinator::Coordinator;

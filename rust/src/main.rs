@@ -1,0 +1,338 @@
+//! `nandspin` CLI — the L3 entrypoint.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation:
+//!
+//! * `breakdown`      — Fig. 16 latency/energy breakdown
+//! * `compare`        — Figs. 14–15 + Table 3 vs the five baselines
+//! * `sweep-capacity` — Fig. 13a
+//! * `sweep-bus`      — Fig. 13b
+//! * `area`           — Fig. 17 + §5.3 area overhead
+//! * `inspect-device` — §5.1 device/circuit numbers
+//! * `verify`         — bit-exact functional run vs golden executor
+//! * `run`            — batched synthetic inference with FPS report
+//!
+//! Argument parsing is hand-rolled (the build is offline; see
+//! Cargo.toml).
+
+use std::env;
+use std::process::ExitCode;
+
+use nandspin::arch::area::AreaModel;
+use nandspin::arch::config::ArchConfig;
+use nandspin::arch::stats::Phase;
+use nandspin::baselines::designs::BaselineKind;
+use nandspin::cnn::network::{alexnet, resnet50, small_cnn, vgg19, Network};
+use nandspin::cnn::ref_exec::{self, ModelParams};
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::Coordinator;
+use nandspin::device::llg::SwitchingModel;
+use nandspin::device::DeviceCosts;
+use nandspin::nvsim::NvSimModel;
+use nandspin::workload::{ImageBatch, PRECISION_GRID};
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: nandspin <command> [options]\n\
+         commands:\n\
+           breakdown       [--model resnet50|alexnet|vgg19] [--wbits N] [--ibits N]\n\
+           compare         [--metric perf|energy] [--table3]\n\
+           sweep-capacity  [--model ...]\n\
+           sweep-bus       [--model ...]\n\
+           area\n\
+           inspect-device\n\
+           verify          [--seed N]\n\
+           run             [--batch N] [--seed N]"
+    );
+    ExitCode::FAILURE
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+fn flags(args: &[String]) -> impl Fn(&str, &str) -> String + '_ {
+    move |key: &str, default: &str| {
+        args.windows(2)
+            .find(|w| w[0] == format!("--{key}"))
+            .map(|w| w[1].clone())
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn model_by_name(name: &str, bits: u8) -> Network {
+    match name {
+        "alexnet" => alexnet(bits),
+        "vgg19" => vgg19(bits),
+        "resnet50" => resnet50(bits),
+        "small" => small_cnn(bits),
+        other => {
+            eprintln!("unknown model '{other}', using resnet50");
+            resnet50(bits)
+        }
+    }
+}
+
+fn cmd_breakdown(args: &[String]) {
+    let get = flags(args);
+    let wbits: u8 = get("wbits", "8").parse().unwrap_or(8);
+    let ibits: u8 = get("ibits", "8").parse().unwrap_or(8);
+    let net = model_by_name(&get("model", "resnet50"), ibits);
+    let coord = Coordinator::paper();
+    let st = coord.analytic_stats(&net, wbits);
+    let m = coord.analytic_metrics(&net, wbits);
+    println!("== Fig. 16 breakdown: {} ⟨{wbits}:{ibits}⟩ @ 64 MB ==", net.name);
+    println!(
+        "latency {:.3} ms ({:.1} FPS), energy {:.3} mJ, {:.1} GOPS, {:.2} GOPS/mm²",
+        m.latency_ms,
+        m.fps(),
+        m.energy_mj,
+        m.gops(),
+        m.gops_per_mm2()
+    );
+    println!("{st}");
+}
+
+fn cmd_compare(args: &[String]) {
+    let get = flags(args);
+    let table3 = args.iter().any(|a| a == "--table3");
+    let coord = Coordinator::paper();
+    if table3 {
+        println!("== Table 3: comparison with related in-memory CNN accelerators ==");
+        println!(
+            "{:<12} {:<10} {:>12} {:>10} {:>10}",
+            "Accelerator", "Technology", "FPS", "Cap (MB)", "Area (mm²)"
+        );
+        let net = resnet50(8);
+        for kind in BaselineKind::ALL {
+            let b = kind.model();
+            let m = b.metrics(&net, 8);
+            println!(
+                "{:<12} {:<10} {:>12.1} {:>10} {:>10.1}",
+                b.name,
+                b.technology,
+                m.fps(),
+                64,
+                b.area_mm2
+            );
+        }
+        let m = coord.analytic_metrics(&net, 8);
+        println!(
+            "{:<12} {:<10} {:>12.1} {:>10} {:>10.1}",
+            "Proposed",
+            "NAND-SPIN",
+            m.fps(),
+            64,
+            m.area_mm2
+        );
+        return;
+    }
+    let metric = get("metric", "perf");
+    let models = ["alexnet", "vgg19", "resnet50"];
+    println!(
+        "== Fig. {}: {} normalised to area ==",
+        if metric == "energy" { 14 } else { 15 },
+        if metric == "energy" { "energy efficiency (GOPS/W/mm²)" } else { "performance (GOPS/mm²)" }
+    );
+    print!("{:<22}", "design/model");
+    for (w, i) in PRECISION_GRID {
+        print!("{:>12}", format!("<{w}:{i}>"));
+    }
+    println!();
+    for name in models {
+        for kind in BaselineKind::ALL {
+            let b = kind.model();
+            print!("{:<22}", format!("{}/{}", b.name, name));
+            for (w, i) in PRECISION_GRID {
+                let m = b.metrics(&model_by_name(name, i), w);
+                let v =
+                    if metric == "energy" { m.efficiency_per_mm2() } else { m.gops_per_mm2() };
+                print!("{v:>12.3}");
+            }
+            println!();
+        }
+        print!("{:<22}", format!("Proposed/{name}"));
+        for (w, i) in PRECISION_GRID {
+            let m = coord.analytic_metrics(&model_by_name(name, i), w);
+            let v = if metric == "energy" { m.efficiency_per_mm2() } else { m.gops_per_mm2() };
+            print!("{v:>12.3}");
+        }
+        println!();
+    }
+}
+
+fn cmd_sweep_capacity(args: &[String]) {
+    let get = flags(args);
+    let net = model_by_name(&get("model", "resnet50"), 8);
+    println!("== Fig. 13a: capacity vs peak performance / energy efficiency ==");
+    println!(
+        "{:>9} {:>12} {:>14} {:>16} {:>12}",
+        "cap (MB)", "FPS", "GOPS/mm²", "GOPS/W/mm²", "area (mm²)"
+    );
+    for cap in [8usize, 16, 32, 64, 128, 256] {
+        let mut cfg = ArchConfig::paper();
+        cfg.capacity_mb = cap;
+        let coord = Coordinator::new(cfg);
+        let m = coord.analytic_metrics(&net, 8);
+        println!(
+            "{:>9} {:>12.1} {:>14.3} {:>16.3} {:>12.1}",
+            cap,
+            m.fps(),
+            m.gops_per_mm2(),
+            m.efficiency_per_mm2(),
+            m.area_mm2
+        );
+    }
+}
+
+fn cmd_sweep_bus(args: &[String]) {
+    let get = flags(args);
+    let net = model_by_name(&get("model", "resnet50"), 8);
+    println!("== Fig. 13b: bus width vs peak performance / utilisation ==");
+    println!("{:>10} {:>12} {:>14} {:>14}", "bus (bit)", "FPS", "GOPS/mm²", "util (%)");
+    for bus in [32usize, 64, 128, 256, 512] {
+        let mut cfg = ArchConfig::paper();
+        cfg.bus_width_bits = bus;
+        let coord = Coordinator::new(cfg);
+        let m = coord.analytic_metrics(&net, 8);
+        // Utilisation: fraction of time the compute units are busy.
+        let st = coord.analytic_stats(&net, 8);
+        // Utilisation: fraction of time the compute units are busy, i.e.
+        // not stalled on data delivery (loads + inter-layer transfer).
+        let stalled = st[Phase::LoadData].latency_ns + st[Phase::DataTransfer].latency_ns;
+        let util = 1.0 - stalled / st.total_latency_ns();
+        println!(
+            "{:>10} {:>12.1} {:>14.3} {:>14.1}",
+            bus,
+            m.fps(),
+            m.gops_per_mm2(),
+            util * 100.0
+        );
+    }
+}
+
+fn cmd_area() {
+    let cfg = ArchConfig::paper();
+    let area = AreaModel::default();
+    let b = area.breakdown(&cfg);
+    println!("== Fig. 17 / §5.3 area ==");
+    println!("base memory array : {:>8.2} mm²", b.base_mm2());
+    println!(
+        "PIM add-on        : {:>8.2} mm²  ({:.1} % overhead)",
+        b.addon_mm2(),
+        100.0 * b.overhead_ratio()
+    );
+    for s in area.fig17_slices(&cfg) {
+        println!("  {:<18}: {:>6.2} mm²  ({:>4.1} %)", s.name, s.mm2, 100.0 * s.fraction);
+    }
+    println!("total             : {:>8.2} mm²  (Table 3: 64.5 mm²)", b.total_mm2());
+    println!("leakage           : {:>8.2} mW", NvSimModel::default().leakage_mw(&cfg));
+}
+
+fn cmd_inspect_device() {
+    let costs = DeviceCosts::default();
+    let sw = SwitchingModel::default();
+    println!("== §5.1 device / circuit operating point ==");
+    println!(
+        "erase  : {:>7.1} fJ/device, {:>5.2} ns/strip",
+        costs.erase_energy_per_device_fj, costs.erase_latency_ns
+    );
+    println!(
+        "program: {:>7.1} fJ/device, {:>5.2} ns/bit",
+        costs.program_energy_per_device_fj, costs.program_latency_per_bit_ns
+    );
+    println!(
+        "read   : {:>7.1} fJ/bit,    {:>5.2} ns",
+        costs.read_energy_per_bit_fj, costs.read_latency_ns
+    );
+    println!("row write latency: {:.1} ns (erase + 8 programs)", costs.row_write_latency_ns());
+    println!("STT critical (AP→P): {:>8.1} µA", sw.stt_critical_ua);
+    println!("STT critical (P→AP): {:>8.1} µA", sw.stt_reverse_critical_ua);
+    println!("SOT critical (strip): {:>7.1} µA", sw.sot_critical_ua);
+    println!(
+        "read current: {:>8.1} µA (disturb margin {:.1}×)",
+        sw.read_current_ua,
+        sw.read_disturb_margin()
+    );
+    println!("\nSPCSA sensing error rate under resistance variation (Monte-Carlo):");
+    println!("{:>8} {:>16} {:>16}", "sigma", "single-cell", "dual-cell (prior)");
+    for (sigma, r) in nandspin::device::variation::margin_sweep(
+        &nandspin::device::mtj::MtjParams::default(),
+        1,
+    ) {
+        println!("{:>7.0}% {:>16.2e} {:>16.2e}", sigma * 100.0, r.single_cell, r.dual_cell);
+    }
+}
+
+fn cmd_verify(args: &[String]) {
+    let get = flags(args);
+    let seed: u64 = get("seed", "42").parse().unwrap_or(42);
+    let net = small_cnn(4);
+    let params = ModelParams::random(&net, 4, seed);
+    let input = QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, seed + 1);
+    let golden = ref_exec::execute(&net, &params, &input);
+    let (outs, stats) = Coordinator::paper().functional_run(&net, &params, &input);
+    let ok = outs.iter().zip(&golden).all(|(a, b)| a == b);
+    println!("== functional verification: {} (seed {seed}) ==", net.name);
+    println!(
+        "PIM simulator vs golden executor: {}",
+        if ok { "BIT-EXACT MATCH" } else { "MISMATCH" }
+    );
+    println!(
+        "ops: {} ANDs, {} reads, {} program steps, {} erases",
+        stats.ops.ands, stats.ops.reads, stats.ops.program_steps, stats.ops.erases
+    );
+    println!("{stats}");
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+fn cmd_run(args: &[String]) {
+    let get = flags(args);
+    let batch: usize = get("batch", "8").parse().unwrap_or(8);
+    let seed: u64 = get("seed", "1").parse().unwrap_or(1);
+    let workers: usize = get("workers", "4").parse().unwrap_or(4);
+    let net = small_cnn(4);
+    let params = ModelParams::random(&net, 4, seed);
+    let images = ImageBatch::synthetic(&net, batch, seed);
+    let requests = images
+        .images
+        .iter()
+        .enumerate()
+        .map(|(i, img)| nandspin::coordinator::Request { id: i as u64, image: img.clone() })
+        .collect();
+    let report =
+        nandspin::coordinator::serve(&ArchConfig::paper(), &net, &params, requests, workers);
+    let sim_ms = report.total_sim_ms();
+    let sim_mj: f64 = report.completions.iter().map(|c| c.stats.total_energy_mj()).sum();
+    println!(
+        "== served {} requests on {} simulated PIM chips ({} worker threads) ==",
+        batch, workers, workers
+    );
+    println!(
+        "simulated: {:.4} ms/img, {:.4} mJ/img, {:.1} FPS aggregate",
+        sim_ms / batch as f64,
+        sim_mj / batch as f64,
+        report.sim_fps(workers)
+    );
+    println!(
+        "host wall-clock: {:.2} s ({:.1} img/s simulation speed)",
+        report.wall_seconds,
+        batch as f64 / report.wall_seconds
+    );
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { return usage() };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "breakdown" => cmd_breakdown(rest),
+        "compare" => cmd_compare(rest),
+        "sweep-capacity" => cmd_sweep_capacity(rest),
+        "sweep-bus" => cmd_sweep_bus(rest),
+        "area" => cmd_area(),
+        "inspect-device" => cmd_inspect_device(),
+        "verify" => cmd_verify(rest),
+        "run" => cmd_run(rest),
+        _ => return usage(),
+    }
+    ExitCode::SUCCESS
+}

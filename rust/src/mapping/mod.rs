@@ -1,0 +1,46 @@
+//! The paper's data-mapping scheme (§4.1–4.2): bit-planes across
+//! subarrays, weight reuse through the subarray buffer, cross-writing
+//! partial-sum placement, and the parallelism bookkeeping the scheduler
+//! uses.
+
+pub mod tiling;
+
+pub use tiling::{ConvMapping, Tiling};
+
+use crate::arch::config::ArchConfig;
+
+/// How the subarray pool is partitioned between convolution (bit-plane
+/// holders) and accumulation (cross-writing partial-sum sinks).
+///
+/// The cross-writing scheme (Fig. 12) pairs producer subarrays with
+/// accumulation subarrays so partial sums are written in parallel
+/// "without cache operations"; we model that as an even split, which is
+/// the steady-state of the paper's Period-1/Period-2 pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolSplit {
+    /// Subarrays holding input bit-planes and running AND/bit-count.
+    pub compute: usize,
+    /// Subarrays accumulating partial sums via in-memory addition.
+    pub accumulate: usize,
+}
+
+impl PoolSplit {
+    /// Split the configured pool.
+    pub fn of(cfg: &ArchConfig) -> Self {
+        let total = cfg.total_subarrays();
+        Self { compute: total / 2, accumulate: total - total / 2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_pool() {
+        let cfg = ArchConfig::paper();
+        let s = PoolSplit::of(&cfg);
+        assert_eq!(s.compute + s.accumulate, cfg.total_subarrays());
+        assert!(s.compute >= 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiling of feature-map bit-planes onto subarrays and the conv-layer
+//! parallelism calculation.
+
+use crate::arch::config::ArchConfig;
+use crate::cnn::layer::Shape;
+
+/// Greatest common divisor.
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Tiling of one H×W bit-plane over `rows × cols` subarrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiling {
+    /// Column tiles (width direction).
+    pub tiles_w: usize,
+    /// Row tiles (height direction).
+    pub tiles_h: usize,
+}
+
+impl Tiling {
+    /// Tile an `h × w` bit-plane. A `kw−1`-column halo is kept per column
+    /// tile so windows never straddle tiles.
+    pub fn of(h: usize, w: usize, kw: usize, cfg: &ArchConfig) -> Self {
+        let usable_w = cfg.cols.saturating_sub(kw.saturating_sub(1)).max(1);
+        Self { tiles_w: w.div_ceil(usable_w.min(w)), tiles_h: h.div_ceil(cfg.rows) }
+    }
+
+    /// Total tiles (subarrays per bit-plane).
+    pub fn count(&self) -> usize {
+        self.tiles_w * self.tiles_h
+    }
+}
+
+/// Complete mapping of one convolution layer onto the pool.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvMapping {
+    /// Tiling of each input bit-plane.
+    pub tiling: Tiling,
+    /// Subarrays needed to hold one copy of the input bit-planes
+    /// (`in_c × ibits × tiles`).
+    pub plane_units: usize,
+    /// Replication factor: how many copies of the plane set run in
+    /// parallel, each handling a slice of the output channels.
+    pub replication: usize,
+    /// Filters processed sequentially per replica: `⌈out_c / R⌉`.
+    pub serial_filters: usize,
+    /// Sliding periods actually used (`kw / gcd(kw, stride)`).
+    pub periods: usize,
+}
+
+impl ConvMapping {
+    /// Map a conv layer (`in_shape`, kernel `kh×kw`, `stride`) with
+    /// `ibits`-bit activations and `out_c` filters onto `avail`
+    /// compute subarrays.
+    pub fn plan(
+        cfg: &ArchConfig,
+        in_shape: Shape,
+        out_c: usize,
+        kw: usize,
+        stride: usize,
+        ibits: u8,
+        avail: usize,
+    ) -> Self {
+        let (in_c, h, w) = in_shape;
+        let tiling = Tiling::of(h, w, kw, cfg);
+        let plane_units = (in_c * ibits as usize * tiling.count()).max(1);
+        let replication = (avail / plane_units).clamp(1, out_c.max(1));
+        let serial_filters = out_c.div_ceil(replication);
+        let periods = kw / gcd(kw, stride.max(1));
+        Self { tiling, plane_units, replication, serial_filters, periods }
+    }
+
+    /// Subarrays actually busy computing this layer.
+    pub fn active_units(&self) -> usize {
+        self.plane_units * self.replication
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ArchConfig;
+
+    #[test]
+    fn small_plane_fits_one_subarray() {
+        let cfg = ArchConfig::paper();
+        let t = Tiling::of(28, 28, 3, &cfg);
+        assert_eq!(t.count(), 1);
+    }
+
+    #[test]
+    fn wide_plane_tiles_in_width() {
+        let cfg = ArchConfig::paper();
+        let t = Tiling::of(224, 224, 3, &cfg);
+        assert_eq!(t.tiles_h, 1);
+        assert_eq!(t.tiles_w, 2); // 224 / (128−2) → 2
+    }
+
+    #[test]
+    fn tall_plane_tiles_in_height() {
+        let cfg = ArchConfig::paper();
+        let t = Tiling::of(512, 64, 3, &cfg);
+        assert_eq!(t.tiles_h, 2);
+    }
+
+    #[test]
+    fn periods_account_for_stride() {
+        let cfg = ArchConfig::paper();
+        // stride 1: all kw periods; stride 4 on kw=11 → gcd 1 → 11;
+        // stride 2 on kw=2 → 1 period.
+        let m = ConvMapping::plan(&cfg, (3, 224, 224), 64, 11, 4, 8, 1 << 13);
+        assert_eq!(m.periods, 11);
+        let m2 = ConvMapping::plan(&cfg, (3, 224, 224), 64, 2, 2, 8, 1 << 13);
+        assert_eq!(m2.periods, 1);
+    }
+
+    #[test]
+    fn replication_uses_available_pool() {
+        let cfg = ArchConfig::paper();
+        // 3 channels × 8 bits × 2 tiles = 48 plane units; 8192 avail →
+        // replication capped by out_c.
+        let m = ConvMapping::plan(&cfg, (3, 224, 224), 64, 3, 1, 8, 8192);
+        assert_eq!(m.plane_units, 48);
+        assert_eq!(m.replication, 64, "capped at out_c");
+        assert_eq!(m.serial_filters, 1);
+        // Scarce pool → replication 1, filters serial.
+        let m2 = ConvMapping::plan(&cfg, (3, 224, 224), 64, 3, 1, 8, 50);
+        assert_eq!(m2.replication, 1);
+        assert_eq!(m2.serial_filters, 64);
+    }
+}

@@ -1,0 +1,114 @@
+//! Shared data-bus model with width-limited throughput.
+//!
+//! The paper's §5.2 sensitivity study (Fig. 13b) shows peak performance
+//! scaling linearly with the bus width because the bus feeds weight data
+//! to the subarray buffers; this model reproduces that behaviour: a
+//! transfer of `n` bits takes `⌈n / width⌉` bus cycles.
+
+
+use crate::arch::config::ArchConfig;
+use crate::arch::stats::{Phase, Stats};
+
+/// Bus scope: in-mat (short wires) or global/inter-mat (long wires).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BusScope {
+    /// In-mat bus connecting subarrays with the local buffer.
+    Local,
+    /// Global bus connecting mats with the global buffer and I/O.
+    Global,
+}
+
+/// A width-limited shared bus.
+#[derive(Debug, Clone)]
+pub struct Bus {
+    /// Bus width in bits.
+    pub width_bits: usize,
+    /// Cycle time in ns.
+    pub cycle_ns: f64,
+    /// Energy per transferred bit in fJ.
+    pub energy_per_bit_fj: f64,
+    scope: BusScope,
+}
+
+impl Bus {
+    /// In-mat bus per the configuration.
+    pub fn local(cfg: &ArchConfig) -> Self {
+        Self {
+            width_bits: cfg.bus_width_bits,
+            cycle_ns: cfg.costs.bus_cycle_ns,
+            energy_per_bit_fj: cfg.costs.bus_energy_per_bit_fj,
+            scope: BusScope::Local,
+        }
+    }
+
+    /// Global (inter-mat / I/O) bus per the configuration.
+    pub fn global(cfg: &ArchConfig) -> Self {
+        Self {
+            width_bits: cfg.bus_width_bits,
+            cycle_ns: cfg.costs.bus_cycle_ns,
+            energy_per_bit_fj: cfg.costs.global_bus_energy_per_bit_fj,
+            scope: BusScope::Global,
+        }
+    }
+
+    /// Scope of this bus.
+    pub fn scope(&self) -> BusScope {
+        self.scope
+    }
+
+    /// Cycles needed to move `bits` bits.
+    pub fn cycles(&self, bits: u64) -> u64 {
+        bits.div_ceil(self.width_bits as u64)
+    }
+
+    /// Latency in ns to move `bits` bits.
+    pub fn latency_ns(&self, bits: u64) -> f64 {
+        self.cycles(bits) as f64 * self.cycle_ns
+    }
+
+    /// Charge a transfer of `bits` bits.
+    pub fn transfer(&self, bits: u64, stats: &mut Stats, phase: Phase) {
+        match self.scope {
+            BusScope::Local => stats.ops.local_bus_bits += bits,
+            BusScope::Global => stats.ops.global_bus_bits += bits,
+        }
+        stats.record(phase, self.energy_per_bit_fj * bits as f64, self.latency_ns(bits));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_round_up() {
+        let cfg = ArchConfig::paper();
+        let bus = Bus::local(&cfg);
+        assert_eq!(bus.cycles(1), 1);
+        assert_eq!(bus.cycles(128), 1);
+        assert_eq!(bus.cycles(129), 2);
+        assert_eq!(bus.cycles(0), 0);
+    }
+
+    #[test]
+    fn wider_bus_is_faster() {
+        let mut cfg = ArchConfig::paper();
+        cfg.bus_width_bits = 32;
+        let narrow = Bus::local(&cfg);
+        cfg.bus_width_bits = 256;
+        let wide = Bus::local(&cfg);
+        assert!(wide.latency_ns(1024) < narrow.latency_ns(1024));
+    }
+
+    #[test]
+    fn global_bus_costs_more_energy() {
+        let cfg = ArchConfig::paper();
+        let mut s1 = Stats::default();
+        let mut s2 = Stats::default();
+        Bus::local(&cfg).transfer(1000, &mut s1, Phase::DataTransfer);
+        Bus::global(&cfg).transfer(1000, &mut s2, Phase::DataTransfer);
+        assert!(s2.total_energy_fj() > s1.total_energy_fj());
+        assert_eq!(s1.ops.local_bus_bits, 1000);
+        assert_eq!(s2.ops.global_bus_bits, 1000);
+    }
+}

@@ -1,0 +1,92 @@
+//! Mat level (Fig. 2 / Fig. 3a): a grid of subarrays sharing a local data
+//! buffer and an in-mat bus.
+
+pub mod bus;
+
+pub use bus::Bus;
+
+use crate::arch::config::ArchConfig;
+use crate::arch::stats::{Phase, Stats};
+use crate::subarray::Subarray;
+
+/// One mat: `subarrays_per_mat` subarrays, a local buffer and a shared
+/// in-mat bus.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    /// Subarrays, row-major over the (4×4) grid.
+    pub subarrays: Vec<Subarray>,
+    /// In-mat bus.
+    pub bus: Bus,
+}
+
+impl Mat {
+    /// Build a mat per `cfg`.
+    pub fn new(cfg: &ArchConfig) -> Self {
+        let n = cfg.subarrays_in_mat();
+        let subarrays = (0..n)
+            .map(|_| Subarray::new(cfg.rows, cfg.cols, cfg.buffer_rows, cfg.costs))
+            .collect();
+        Self { bus: Bus::local(cfg), subarrays }
+    }
+
+    /// Number of subarrays.
+    pub fn len(&self) -> usize {
+        self.subarrays.len()
+    }
+
+    /// True if the mat has no subarrays (never for valid configs).
+    pub fn is_empty(&self) -> bool {
+        self.subarrays.is_empty()
+    }
+
+    /// Move `bits`-wide data from one subarray's counters/SAs to another
+    /// subarray over the in-mat bus (the paper's "in-mat data movement"
+    /// of partial sums). Only the cost is charged here; the functional
+    /// payload travels in the coordinator, which owns both endpoints.
+    pub fn transfer(&mut self, bits: u64, stats: &mut Stats, phase: Phase) {
+        self.bus.transfer(bits, stats, phase);
+    }
+
+    /// Split-borrow two distinct subarrays mutably.
+    ///
+    /// # Panics
+    /// If `a == b` or out of range.
+    pub fn pair_mut(&mut self, a: usize, b: usize) -> (&mut Subarray, &mut Subarray) {
+        assert_ne!(a, b, "pair_mut needs distinct subarrays");
+        if a < b {
+            let (lo, hi) = self.subarrays.split_at_mut(b);
+            (&mut lo[a], &mut hi[0])
+        } else {
+            let (lo, hi) = self.subarrays.split_at_mut(a);
+            (&mut hi[0], &mut lo[b])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_has_grid_of_subarrays() {
+        let cfg = ArchConfig::paper();
+        let m = Mat::new(&cfg);
+        assert_eq!(m.len(), 16);
+        assert_eq!(m.subarrays[0].num_rows(), 256);
+    }
+
+    #[test]
+    fn pair_mut_borrows_disjoint() {
+        let cfg = ArchConfig::paper();
+        let mut m = Mat::new(&cfg);
+        let mut st = Stats::default();
+        let (a, b) = m.pair_mut(0, 5);
+        a.buffer_write(0, 1, &mut st, Phase::Other);
+        b.buffer_write(0, 2, &mut st, Phase::Other);
+        assert_eq!(m.subarrays[0].buffer.read(0), 1);
+        assert_eq!(m.subarrays[5].buffer.read(0), 2);
+        let (b2, a2) = m.pair_mut(5, 0);
+        assert_eq!(b2.buffer.read(0), 2);
+        assert_eq!(a2.buffer.read(0), 1);
+    }
+}

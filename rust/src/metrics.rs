@@ -1,0 +1,79 @@
+//! Derived architecture-level metrics: the quantities the paper's
+//! evaluation plots (peak GOPS, GOPS/mm², frames/s, GOPS/W, efficiency
+//! normalised to area).
+
+
+use crate::arch::stats::Stats;
+
+/// Evaluation-ready metric bundle for one accelerator run/design point.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Descriptive label (design + model + precision).
+    pub label: String,
+    /// Total operations performed (MAC counted as 2 ops, paper style).
+    pub ops: f64,
+    /// End-to-end latency in ms (one inference).
+    pub latency_ms: f64,
+    /// Energy in mJ (one inference).
+    pub energy_mj: f64,
+    /// Chip area in mm².
+    pub area_mm2: f64,
+}
+
+impl Metrics {
+    /// From a stats record plus op count and area.
+    pub fn from_stats(label: impl Into<String>, ops: f64, stats: &Stats, area_mm2: f64) -> Self {
+        Self {
+            label: label.into(),
+            ops,
+            latency_ms: stats.total_latency_ms(),
+            energy_mj: stats.total_energy_mj(),
+            area_mm2,
+        }
+    }
+
+    /// Throughput in frames per second (single-frame latency inverse).
+    pub fn fps(&self) -> f64 {
+        1000.0 / self.latency_ms
+    }
+
+    /// Performance in GOPS.
+    pub fn gops(&self) -> f64 {
+        self.ops / (self.latency_ms * 1e-3) / 1e9
+    }
+
+    /// Performance normalised to area — Fig. 15's y-axis (GOPS/mm²).
+    pub fn gops_per_mm2(&self) -> f64 {
+        self.gops() / self.area_mm2
+    }
+
+    /// Energy efficiency in GOPS/W.
+    pub fn gops_per_watt(&self) -> f64 {
+        let watts = self.energy_mj * 1e-3 / (self.latency_ms * 1e-3);
+        self.gops() / watts
+    }
+
+    /// Energy efficiency normalised to area — Fig. 14's y-axis
+    /// (GOPS/W/mm²).
+    pub fn efficiency_per_mm2(&self) -> f64 {
+        self.gops_per_watt() / self.area_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::stats::Phase;
+
+    #[test]
+    fn derived_metrics_are_consistent() {
+        let mut s = Stats::default();
+        s.record(Phase::Convolution, 1e12, 1e6); // 1 mJ, 1 ms
+        let m = Metrics::from_stats("test", 2e9, &s, 10.0);
+        assert!((m.fps() - 1000.0).abs() < 1e-9);
+        assert!((m.gops() - 2000.0).abs() < 1e-6);
+        assert!((m.gops_per_mm2() - 200.0).abs() < 1e-6);
+        // 1 mJ in 1 ms = 1 W → GOPS/W = 2000.
+        assert!((m.gops_per_watt() - 2000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,224 @@
+//! NVSim-like analytic estimator for array + periphery area and static
+//! power.
+//!
+//! The paper feeds its SPICE-characterised macros into a modified NVSim
+//! to obtain array-level latency/energy/area. Dynamic per-op scalars live
+//! in [`crate::device::energy`]; this module reproduces the *structural*
+//! part: bottom-up area composition from cells, per-subarray periphery,
+//! per-mat and per-bank resources, plus the PIM add-on circuits.
+//!
+//! Unit constants are *effective calibrated* values (µm² at 45 nm),
+//! chosen so the paper configuration (64 MB, 4×4×4×4 hierarchy, 256×128
+//! subarrays) lands on the published end-points:
+//!
+//! * total area ≈ 64.5 mm² (Table 3),
+//! * PIM add-on ≈ 8.9 % of the base memory array (§5.3 "Area"),
+//! * add-on split ≈ 47 % computation units / 4 % buffer / 21 %
+//!   controller+mux / 28 % other circuits (Fig. 17).
+//!
+//! Everything scales structurally (per bit / per column / per subarray /
+//! per mat / per bank), so capacity and bus sweeps re-use the same model.
+
+
+use crate::arch::config::ArchConfig;
+
+/// Feature size in µm (45 nm PDK).
+pub const FEATURE_UM: f64 = 0.045;
+
+/// Effective NAND-SPIN cell size in F² (1T-1MTJ with shared heavy-metal
+/// strip; the NAND-style organisation is what keeps this low — §2.1).
+pub const CELL_F2: f64 = 20.0;
+
+/// Calibrated per-structure unit areas (µm², 45 nm effective).
+#[derive(Debug, Clone, Copy)]
+pub struct UnitAreas {
+    /// Row decoder + word-line drivers, per subarray.
+    pub row_decoder: f64,
+    /// Standard sense path (pre-charge SA per column), per subarray.
+    pub sense_amps: f64,
+    /// Write drivers + column select, per subarray.
+    pub write_drivers: f64,
+    /// Local buffer + in-mat bus, per mat.
+    pub mat_overhead: f64,
+    /// Global buffer + controller + I/O, per bank.
+    pub bank_overhead: f64,
+    /// PIM add-on: one bit-counter unit (counter + shift + write-back),
+    /// per column.
+    pub bitcount_unit: f64,
+    /// PIM add-on: weight buffer, per subarray.
+    pub weight_buffer: f64,
+    /// PIM add-on: controller extensions + output multiplexers,
+    /// per subarray.
+    pub ctrl_mux: f64,
+    /// PIM add-on: SPCSA extension (FU input, dual-mode sensing) and
+    /// misc. wiring, per column.
+    pub spcsa_extra: f64,
+}
+
+impl Default for UnitAreas {
+    fn default() -> Self {
+        Self {
+            row_decoder: 400.0,
+            sense_amps: 900.0,
+            write_drivers: 300.0,
+            mat_overhead: 6000.0,
+            bank_overhead: 80_000.0,
+            bitcount_unit: 1.183,
+            weight_buffer: 12.9,
+            ctrl_mux: 67.6,
+            spcsa_extra: 0.705,
+        }
+    }
+}
+
+/// Area breakdown in mm².
+#[derive(Debug, Clone, Copy)]
+pub struct AreaBreakdown {
+    /// MTJ cell array.
+    pub cells_mm2: f64,
+    /// Base memory periphery (decoders, SAs, drivers, mat/bank resources).
+    pub base_periphery_mm2: f64,
+    /// PIM add-on: bit-counter computation units.
+    pub addon_compute_mm2: f64,
+    /// PIM add-on: weight buffers.
+    pub addon_buffer_mm2: f64,
+    /// PIM add-on: controller extensions + multiplexers.
+    pub addon_ctrl_mux_mm2: f64,
+    /// PIM add-on: SPCSA extensions and other circuits.
+    pub addon_other_mm2: f64,
+}
+
+impl AreaBreakdown {
+    /// Base (memory-only) area.
+    pub fn base_mm2(&self) -> f64 {
+        self.cells_mm2 + self.base_periphery_mm2
+    }
+
+    /// Total PIM add-on area.
+    pub fn addon_mm2(&self) -> f64 {
+        self.addon_compute_mm2
+            + self.addon_buffer_mm2
+            + self.addon_ctrl_mux_mm2
+            + self.addon_other_mm2
+    }
+
+    /// Total chip area.
+    pub fn total_mm2(&self) -> f64 {
+        self.base_mm2() + self.addon_mm2()
+    }
+
+    /// Add-on as a fraction of the base memory array (§5.3: ~8.9 %).
+    pub fn overhead_ratio(&self) -> f64 {
+        self.addon_mm2() / self.base_mm2()
+    }
+
+    /// Fig. 17 fractions of the add-on: (compute, buffer, ctrl+mux, other).
+    pub fn addon_fractions(&self) -> (f64, f64, f64, f64) {
+        let a = self.addon_mm2();
+        (
+            self.addon_compute_mm2 / a,
+            self.addon_buffer_mm2 / a,
+            self.addon_ctrl_mux_mm2 / a,
+            self.addon_other_mm2 / a,
+        )
+    }
+}
+
+/// The NVSim-like model.
+#[derive(Debug, Clone, Default)]
+pub struct NvSimModel {
+    /// Unit-area constants.
+    pub units: UnitAreas,
+}
+
+impl NvSimModel {
+    /// Estimate the area breakdown for `cfg`.
+    pub fn area(&self, cfg: &ArchConfig) -> AreaBreakdown {
+        let u = &self.units;
+        let bits = (cfg.capacity_mb * 1024 * 1024 * 8) as f64;
+        let subarrays = cfg.total_subarrays() as f64;
+        let mats = (cfg.num_banks() * cfg.mats_in_bank()) as f64;
+        let banks = cfg.num_banks() as f64;
+        let cols = subarrays * cfg.cols as f64;
+
+        let um2_to_mm2 = 1e-6;
+        let cell_um2 = CELL_F2 * FEATURE_UM * FEATURE_UM;
+
+        // Bus width scales the wiring part of mat/bank overheads
+        // (relative to the 128-bit reference point).
+        let bus_scale = 0.5 + 0.5 * cfg.bus_width_bits as f64 / 128.0;
+
+        let cells_mm2 = bits * cell_um2 * um2_to_mm2;
+        let base_periphery_mm2 = (subarrays
+            * (u.row_decoder + u.sense_amps + u.write_drivers)
+            + mats * u.mat_overhead * bus_scale
+            + banks * u.bank_overhead * bus_scale)
+            * um2_to_mm2;
+
+        // Weight buffer scales with its configured rows (16-row reference).
+        let buf_scale = cfg.buffer_rows as f64 / 16.0;
+
+        AreaBreakdown {
+            cells_mm2,
+            base_periphery_mm2,
+            addon_compute_mm2: cols * u.bitcount_unit * um2_to_mm2,
+            addon_buffer_mm2: subarrays * u.weight_buffer * buf_scale * um2_to_mm2,
+            addon_ctrl_mux_mm2: subarrays * u.ctrl_mux * um2_to_mm2,
+            addon_other_mm2: cols * u.spcsa_extra * um2_to_mm2,
+        }
+    }
+
+    /// Static (leakage) power in mW — NVM cells leak nothing; periphery
+    /// leaks per subarray.
+    pub fn leakage_mw(&self, cfg: &ArchConfig) -> f64 {
+        cfg.total_subarrays() as f64 * cfg.costs.leakage_uw_per_subarray * 1e-3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_lands_on_published_endpoints() {
+        let m = NvSimModel::default();
+        let a = m.area(&ArchConfig::paper());
+        // Table 3: 64.5 mm² (±5 %).
+        assert!((a.total_mm2() - 64.5).abs() / 64.5 < 0.05, "total {}", a.total_mm2());
+        // §5.3: ~8.9 % overhead (±1 pt).
+        assert!((a.overhead_ratio() - 0.089).abs() < 0.01, "ratio {}", a.overhead_ratio());
+        // Fig. 17: 47 / 4 / 21 / 28 (±3 pts each).
+        let (c, b, m_, o) = a.addon_fractions();
+        assert!((c - 0.47).abs() < 0.03, "compute {c}");
+        assert!((b - 0.04).abs() < 0.03, "buffer {b}");
+        assert!((m_ - 0.21).abs() < 0.03, "ctrl+mux {m_}");
+        assert!((o - 0.28).abs() < 0.03, "other {o}");
+    }
+
+    #[test]
+    fn area_scales_with_capacity() {
+        let m = NvSimModel::default();
+        let mut cfg = ArchConfig::paper();
+        cfg.capacity_mb = 32;
+        let half = m.area(&cfg).total_mm2();
+        cfg.capacity_mb = 64;
+        let full = m.area(&cfg).total_mm2();
+        assert!((full / half - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn wider_bus_adds_area() {
+        let m = NvSimModel::default();
+        let mut cfg = ArchConfig::paper();
+        cfg.bus_width_bits = 512;
+        let wide = m.area(&cfg).total_mm2();
+        assert!(wide > m.area(&ArchConfig::paper()).total_mm2());
+    }
+
+    #[test]
+    fn leakage_positive_and_small() {
+        let m = NvSimModel::default();
+        let l = m.leakage_mw(&ArchConfig::paper());
+        assert!(l > 0.0 && l < 1000.0, "{l} mW");
+    }
+}

@@ -1,0 +1,114 @@
+//! PJRT runtime: load the AOT-lowered JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from Rust.
+//!
+//! This is the golden numeric path of the three-layer architecture:
+//! Python runs once at build time to author + lower the model; the Rust
+//! coordinator loads the HLO text, compiles it on the PJRT CPU client,
+//! and executes it with concrete inputs — Python is never on the
+//! inference path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::cnn::ref_exec::WideTensor;
+use crate::cnn::tensor::{Kernel4, QTensor};
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// The PJRT runtime: one CPU client, many compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Artifact { exe, name: name.to_string() })
+    }
+}
+
+impl Artifact {
+    /// Execute with int32 literals; returns the tuple elements as flat
+    /// i32 vectors.
+    pub fn run_i32(&self, inputs: &[ArgI32]) -> Result<Vec<Vec<i32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|a| {
+                let lit = xla::Literal::vec1(&a.data);
+                let dims: Vec<i64> = a.dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshaping literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True: unpack every element.
+        let tuple = result.to_tuple()?;
+        tuple.into_iter().map(|l| Ok(l.to_vec::<i32>()?)).collect()
+    }
+}
+
+/// A shaped int32 argument.
+#[derive(Debug, Clone)]
+pub struct ArgI32 {
+    /// Flat row-major data.
+    pub data: Vec<i32>,
+    /// Dimensions.
+    pub dims: Vec<usize>,
+}
+
+impl ArgI32 {
+    /// From a quantized activation tensor (CHW).
+    pub fn from_qtensor(t: &QTensor) -> Self {
+        Self {
+            data: t.data().iter().map(|&v| v as i32).collect(),
+            dims: vec![t.c, t.h, t.w],
+        }
+    }
+
+    /// From a kernel tensor (OIHW).
+    pub fn from_kernel(k: &Kernel4) -> Self {
+        Self {
+            data: k.data().iter().map(|&v| v as i32).collect(),
+            dims: vec![k.oc, k.ic, k.kh, k.kw],
+        }
+    }
+
+    /// From a wide tensor (values must fit i32).
+    pub fn from_wide(t: &WideTensor) -> Self {
+        Self {
+            data: t.data.iter().map(|&v| i32::try_from(v).expect("value fits i32")).collect(),
+            dims: vec![t.c, t.h, t.w],
+        }
+    }
+
+    /// A flat vector.
+    pub fn vec(data: Vec<i32>) -> Self {
+        let dims = vec![data.len()];
+        Self { data, dims }
+    }
+}

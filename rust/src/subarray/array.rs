@@ -1,0 +1,334 @@
+//! The subarray functional + timing model: memory-mode ops
+//! (erase / program / read) and compute-mode ops (AND + bit-count),
+//! each charging the calibrated device costs into a [`Stats`] record.
+
+
+use crate::arch::stats::{Phase, Stats};
+use crate::device::energy::DeviceCosts;
+use crate::device::nand_spin::MTJS_PER_DEVICE;
+
+use super::bitcounter::BitCounterBank;
+use super::buffer::WeightBuffer;
+
+/// One NAND-SPIN subarray (paper: 256 rows × 128 columns).
+#[derive(Debug, Clone)]
+pub struct Subarray {
+    /// MTJ rows; bit *j* of `rows[r]` is the stored bit at (row r, col j).
+    rows: Vec<u128>,
+    /// Per-column bit counters.
+    pub counters: BitCounterBank,
+    /// Weight / scratch buffer.
+    pub buffer: WeightBuffer,
+    cols: usize,
+    col_mask: u128,
+    costs: DeviceCosts,
+}
+
+impl Subarray {
+    /// Build a subarray of `rows × cols` MTJs with the given cost scalars.
+    ///
+    /// # Panics
+    /// If `cols` is 0 or > 128 or `rows` is not a multiple of 8.
+    pub fn new(rows: usize, cols: usize, buffer_rows: usize, costs: DeviceCosts) -> Self {
+        assert!(cols > 0 && cols <= 128, "cols must fit a u128 row word");
+        assert_eq!(rows % MTJS_PER_DEVICE, 0, "rows must be whole strips");
+        let col_mask = if cols == 128 { u128::MAX } else { (1u128 << cols) - 1 };
+        Self {
+            rows: vec![0; rows],
+            counters: BitCounterBank::new(cols),
+            buffer: WeightBuffer::new(buffer_rows),
+            cols,
+            col_mask,
+            costs,
+        }
+    }
+
+    /// Number of MTJ rows.
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of strip-rows (rows / 8).
+    pub fn strip_rows(&self) -> usize {
+        self.rows.len() / MTJS_PER_DEVICE
+    }
+
+    /// Device cost scalars in force.
+    pub fn costs(&self) -> &DeviceCosts {
+        &self.costs
+    }
+
+    // ----------------------------------------------------------------
+    // Memory mode (Fig. 5a–c, Table 1)
+    // ----------------------------------------------------------------
+
+    /// SOT erase of strip-row `strip`: clears the 8 MTJ rows
+    /// `8·strip .. 8·strip+8` across all columns.
+    pub fn erase_strip(&mut self, strip: usize, stats: &mut Stats, phase: Phase) {
+        let base = strip * MTJS_PER_DEVICE;
+        for r in base..base + MTJS_PER_DEVICE {
+            self.rows[r] = 0;
+        }
+        stats.ops.erases += 1;
+        stats.record(
+            phase,
+            self.costs.row_erase_energy_fj(self.cols),
+            self.costs.erase_latency_ns,
+        );
+    }
+
+    /// STT program step: within strip-row `strip`, program MTJ position
+    /// `pos` (0..8) across all columns whose bit in `bits` is `1`
+    /// (the column signals `C_x` of Table 1). Unipolar: only sets bits.
+    pub fn program_row(
+        &mut self,
+        strip: usize,
+        pos: usize,
+        bits: u128,
+        stats: &mut Stats,
+        phase: Phase,
+    ) {
+        assert!(pos < MTJS_PER_DEVICE);
+        let bits = bits & self.col_mask;
+        let r = strip * MTJS_PER_DEVICE + pos;
+        self.rows[r] |= bits;
+        let switched = bits.count_ones() as u64;
+        stats.ops.program_steps += 1;
+        stats.ops.programmed_bits += switched;
+        stats.record(
+            phase,
+            self.costs.program_energy_per_bit_fj() * switched as f64,
+            self.costs.program_latency_per_bit_ns,
+        );
+    }
+
+    /// Full row-of-devices write (§3.2): one erase + up to 8 program
+    /// steps, writing `data[pos]` into MTJ position `pos` of every device
+    /// in strip-row `strip`.
+    ///
+    /// Program steps whose column word is all-zero are skipped: with every
+    /// `C_x` blocked no STT current flows anywhere, so the controller can
+    /// elide the word-line cycle entirely (a standard NAND-style
+    /// optimisation; the erase already left those MTJs in the `0` state).
+    pub fn write_strip(
+        &mut self,
+        strip: usize,
+        data: &[u128; MTJS_PER_DEVICE],
+        stats: &mut Stats,
+        phase: Phase,
+    ) {
+        self.erase_strip(strip, stats, phase);
+        for (pos, &bits) in data.iter().enumerate() {
+            if bits & self.col_mask != 0 {
+                self.program_row(strip, pos, bits, stats, phase);
+            }
+        }
+    }
+
+    /// Convenience: write one logical MTJ row (erase-modify-write of its
+    /// strip). Real hardware would schedule whole-strip writes; the
+    /// coordinator only uses this on scratch rows it owns exclusively, so
+    /// the read-back is free of side effects but the *cost* charged is a
+    /// full strip rewrite, keeping the accounting honest.
+    pub fn write_row(&mut self, row: usize, bits: u128, stats: &mut Stats, phase: Phase) {
+        let strip = row / MTJS_PER_DEVICE;
+        let pos = row % MTJS_PER_DEVICE;
+        let base = strip * MTJS_PER_DEVICE;
+        let mut data = [0u128; MTJS_PER_DEVICE];
+        for (i, d) in data.iter_mut().enumerate() {
+            *d = self.rows[base + i];
+        }
+        data[pos] = bits & self.col_mask;
+        self.write_strip(strip, &data, stats, phase);
+    }
+
+    /// Read MTJ row `row` via the SPCSAs (Fig. 5c): returns the stored
+    /// bits of all columns.
+    pub fn read_row(&self, row: usize, stats: &mut Stats, phase: Phase) -> u128 {
+        stats.ops.reads += 1;
+        stats.record(
+            phase,
+            self.costs.read_energy_per_bit_fj * self.cols as f64,
+            self.costs.read_latency_ns,
+        );
+        self.rows[row]
+    }
+
+    /// Peek without charging costs (testing / debugging only).
+    pub fn peek_row(&self, row: usize) -> u128 {
+        self.rows[row]
+    }
+
+    // ----------------------------------------------------------------
+    // Compute mode (Fig. 5d)
+    // ----------------------------------------------------------------
+
+    /// Row-parallel AND (Fig. 5d): the SAs sense row `row` with the `FU`
+    /// inputs driven per-column by `operand`; returns the 128 SA outputs.
+    /// Does *not* touch the counters — callers decide whether to count.
+    pub fn and_row(&self, row: usize, operand: u128, stats: &mut Stats, phase: Phase) -> u128 {
+        stats.ops.ands += 1;
+        stats.record(
+            phase,
+            self.costs.and_energy_per_bit_fj * self.cols as f64,
+            self.costs.and_latency_ns,
+        );
+        self.rows[row] & operand & self.col_mask
+    }
+
+    /// AND row `row` against buffer row `buf_row` and accumulate the SA
+    /// outputs into the bit-counters — the paper's fused convolution step.
+    pub fn and_count(&mut self, row: usize, buf_row: usize, stats: &mut Stats, phase: Phase) {
+        let operand = self.buffer.read(buf_row);
+        stats.ops.buffer_accesses += 1;
+        stats.record(
+            phase,
+            self.costs.buffer_energy_per_bit_fj * self.cols as f64,
+            0.0, // buffer read overlaps the SA pre-charge
+        );
+        let out = self.and_row(row, operand, stats, phase);
+        self.count(out, stats, phase);
+    }
+
+    /// Read row `row` (FU high — plain read) and accumulate into counters;
+    /// the addition primitive's inner step (Fig. 9).
+    pub fn read_count(&mut self, row: usize, stats: &mut Stats, phase: Phase) {
+        let out = self.read_row(row, stats, phase);
+        self.count(out, stats, phase);
+    }
+
+    /// Accumulate an SA output row into the bit-counters.
+    pub fn count(&mut self, sa_out: u128, stats: &mut Stats, phase: Phase) {
+        self.counters.accumulate(sa_out);
+        stats.ops.bitcounts += 1;
+        stats.record(
+            phase,
+            self.costs.bitcount_energy_per_bit_fj * self.cols as f64,
+            0.0, // pipelined under the sense latency
+        );
+    }
+
+    /// Read the counter LSBs and right-shift (the write-back + carry step
+    /// of Figs. 9–10). Charges one standalone bit-counter cycle.
+    pub fn counter_lsbs_shift(&mut self, stats: &mut Stats, phase: Phase) -> u128 {
+        let lsbs = self.counters.lsbs();
+        self.counters.shift_right();
+        stats.record(
+            phase,
+            self.costs.bitcount_energy_per_bit_fj * self.cols as f64,
+            self.costs.bitcount_latency_ns,
+        );
+        lsbs
+    }
+
+    /// Write a row into the weight buffer through its private port.
+    pub fn buffer_write(&mut self, buf_row: usize, data: u128, stats: &mut Stats, phase: Phase) {
+        self.buffer.write(buf_row, data & self.col_mask);
+        stats.ops.buffer_accesses += 1;
+        stats.record(
+            phase,
+            self.costs.buffer_energy_per_bit_fj * self.cols as f64,
+            self.costs.buffer_latency_ns,
+        );
+    }
+
+    /// Column mask for this subarray width.
+    pub fn col_mask(&self) -> u128 {
+        self.col_mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NandSpinDevice;
+
+    fn sub() -> Subarray {
+        Subarray::new(256, 128, 4, DeviceCosts::default())
+    }
+
+    #[test]
+    fn strip_write_read_roundtrip() {
+        let mut s = sub();
+        let mut st = Stats::default();
+        let data = [1u128, 2, 4, 8, 16, 32, 64, 0xff];
+        s.write_strip(3, &data, &mut st, Phase::LoadData);
+        for (pos, &d) in data.iter().enumerate() {
+            assert_eq!(s.read_row(3 * 8 + pos, &mut st, Phase::Other), d);
+        }
+        assert_eq!(st.ops.erases, 1);
+        assert_eq!(st.ops.program_steps, 8);
+    }
+
+    #[test]
+    fn write_costs_match_paper_model() {
+        let mut s = sub();
+        let mut st = Stats::default();
+        let data = [u128::MAX; 8];
+        s.write_strip(0, &data, &mut st, Phase::LoadData);
+        // Latency: 2.4 ns erase + 8 × 5 ns program = 42.4 ns.
+        assert!((st[Phase::LoadData].latency_ns - 42.4).abs() < 1e-9);
+        // Energy: 128 devices × (180 fJ erase + 840 fJ program all-ones).
+        let expect = 128.0 * (180.0 + 840.0);
+        assert!((st[Phase::LoadData].energy_fj - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn and_matches_logic() {
+        let mut s = sub();
+        let mut st = Stats::default();
+        s.write_row(8, 0b1100, &mut st, Phase::LoadData);
+        let out = s.and_row(8, 0b1010, &mut st, Phase::Convolution);
+        assert_eq!(out, 0b1000);
+    }
+
+    #[test]
+    fn and_count_uses_buffer_operand() {
+        let mut s = sub();
+        let mut st = Stats::default();
+        s.write_row(0, 0b0110, &mut st, Phase::LoadData);
+        s.buffer_write(0, 0b1110, &mut st, Phase::LoadData);
+        s.and_count(0, 0, &mut st, Phase::Convolution);
+        assert_eq!(&s.counters.values()[..4], &[0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn row_word_model_matches_device_model() {
+        // Bit-exactness cross-check: drive the same write pattern through
+        // the u128-row subarray and through explicit NandSpinDevice strips.
+        let mut s = sub();
+        let mut st = Stats::default();
+        let pattern: [u128; 8] =
+            [0xdead, 0xbeef, 0x1234, 0x5678, 0x9abc, 0xdef0, 0x0f0f, 0xf0f0];
+        s.write_strip(5, &pattern, &mut st, Phase::LoadData);
+
+        let mut devices = vec![NandSpinDevice::default(); 128];
+        for (col, dev) in devices.iter_mut().enumerate() {
+            let mut byte = 0u8;
+            for (pos, &row) in pattern.iter().enumerate() {
+                byte |= (((row >> col) & 1) as u8) << pos;
+            }
+            dev.write_byte(byte);
+        }
+        for pos in 0..8 {
+            let row = s.peek_row(5 * 8 + pos);
+            for (col, dev) in devices.iter().enumerate() {
+                assert_eq!((row >> col) & 1 == 1, dev.read(pos), "col {col} pos {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_subarray_masks_columns() {
+        let mut s = Subarray::new(16, 8, 2, DeviceCosts::default());
+        let mut st = Stats::default();
+        s.program_row(0, 0, u128::MAX, &mut st, Phase::LoadData);
+        assert_eq!(s.peek_row(0), 0xff);
+        assert_eq!(st.ops.programmed_bits, 8);
+    }
+}

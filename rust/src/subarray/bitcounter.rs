@@ -1,0 +1,200 @@
+//! Per-column bit-counter units (Fig. 3b).
+//!
+//! Each column has a small counter that accumulates the number of `1`
+//! outputs its SA has produced since the last reset. The composed
+//! primitives use two counter affordances the paper describes:
+//!
+//! * read out the LSBs of all counters as a 128-bit row (to write back a
+//!   sum/product/comparison bit), and
+//! * right-shift every counter by one (carry propagation to the next
+//!   bit-position step, Figs. 9–10).
+//!
+//! ## Representation (§Perf)
+//!
+//! The bank is stored *bit-sliced*: `planes[b]` holds bit `b` of all 128
+//! counters packed in one `u128`. Accumulating an SA output row is then
+//! a ripple-carry add of a 1-bit vector across the planes — O(log count)
+//! word ops instead of a 128-iteration scalar walk — and `lsbs()` /
+//! `shift_right()` become O(1)/O(planes) word moves. This is also
+//! exactly how the hardware lays the counters out across the column
+//! pitch. (Before: 21 ns per accumulate; after: ~2 ns — see
+//! EXPERIMENTS.md §Perf.)
+
+/// Counter capacity in bits (values up to 2^16−1 — the primitives bound
+/// counts by the operand-slot count ≤ 30, so 16 bits is ample headroom).
+const PLANES: usize = 16;
+
+/// Bank of per-column bit counters (bit-sliced).
+#[derive(Debug, Clone)]
+pub struct BitCounterBank {
+    planes: [u128; PLANES],
+    cols: usize,
+    col_mask: u128,
+}
+
+impl BitCounterBank {
+    /// `cols` counters, all zero.
+    pub fn new(cols: usize) -> Self {
+        assert!(cols >= 1 && cols <= 128);
+        let col_mask = if cols == 128 { u128::MAX } else { (1u128 << cols) - 1 };
+        Self { planes: [0; PLANES], cols, col_mask }
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Accumulate one SA output row: counter *j* increments if bit *j* of
+    /// `sa_out` is set. Ripple-carry across the bit planes.
+    #[inline]
+    pub fn accumulate(&mut self, sa_out: u128) {
+        let mut carry = sa_out & self.col_mask;
+        for p in &mut self.planes {
+            if carry == 0 {
+                return;
+            }
+            let sum = *p ^ carry;
+            carry &= *p;
+            *p = sum;
+        }
+        debug_assert_eq!(carry, 0, "bit-counter overflow (> {PLANES} bits)");
+    }
+
+    /// Add an arbitrary per-column value (used when a counter is
+    /// initialised from a transferred partial count).
+    pub fn add_value(&mut self, col: usize, value: u32) {
+        assert!(col < self.cols);
+        for bit in 0..PLANES.min(32) {
+            if (value >> bit) & 1 == 1 {
+                // Add 2^bit to column `col`: ripple from plane `bit`.
+                let mut carry = 1u128 << col;
+                for p in self.planes.iter_mut().skip(bit) {
+                    if carry == 0 {
+                        break;
+                    }
+                    let sum = *p ^ carry;
+                    carry &= *p;
+                    *p = sum;
+                }
+            }
+        }
+    }
+
+    /// LSBs of all counters packed as a row word.
+    #[inline]
+    pub fn lsbs(&self) -> u128 {
+        self.planes[0]
+    }
+
+    /// Right-shift every counter by one (drop the LSB that was just
+    /// written back; the rest is the carry into the next bit position).
+    #[inline]
+    pub fn shift_right(&mut self) {
+        self.planes.rotate_left(1);
+        self.planes[PLANES - 1] = 0;
+    }
+
+    /// Reset all counters to zero.
+    #[inline]
+    pub fn reset(&mut self) {
+        self.planes = [0; PLANES];
+    }
+
+    /// Raw counter values (reconstructed; diagnostic / test path).
+    pub fn values(&self) -> Vec<u32> {
+        (0..self.cols)
+            .map(|col| {
+                self.planes
+                    .iter()
+                    .enumerate()
+                    .fold(0u32, |acc, (b, &p)| acc | ((((p >> col) & 1) as u32) << b))
+            })
+            .collect()
+    }
+
+    /// True if every counter is zero (all carries drained).
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.planes.iter().all(|&p| p == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_counts_per_column() {
+        let mut b = BitCounterBank::new(128);
+        b.accumulate(0b1011);
+        b.accumulate(0b0011);
+        assert_eq!(&b.values()[..4], &[2, 2, 0, 1]);
+    }
+
+    #[test]
+    fn lsb_and_shift_implement_binary_readout() {
+        let mut b = BitCounterBank::new(8);
+        // Column 0 counts to 5 (0b101), column 1 to 2 (0b010).
+        for _ in 0..5 {
+            b.accumulate(0b01);
+        }
+        for _ in 0..2 {
+            b.accumulate(0b10);
+        }
+        let mut out = [0u32; 2];
+        for bitpos in 0..3 {
+            let lsbs = b.lsbs();
+            out[0] |= ((lsbs & 1) as u32) << bitpos;
+            out[1] |= (((lsbs >> 1) & 1) as u32) << bitpos;
+            b.shift_right();
+        }
+        assert_eq!(out, [5, 2]);
+        assert!(b.is_zero());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut b = BitCounterBank::new(4);
+        b.accumulate(u128::MAX >> (128 - 4));
+        b.reset();
+        assert!(b.is_zero());
+    }
+
+    #[test]
+    fn add_value_matches_accumulate_loop() {
+        let mut a = BitCounterBank::new(16);
+        let mut b = BitCounterBank::new(16);
+        a.add_value(3, 13);
+        for _ in 0..13 {
+            b.accumulate(1 << 3);
+        }
+        assert_eq!(a.values(), b.values());
+    }
+
+    #[test]
+    fn bitsliced_matches_scalar_reference() {
+        // Randomised cross-check against a plain scalar counter array.
+        let mut bank = BitCounterBank::new(128);
+        let mut reference = vec![0u32; 128];
+        let mut state = 0x1234_5678_9abc_def0u64;
+        for _ in 0..200 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let row = (state as u128) << 64 | state.wrapping_mul(0x9e37) as u128;
+            bank.accumulate(row);
+            for (col, r) in reference.iter_mut().enumerate() {
+                *r += ((row >> col) & 1) as u32;
+            }
+        }
+        assert_eq!(bank.values(), reference);
+    }
+
+    #[test]
+    fn column_mask_ignores_out_of_range_bits() {
+        let mut b = BitCounterBank::new(8);
+        b.accumulate(u128::MAX);
+        assert_eq!(b.values(), vec![1; 8]);
+    }
+}

@@ -1,0 +1,55 @@
+//! Subarray weight buffer (Fig. 3b).
+//!
+//! A small row buffer with a private data port: weight rows are written
+//! once over the bus and then reused for every AND across the whole input
+//! matrix held in the subarray, which is the paper's key data-movement
+//! saving ("requiring only one writing operation into the buffer ...").
+//! The comparison primitive (Fig. 11) also uses two buffer rows as
+//! scratch (tag / tag-inverted).
+
+
+/// Weight / scratch buffer attached to one subarray.
+#[derive(Debug, Clone)]
+pub struct WeightBuffer {
+    rows: Vec<u128>,
+}
+
+impl WeightBuffer {
+    /// Buffer with `rows` rows, zero-initialised.
+    pub fn new(rows: usize) -> Self {
+        Self { rows: vec![0; rows] }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Write a full row.
+    ///
+    /// # Panics
+    /// If `row` is out of range.
+    #[inline]
+    pub fn write(&mut self, row: usize, data: u128) {
+        self.rows[row] = data;
+    }
+
+    /// Read a full row.
+    #[inline]
+    pub fn read(&self, row: usize) -> u128 {
+        self.rows[row]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut b = WeightBuffer::new(4);
+        b.write(2, 0xdead_beef);
+        assert_eq!(b.read(2), 0xdead_beef);
+        assert_eq!(b.read(0), 0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Bitwise convolution stepper (Fig. 8).
+//!
+//! One subarray holds one *bit-plane* of the input feature map (row *r*
+//! of the map in MTJ row `base + r`). The 1-bit weight matrix is written
+//! once into the weight buffer, tiled across the columns with period
+//! `Kw`; each *period* `p` shifts the tiling by one column (the paper's
+//! "slide the weight matrix to the next position").
+//!
+//! Within a period, activating input row `r0+kr` against buffer row `kr`
+//! ANDs the whole row in parallel and the per-column bit-counters
+//! accumulate over the `Kh` kernel rows. Column `j`'s counter then holds
+//! `Σ_kr I[r0+kr][j] · W[kr][(j−p) mod Kw]` — the *vertical* partial of
+//! the window starting at any column `c ≡ p (mod Kw)`. The horizontal
+//! fold across the `Kw` columns of each window is done by in-memory
+//! addition in the accumulation subarray (cross-writing scheme, Fig. 12);
+//! here we expose the raw per-column counts plus a pure fold helper used
+//! by tests and by the functional coordinator.
+
+use crate::arch::stats::{Phase, Stats};
+
+use super::array::Subarray;
+
+/// A 1-bit weight matrix (kernel bit-plane), `kh × kw`, row-major.
+#[derive(Debug, Clone)]
+pub struct BitKernel {
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    bits: Vec<bool>,
+}
+
+impl BitKernel {
+    /// Build from a row-major bit vector.
+    ///
+    /// # Panics
+    /// If `bits.len() != kh * kw`.
+    pub fn new(kh: usize, kw: usize, bits: Vec<bool>) -> Self {
+        assert_eq!(bits.len(), kh * kw);
+        Self { kh, kw, bits }
+    }
+
+    /// Bit at kernel position (kr, kc).
+    #[inline]
+    pub fn at(&self, kr: usize, kc: usize) -> bool {
+        self.bits[kr * self.kw + kc]
+    }
+
+    /// Tile kernel row `kr` across `cols` columns with column offset `p`:
+    /// bit `j` of the word = `W[kr][(j − p) mod kw]`.
+    pub fn tile_row(&self, kr: usize, p: usize, cols: usize) -> u128 {
+        let mut word = 0u128;
+        for j in 0..cols {
+            let kc = (j + self.kw - p % self.kw) % self.kw;
+            if self.at(kr, kc) {
+                word |= 1 << j;
+            }
+        }
+        word
+    }
+}
+
+/// Raw bit-counter contents after one (output-row, period) pass.
+#[derive(Debug, Clone)]
+pub struct PeriodCounts {
+    /// Sliding period (column offset of the weight tiling).
+    pub period: usize,
+    /// Output row index (input row window start / stride).
+    pub out_row: usize,
+    /// Per-column counter values.
+    pub counts: Vec<u32>,
+}
+
+/// Geometry of one bit-plane convolution.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeometry {
+    /// Input feature-map height (rows stored in the subarray).
+    pub in_h: usize,
+    /// Input feature-map width (≤ subarray columns).
+    pub in_w: usize,
+    /// Convolution stride.
+    pub stride: usize,
+}
+
+impl ConvGeometry {
+    /// Output height for a `kh`-tall kernel.
+    pub fn out_h(&self, kh: usize) -> usize {
+        if self.in_h < kh {
+            0
+        } else {
+            (self.in_h - kh) / self.stride + 1
+        }
+    }
+
+    /// Output width for a `kw`-wide kernel.
+    pub fn out_w(&self, kw: usize) -> usize {
+        if self.in_w < kw {
+            0
+        } else {
+            (self.in_w - kw) / self.stride + 1
+        }
+    }
+}
+
+/// Run the bitwise convolution of the stored input bit-plane against
+/// `kernel`, producing the per-column counts of every (output-row,
+/// period) pass. The weight buffer is loaded once per period and reused
+/// across all output rows — the paper's weight-reuse scheme.
+///
+/// `base` is the MTJ row holding input row 0.
+pub fn bitplane_conv_counts(
+    sub: &mut Subarray,
+    base: usize,
+    geo: ConvGeometry,
+    kernel: &BitKernel,
+    stats: &mut Stats,
+    phase: Phase,
+) -> Vec<PeriodCounts> {
+    assert!(geo.in_w <= sub.cols(), "input width exceeds subarray columns");
+    assert!(base + geo.in_h <= sub.num_rows());
+    assert!(kernel.kh <= sub.buffer.rows(), "kernel taller than weight buffer");
+
+    let out_h = geo.out_h(kernel.kh);
+    let out_w = geo.out_w(kernel.kw);
+    let mut results = Vec::with_capacity(out_h * kernel.kw.min(out_w.max(1)));
+
+    // Periods actually used by some output column.
+    let mut used = vec![false; kernel.kw];
+    for oc in 0..out_w {
+        used[(oc * geo.stride) % kernel.kw] = true;
+    }
+
+    for (p, _) in used.iter().enumerate().filter(|(_, &u)| u) {
+        // One buffer load per period, reused for every output row.
+        for kr in 0..kernel.kh {
+            let word = kernel.tile_row(kr, p, geo.in_w);
+            sub.buffer_write(kr, word, stats, phase);
+        }
+        for or in 0..out_h {
+            sub.counters.reset();
+            let r0 = base + or * geo.stride;
+            for kr in 0..kernel.kh {
+                sub.and_count(r0 + kr, kr, stats, phase);
+            }
+            // Drain the counters bit-serially (LSB + shift), as the
+            // hardware does when streaming counts to the accumulation
+            // subarray. Count ≤ kh, so ⌈log2(kh+1)⌉ drain cycles.
+            // §Perf: iterate only the set bits of each drained plane
+            // instead of walking all columns.
+            let count_bits = 32 - (kernel.kh as u32).leading_zeros();
+            let in_mask =
+                if geo.in_w == 128 { u128::MAX } else { (1u128 << geo.in_w) - 1 };
+            let mut counts = vec![0u32; geo.in_w];
+            for bitpos in 0..count_bits {
+                let mut lsbs = sub.counter_lsbs_shift(stats, phase) & in_mask;
+                while lsbs != 0 {
+                    let j = lsbs.trailing_zeros() as usize;
+                    counts[j] |= 1 << bitpos;
+                    lsbs &= lsbs - 1;
+                }
+            }
+            results.push(PeriodCounts { period: p, out_row: or, counts });
+        }
+    }
+    results
+}
+
+/// Pure fold of [`PeriodCounts`] into window sums:
+/// `out[or][oc] = Σ_kc counts(period = oc·s mod kw)[oc·s + kc]`.
+///
+/// In hardware this fold is the in-memory addition in the accumulation
+/// subarray; the functional coordinator charges it there.
+pub fn window_sums(
+    counts: &[PeriodCounts],
+    geo: ConvGeometry,
+    kernel: &BitKernel,
+) -> Vec<Vec<u32>> {
+    let out_h = geo.out_h(kernel.kh);
+    let out_w = geo.out_w(kernel.kw);
+    let mut out = vec![vec![0u32; out_w]; out_h];
+    for pc in counts {
+        for oc in 0..out_w {
+            let c0 = oc * geo.stride;
+            if c0 % kernel.kw != pc.period {
+                continue;
+            }
+            out[pc.out_row][oc] = (0..kernel.kw).map(|kc| pc.counts[c0 + kc]).sum();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::energy::DeviceCosts;
+
+    fn sub() -> Subarray {
+        Subarray::new(256, 128, 16, DeviceCosts::default())
+    }
+
+    /// Direct reference: 1-bit conv as nested loops.
+    fn ref_conv(
+        input: &[Vec<bool>],
+        kernel: &BitKernel,
+        stride: usize,
+    ) -> Vec<Vec<u32>> {
+        let in_h = input.len();
+        let in_w = input[0].len();
+        let out_h = (in_h - kernel.kh) / stride + 1;
+        let out_w = (in_w - kernel.kw) / stride + 1;
+        let mut out = vec![vec![0u32; out_w]; out_h];
+        for or in 0..out_h {
+            for oc in 0..out_w {
+                let mut s = 0;
+                for kr in 0..kernel.kh {
+                    for kc in 0..kernel.kw {
+                        s += (input[or * stride + kr][oc * stride + kc]
+                            && kernel.at(kr, kc)) as u32;
+                    }
+                }
+                out[or][oc] = s;
+            }
+        }
+        out
+    }
+
+    fn store_input(sub: &mut Subarray, base: usize, input: &[Vec<bool>]) {
+        let mut st = Stats::default();
+        for (r, row) in input.iter().enumerate() {
+            let mut word = 0u128;
+            for (j, &b) in row.iter().enumerate() {
+                if b {
+                    word |= 1 << j;
+                }
+            }
+            sub.write_row(base + r, word, &mut st, Phase::LoadData);
+        }
+    }
+
+    fn pseudo_input(h: usize, w: usize, seed: u64) -> Vec<Vec<bool>> {
+        let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+        (0..h)
+            .map(|_| {
+                (0..w)
+                    .map(|_| {
+                        state ^= state << 13;
+                        state ^= state >> 7;
+                        state ^= state << 17;
+                        state & 1 == 1
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn check(h: usize, w: usize, kh: usize, kw: usize, stride: usize, seed: u64) {
+        let input = pseudo_input(h, w, seed);
+        let kbits = pseudo_input(kh, kw, seed.wrapping_add(1)).concat();
+        let kernel = BitKernel::new(kh, kw, kbits);
+        let mut s = sub();
+        store_input(&mut s, 0, &input);
+        let geo = ConvGeometry { in_h: h, in_w: w, stride };
+        let mut st = Stats::default();
+        let counts = bitplane_conv_counts(&mut s, 0, geo, &kernel, &mut st, Phase::Convolution);
+        let got = window_sums(&counts, geo, &kernel);
+        assert_eq!(got, ref_conv(&input, &kernel, stride), "{h}x{w} k{kh}x{kw} s{stride}");
+        assert!(st.ops.ands > 0);
+    }
+
+    #[test]
+    fn matches_reference_2x2_on_2x5() {
+        // The paper's own worked example size (Fig. 8).
+        check(2, 5, 2, 2, 1, 42);
+    }
+
+    #[test]
+    fn matches_reference_3x3() {
+        check(8, 16, 3, 3, 1, 7);
+    }
+
+    #[test]
+    fn matches_reference_strided() {
+        check(12, 24, 3, 3, 2, 99);
+        check(11, 23, 5, 5, 2, 123);
+    }
+
+    #[test]
+    fn matches_reference_11x11_alexnet_like() {
+        check(20, 40, 11, 11, 4, 5);
+    }
+
+    #[test]
+    fn weight_buffer_loaded_once_per_period() {
+        let input = pseudo_input(10, 20, 3);
+        let kernel = BitKernel::new(3, 3, pseudo_input(3, 3, 4).concat());
+        let mut s = sub();
+        store_input(&mut s, 0, &input);
+        let mut st = Stats::default();
+        let geo = ConvGeometry { in_h: 10, in_w: 20, stride: 1 };
+        bitplane_conv_counts(&mut s, 0, geo, &kernel, &mut st, Phase::Convolution);
+        // 3 periods × 3 kernel rows of buffer loads; AND ops dominate.
+        assert_eq!(st.ops.buffer_accesses as usize, 3 * 3 + st.ops.ands as usize);
+    }
+}

@@ -1,0 +1,19 @@
+//! NAND-SPIN subarray: the elementary compute/storage unit (Fig. 3b/4a).
+//!
+//! A subarray is `rows × cols` MTJs organised as `rows/8` strip-rows of
+//! `cols` NAND-SPIN devices, with one SPCSA and one bit-counter per
+//! column, plus a small weight buffer with a private data port.
+//!
+//! Rows are modelled as `u128` words (bit *j* = column *j*), which makes a
+//! row-parallel AND a single machine op while remaining bit-exact with the
+//! device model in [`crate::device`] (cross-checked in tests).
+
+pub mod array;
+pub mod bitcounter;
+pub mod buffer;
+pub mod conv;
+pub mod primitives;
+
+pub use array::Subarray;
+pub use bitcounter::BitCounterBank;
+pub use buffer::WeightBuffer;

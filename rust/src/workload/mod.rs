@@ -1,0 +1,53 @@
+//! Synthetic workload generation: ImageNet-shaped inputs and batched
+//! inference traces for the benchmark harness.
+
+use crate::cnn::network::Network;
+use crate::cnn::tensor::QTensor;
+use crate::util::Rng;
+
+/// A batch of synthetic input images for a network.
+#[derive(Debug, Clone)]
+pub struct ImageBatch {
+    /// Input tensors (CHW, quantized).
+    pub images: Vec<QTensor>,
+}
+
+impl ImageBatch {
+    /// Deterministic batch of `n` synthetic images matching `net`'s input.
+    pub fn synthetic(net: &Network, n: usize, seed: u64) -> Self {
+        let (c, h, w) = net.input;
+        let mut rng = Rng::seed_from_u64(seed);
+        let images =
+            (0..n).map(|_| QTensor::random(c, h, w, net.input_bits, rng.gen_seed())).collect();
+        Self { images }
+    }
+
+    /// Number of images.
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// The paper's evaluation grid: ⟨W:I⟩ precision pairs of Figs. 14–15.
+pub const PRECISION_GRID: [(u8, u8); 4] = [(1, 1), (2, 2), (4, 4), (8, 8)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::network::small_cnn;
+
+    #[test]
+    fn batch_is_deterministic_and_shaped() {
+        let net = small_cnn(4);
+        let a = ImageBatch::synthetic(&net, 3, 9);
+        let b = ImageBatch::synthetic(&net, 3, 9);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.len(), 3);
+        assert_eq!((a.images[0].c, a.images[0].h, a.images[0].w), net.input);
+    }
+}

@@ -1,0 +1,158 @@
+//! Cross-module integration: functional PIM simulation vs the golden
+//! executor across networks/precisions/seeds, and architecture-level
+//! invariants of the analytic model and baselines.
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::arch::stats::Phase;
+use nandspin::baselines::designs::BaselineKind;
+use nandspin::cnn::network::{micro_cnn, resnet50, small_cnn, vgg19};
+use nandspin::cnn::ref_exec::{self, ModelParams};
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::{AnalyticModel, Coordinator};
+
+fn check_bit_exact(bits: u8, wbits: u8, seed: u64) {
+    let net = small_cnn(bits);
+    let params = ModelParams::random(&net, wbits, seed);
+    let input = QTensor::random(net.input.0, net.input.1, net.input.2, bits, seed ^ 0xabc);
+    let golden = ref_exec::execute(&net, &params, &input);
+    let (outs, stats) = Coordinator::paper().functional_run(&net, &params, &input);
+    for (i, (a, b)) in outs.iter().zip(&golden).enumerate() {
+        assert_eq!(a, b, "bits={bits} wbits={wbits} seed={seed} node {i}");
+    }
+    // The functional run must exercise all op classes.
+    assert!(stats.ops.ands > 0 && stats.ops.erases > 0 && stats.ops.program_steps > 0);
+    assert!(stats.ops.reads > 0 && stats.ops.bitcounts > 0);
+    assert!(stats[Phase::Convolution].latency_ns > 0.0);
+    assert!(stats[Phase::Pooling].latency_ns > 0.0);
+}
+
+#[test]
+fn functional_matches_golden_across_precisions() {
+    for (bits, wbits, seed) in [(2u8, 2u8, 1u64), (3, 4, 2), (4, 4, 3), (4, 2, 4), (5, 3, 5)] {
+        check_bit_exact(bits, wbits, seed);
+    }
+}
+
+#[test]
+fn functional_matches_golden_many_seeds_micro() {
+    for seed in 0..8 {
+        let net = micro_cnn(4);
+        let params = ModelParams::random(&net, 3, seed);
+        let input = QTensor::random(1, 4, 6, 4, seed + 50);
+        let golden = ref_exec::execute(&net, &params, &input);
+        let (outs, _) = Coordinator::paper().functional_run(&net, &params, &input);
+        assert_eq!(outs.last(), golden.last(), "seed {seed}");
+    }
+}
+
+#[test]
+fn analytic_capacity_monotonicity() {
+    // Fig. 13a invariant: more capacity never slows inference down.
+    let net = resnet50(8);
+    let mut last = f64::INFINITY;
+    for cap in [8usize, 16, 32, 64, 128] {
+        let mut cfg = ArchConfig::paper();
+        cfg.capacity_mb = cap;
+        let lat = AnalyticModel::new(cfg).network_stats(&net, 8).total_latency_ns();
+        assert!(lat <= last * 1.001, "capacity {cap} slower than smaller config");
+        last = lat;
+    }
+}
+
+#[test]
+fn analytic_bus_monotonicity() {
+    // Fig. 13b invariant: wider bus never slows inference down.
+    let net = vgg19(8);
+    let mut last = f64::INFINITY;
+    for bus in [32usize, 64, 128, 256, 512] {
+        let mut cfg = ArchConfig::paper();
+        cfg.bus_width_bits = bus;
+        let lat = AnalyticModel::new(cfg).network_stats(&net, 8).total_latency_ns();
+        assert!(lat <= last * 1.001, "bus {bus} slower than narrower config");
+        last = lat;
+    }
+}
+
+#[test]
+fn proposed_beats_all_baselines_in_throughput() {
+    // Table 3 headline: the proposed design has the highest FPS.
+    let net = resnet50(8);
+    let ours = Coordinator::paper().analytic_metrics(&net, 8).fps();
+    for kind in BaselineKind::ALL {
+        let theirs = kind.model().metrics(&net, 8).fps();
+        assert!(
+            ours > theirs,
+            "proposed ({ours:.1} FPS) must beat {} ({theirs:.1} FPS)",
+            kind.model().name
+        );
+    }
+}
+
+#[test]
+fn proposed_beats_stt_and_dram_normalised_to_area() {
+    // Figs. 14–15 headline ratios (shape, not absolute): proposed wins
+    // in perf/area and efficiency/area against DRAM- and STT-based.
+    let net = resnet50(8);
+    let coord = Coordinator::paper();
+    let ours = coord.analytic_metrics(&net, 8);
+    for kind in [BaselineKind::Drisa, BaselineKind::SttCim, BaselineKind::Imce, BaselineKind::Prime]
+    {
+        let m = kind.model().metrics(&net, 8);
+        assert!(
+            ours.gops_per_mm2() > m.gops_per_mm2(),
+            "perf/area vs {}",
+            kind.model().name
+        );
+        assert!(
+            ours.efficiency_per_mm2() > m.efficiency_per_mm2(),
+            "eff/area vs {}",
+            kind.model().name
+        );
+    }
+}
+
+#[test]
+fn fig16_breakdown_shape_holds() {
+    // Load + conv are the top-2 latency shares; pooling is the next
+    // biggest computational share; transfer is small (Fig. 16a).
+    let st = Coordinator::paper().analytic_stats(&resnet50(8), 8);
+    let lat = |p: Phase| st[p].latency_ns;
+    assert!(lat(Phase::LoadData) > lat(Phase::Pooling));
+    assert!(lat(Phase::Convolution) > lat(Phase::Pooling));
+    assert!(lat(Phase::Pooling) > lat(Phase::BatchNorm));
+    assert!(lat(Phase::DataTransfer) < lat(Phase::Convolution));
+    // Energy: conv and load dominate (Fig. 16b).
+    let en = |p: Phase| st[p].energy_fj;
+    assert!(en(Phase::Convolution) > en(Phase::Pooling));
+    assert!(en(Phase::LoadData) > en(Phase::DataTransfer));
+}
+
+#[test]
+fn precision_grid_monotone_for_proposed() {
+    // Figs. 14–15: cost grows with ⟨W:I⟩ for the bit-serial design.
+    let coord = Coordinator::paper();
+    let mut last = 0.0;
+    for (w, i) in [(1u8, 1u8), (2, 2), (4, 4), (8, 8)] {
+        let lat = coord.analytic_stats(&resnet50(i), w).total_latency_ns();
+        assert!(lat > last, "⟨{w}:{i}⟩ must cost more than the previous point");
+        last = lat;
+    }
+}
+
+#[test]
+fn functional_small_resnet_with_padding_and_residual() {
+    // Exercises zero padding (free in erased cells) and the Residual
+    // merge in the bit-accurate functional path.
+    use nandspin::cnn::network::small_resnet;
+    for seed in [1u64, 9, 77] {
+        let net = small_resnet(4);
+        let params = ModelParams::random(&net, 3, seed);
+        let input = QTensor::random(net.input.0, net.input.1, net.input.2, 4, seed + 5);
+        let golden = ref_exec::execute(&net, &params, &input);
+        let (outs, stats) = Coordinator::paper().functional_run(&net, &params, &input);
+        for (i, (a, b)) in outs.iter().zip(&golden).enumerate() {
+            assert_eq!(a, b, "seed {seed} node {i}");
+        }
+        assert!(stats.ops.ands > 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Property-style sweeps over the in-memory primitives and coordinator
+//! invariants (hand-rolled generator: the build is offline, so proptest
+//! is replaced by seeded random sweeps with shrink-friendly reporting).
+
+use nandspin::arch::stats::{Phase, Stats};
+use nandspin::device::energy::DeviceCosts;
+use nandspin::subarray::primitives::{
+    add_columns, compare_columns, multiply_columns, CompareScratch,
+};
+use nandspin::subarray::Subarray;
+use nandspin::util::Rng;
+
+fn sub() -> Subarray {
+    Subarray::new(256, 128, 16, DeviceCosts::default())
+}
+
+fn store_vertical(s: &mut Subarray, base: usize, bits: usize, vals: &[u32]) {
+    let mut st = Stats::default();
+    for b in 0..bits {
+        let mut row = 0u128;
+        for (col, &v) in vals.iter().enumerate() {
+            row |= (((v >> b) & 1) as u128) << col;
+        }
+        s.write_row(base + b, row, &mut st, Phase::LoadData);
+    }
+}
+
+fn load_vertical(s: &Subarray, base: usize, bits: usize, cols: usize) -> Vec<u64> {
+    (0..cols)
+        .map(|col| {
+            (0..bits).fold(0u64, |acc, b| {
+                acc | ((((s.peek_row(base + b) >> col) & 1) as u64) << b)
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn property_addition_random_operand_sets() {
+    // 60 random cases: k operands of b bits each, all 128 columns.
+    let mut rng = Rng::seed_from_u64(0xADD);
+    for case in 0..60 {
+        let k = rng.gen_usize(2, 9);
+        let bits = rng.gen_usize(1, 9);
+        let mut s = sub();
+        let mut operands = Vec::new();
+        for i in 0..k {
+            let vals: Vec<u32> =
+                (0..128).map(|_| rng.gen_range_inclusive((1u32 << bits) - 1)).collect();
+            store_vertical(&mut s, i * bits, bits, &vals);
+            operands.push(vals);
+        }
+        let mut st = Stats::default();
+        let bases: Vec<usize> = (0..k).map(|i| i * bits).collect();
+        let result_base = ((k * bits).div_ceil(8) + 1) * 8;
+        let width = add_columns(&mut s, &bases, bits, result_base, &mut st, Phase::Pooling);
+        let sums = load_vertical(&s, result_base, width, 128);
+        for col in 0..128 {
+            let expect: u64 = operands.iter().map(|o| o[col] as u64).sum();
+            assert_eq!(sums[col], expect, "case {case} k={k} bits={bits} col={col}");
+        }
+    }
+}
+
+#[test]
+fn property_multiplication_random_widths() {
+    let mut rng = Rng::seed_from_u64(0x301);
+    for case in 0..40 {
+        let abits = rng.gen_usize(1, 9);
+        let bbits = rng.gen_usize(1, 9);
+        let mut s = sub();
+        let a: Vec<u32> = (0..128).map(|_| rng.gen_range_inclusive((1u32 << abits) - 1)).collect();
+        let b: Vec<u32> = (0..128).map(|_| rng.gen_range_inclusive((1u32 << bbits) - 1)).collect();
+        store_vertical(&mut s, 0, abits, &a);
+        let mut st = Stats::default();
+        let mut buf_rows = Vec::new();
+        for j in 0..bbits {
+            let mut word = 0u128;
+            for (col, &v) in b.iter().enumerate() {
+                word |= (((v >> j) & 1) as u128) << col;
+            }
+            s.buffer_write(j, word, &mut st, Phase::LoadData);
+            buf_rows.push(j);
+        }
+        let result_base = (abits.div_ceil(8) + 1) * 8;
+        let width =
+            multiply_columns(&mut s, 0, abits, &buf_rows, result_base, &mut st, Phase::BatchNorm);
+        let prods = load_vertical(&s, result_base, width, 128);
+        for col in 0..128 {
+            assert_eq!(
+                prods[col],
+                a[col] as u64 * b[col] as u64,
+                "case {case} a={abits}b b={bbits}b col={col}"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_comparison_random_widths() {
+    let mut rng = Rng::seed_from_u64(0xC0);
+    for case in 0..40 {
+        let bits = rng.gen_usize(1, 11);
+        let mut s = sub();
+        let a: Vec<u32> = (0..128).map(|_| rng.gen_range_inclusive((1u32 << bits) - 1)).collect();
+        let b: Vec<u32> = (0..128).map(|_| rng.gen_range_inclusive((1u32 << bits) - 1)).collect();
+        store_vertical(&mut s, 0, bits, &a);
+        store_vertical(&mut s, bits, bits, &b);
+        let scratch_strip = (2 * bits).div_ceil(8);
+        let scratch = CompareScratch {
+            tag_row: scratch_strip * 8,
+            result_row: scratch_strip * 8 + 1,
+            buf_tag: 0,
+            buf_diff: 1,
+        };
+        let mut st = Stats::default();
+        let result = compare_columns(&mut s, 0, bits, bits, scratch, &mut st, Phase::Pooling);
+        for col in 0..128 {
+            assert_eq!(
+                (result >> col) & 1 == 1,
+                a[col] > b[col],
+                "case {case} bits={bits} col={col}: a={} b={}",
+                a[col],
+                b[col]
+            );
+        }
+    }
+}
+
+#[test]
+fn property_unipolar_program_only_sets_bits() {
+    let mut rng = Rng::seed_from_u64(0x11);
+    for _ in 0..50 {
+        let mut s = sub();
+        let mut st = Stats::default();
+        let strip = rng.gen_usize(0, 32);
+        let pos = rng.gen_usize(0, 8);
+        let p1 = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+        let p2 = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+        s.program_row(strip, pos, p1, &mut st, Phase::LoadData);
+        s.program_row(strip, pos, p2, &mut st, Phase::LoadData);
+        assert_eq!(s.peek_row(strip * 8 + pos), p1 | p2, "program must OR");
+        s.erase_strip(strip, &mut st, Phase::LoadData);
+        assert_eq!(s.peek_row(strip * 8 + pos), 0);
+    }
+}
+
+#[test]
+fn property_stats_are_monotone_nonnegative() {
+    // Any op sequence only grows stats; energies/latencies stay finite.
+    let mut rng = Rng::seed_from_u64(0x57);
+    let mut s = sub();
+    let mut st = Stats::default();
+    let mut last_e = 0.0;
+    let mut last_t = 0.0;
+    for _ in 0..500 {
+        match rng.gen_usize(0, 4) {
+            0 => s.erase_strip(rng.gen_usize(0, 32), &mut st, Phase::LoadData),
+            1 => {
+                let strip = rng.gen_usize(0, 32);
+                let pos = rng.gen_usize(0, 8);
+                s.program_row(strip, pos, rng.next_u64() as u128, &mut st, Phase::LoadData)
+            }
+            2 => {
+                s.read_row(rng.gen_usize(0, 256), &mut st, Phase::Other);
+            }
+            _ => {
+                let _ = s.and_row(
+                    rng.gen_usize(0, 256),
+                    rng.next_u64() as u128,
+                    &mut st,
+                    Phase::Convolution,
+                );
+            }
+        }
+        let e = st.total_energy_fj();
+        let t = st.total_latency_ns();
+        assert!(e.is_finite() && t.is_finite());
+        assert!(e >= last_e && t >= last_t, "stats must be monotone");
+        last_e = e;
+        last_t = t;
+    }
+}

@@ -1,0 +1,88 @@
+//! Runtime integration: load the AOT JAX/Pallas artifacts and check
+//! their numerics against the Rust golden implementations. Skipped (with
+//! a note) when `artifacts/` has not been generated yet.
+
+use nandspin::cnn::ref_exec::WideTensor;
+use nandspin::cnn::tensor::{Kernel4, QTensor};
+use nandspin::runtime::{ArgI32, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/cnn_forward.hlo.txt").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("PJRT client"))
+}
+
+#[test]
+fn bitconv_artifact_matches_golden_conv() {
+    let Some(rt) = runtime() else { return };
+    let artifact = rt.load("bitconv").expect("load bitconv");
+    // Shapes fixed at lowering time: x (2,8,12) 3-bit, w (3,2,3,3) 3-bit.
+    let x = QTensor::random(2, 8, 12, 3, 11);
+    let w = Kernel4::random(3, 2, 3, 3, 3, 12);
+    let outs = artifact
+        .run_i32(&[ArgI32::from_qtensor(&x), ArgI32::from_kernel(&w)])
+        .expect("execute bitconv");
+    // Golden: plain integer conv via the reference executor path.
+    let wide = WideTensor::from_q(&x);
+    let golden = {
+        use nandspin::cnn::layer::Layer;
+        use nandspin::cnn::network::{Network, Node};
+        use nandspin::cnn::ref_exec::{execute, ModelParams};
+        let net = Network {
+            name: "conv-only".into(),
+            input: (2, 8, 12),
+            input_bits: 3,
+            nodes: vec![Node {
+                layer: Layer::Conv { out_c: 3, kh: 3, kw: 3, stride: 1, pad: 0 },
+                input: None,
+            }],
+        };
+        let params = ModelParams { conv_weights: vec![w.clone()], bn: vec![], quant: vec![] };
+        execute(&net, &params, &x).pop().unwrap()
+    };
+    let _ = wide;
+    let got: Vec<i64> = outs[0].iter().map(|&v| v as i64).collect();
+    assert_eq!(got, golden.data, "PJRT bitconv vs golden integer conv");
+}
+
+#[test]
+fn quantize_artifact_matches_quantparams() {
+    let Some(rt) = runtime() else { return };
+    let artifact = rt.load("quantize").expect("load quantize");
+    use nandspin::cnn::quantize::QuantParams;
+    let p = QuantParams { mul: 3, add: 64, shift: 7, bits: 4 };
+    let xs: Vec<i32> = (0..64).map(|i| i * 13 % 1024).collect();
+    let outs = artifact
+        .run_i32(&[
+            ArgI32::vec(xs.clone()),
+            ArgI32::vec(vec![p.mul as i32, p.add as i32, p.shift as i32, 15]),
+        ])
+        .expect("execute quantize");
+    let want: Vec<i32> = xs.iter().map(|&x| p.apply(x as i64) as i32).collect();
+    assert_eq!(outs[0], want);
+}
+
+#[test]
+fn maxpool_artifact_matches_golden() {
+    let Some(rt) = runtime() else { return };
+    let artifact = rt.load("maxpool").expect("load maxpool");
+    let x = QTensor::random(4, 12, 20, 8, 21);
+    let outs = artifact.run_i32(&[ArgI32::from_qtensor(&x)]).expect("execute maxpool");
+    // golden 2/2 maxpool
+    let mut want = Vec::new();
+    for c in 0..4 {
+        for y in 0..6 {
+            for xx in 0..10 {
+                let m = [(0, 0), (0, 1), (1, 0), (1, 1)]
+                    .iter()
+                    .map(|&(dy, dx)| x.at(c, y * 2 + dy, xx * 2 + dx))
+                    .max()
+                    .unwrap();
+                want.push(m as i32);
+            }
+        }
+    }
+    assert_eq!(outs[0], want);
+}
