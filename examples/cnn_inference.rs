@@ -1,29 +1,29 @@
-//! End-to-end driver (DESIGN.md experiment E9): run a quantized CNN on
-//! real synthetic data through all three layers of the stack and prove
-//! they compose:
+//! End-to-end cross-check: run a quantized CNN on real synthetic data
+//! through the layers of the stack and prove they agree bit-for-bit:
 //!
 //! 1. **Golden** — pure-Rust integer executor (`cnn::ref_exec`);
 //! 2. **PIM simulator** — bit-accurate NAND-SPIN functional engine
 //!    (every conv/pool/BN/quant executed with erase/program/AND/count
 //!    ops on simulated subarrays), producing latency/energy stats;
 //! 3. **PJRT artifact** — the JAX/Pallas model AOT-lowered at build time
-//!    (`artifacts/cnn_forward.hlo.txt`), loaded and executed from Rust
-//!    via the PJRT CPU client. Python is not involved at runtime.
+//!    (`artifacts/cnn_forward.hlo.txt`). This leg needs a linked PJRT
+//!    backend; the default offline build has none, so it is skipped
+//!    with a note (see `nandspin::runtime`).
 //!
-//! All three must agree bit-for-bit on every image. The example then
-//! reports batched throughput (simulated FPS + energy, host sim speed).
+//! For batched *throughput* (batching, sharding, weight residency) see
+//! the `serving` example — this one is purely about numerical agreement.
 //!
-//! Run: `make artifacts && cargo run --release --example cnn_inference`
+//! Run: `cargo run --release --example cnn_inference`
 
-use anyhow::{bail, Context, Result};
+use std::process::ExitCode;
 
 use nandspin::cnn::network::small_cnn;
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::coordinator::Coordinator;
-use nandspin::runtime::{ArgI32, Runtime};
+use nandspin::runtime::{ArgI32, Artifact, Runtime};
 use nandspin::workload::ImageBatch;
 
-fn main() -> Result<()> {
+fn main() -> ExitCode {
     let batch = 4usize;
     let seed = 7u64;
     let net = small_cnn(4);
@@ -31,12 +31,16 @@ fn main() -> Result<()> {
     let images = ImageBatch::synthetic(&net, batch, seed + 100);
     let coord = Coordinator::paper();
 
-    // --- load the AOT artifact (L2/L1 lowered to HLO text).
-    let runtime = Runtime::new("artifacts").context("creating PJRT runtime")?;
+    // --- try to load the AOT artifact (L2/L1 lowered to HLO text).
+    let runtime = Runtime::new("artifacts").expect("runtime");
     println!("PJRT platform: {}", runtime.platform());
-    let artifact = runtime
-        .load("cnn_forward")
-        .context("loading artifacts/cnn_forward.hlo.txt — run `make artifacts` first")?;
+    let artifact: Option<Artifact> = match runtime.load("cnn_forward") {
+        Ok(a) => Some(a),
+        Err(e) => {
+            println!("PJRT leg skipped: {e}");
+            None
+        }
+    };
 
     // Pack the model parameters the way the artifact expects.
     let w1 = ArgI32::from_kernel(&params.conv_weights[0]);
@@ -57,7 +61,7 @@ fn main() -> Result<()> {
 
     let mut sim_ms = 0.0f64;
     let mut sim_mj = 0.0f64;
-    let wall = std::time::Instant::now();
+    let mut legs = 2usize;
 
     for (i, img) in images.images.iter().enumerate() {
         // 1) golden executor.
@@ -68,40 +72,47 @@ fn main() -> Result<()> {
         let (pim_outs, stats) = coord.functional_run(&net, &params, img);
         let pim_out = pim_outs.last().unwrap();
         if pim_out != golden_out {
-            bail!("image {i}: PIM simulator diverged from golden executor");
+            eprintln!("image {i}: PIM simulator diverged from golden executor");
+            return ExitCode::FAILURE;
         }
         sim_ms += stats.total_latency_ms();
         sim_mj += stats.total_energy_mj();
 
-        // 3) PJRT execution of the AOT JAX/Pallas artifact.
-        let outs = artifact.run_i32(&[
-            ArgI32::from_qtensor(img),
-            w1.clone(),
-            bn_mul.clone(),
-            bn_add.clone(),
-            q1.clone(),
-            w2.clone(),
-            q2.clone(),
-        ])?;
-        let pjrt_out: Vec<i64> = outs[0].iter().map(|&v| v as i64).collect();
-        if pjrt_out != golden_out.data {
-            bail!(
-                "image {i}: PJRT artifact diverged from golden executor\n  pjrt:   {:?}\n  golden: {:?}",
-                pjrt_out,
-                golden_out.data
-            );
+        // 3) PJRT execution of the AOT JAX/Pallas artifact, if runnable.
+        if let Some(artifact) = &artifact {
+            let outs = match artifact.run_i32(&[
+                ArgI32::from_qtensor(img),
+                w1.clone(),
+                bn_mul.clone(),
+                bn_add.clone(),
+                q1.clone(),
+                w2.clone(),
+                q2.clone(),
+            ]) {
+                Ok(o) => o,
+                Err(e) => {
+                    eprintln!("image {i}: PJRT execution failed: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let pjrt_out: Vec<i64> = outs[0].iter().map(|&v| v as i64).collect();
+            if pjrt_out != golden_out.data {
+                eprintln!("image {i}: PJRT artifact diverged from golden executor");
+                return ExitCode::FAILURE;
+            }
+            legs = 3;
         }
-        println!("image {i}: golden == PIM-sim == PJRT  (output {:?})", &golden_out.data);
+        println!("image {i}: golden == PIM-sim{}  (output {:?})",
+            if legs == 3 { " == PJRT" } else { "" },
+            &golden_out.data);
     }
 
-    let wall_s = wall.elapsed().as_secs_f64();
-    println!("\n== three-way bit-exact agreement on {batch} images ==");
+    println!("\n== {legs}-way bit-exact agreement on {batch} images ==");
     println!(
-        "simulated PIM latency: {:.4} ms/img ({:.1} FPS), energy {:.4} mJ/img",
+        "simulated PIM latency: {:.4} ms/img, energy {:.4} mJ/img",
         sim_ms / batch as f64,
-        1000.0 * batch as f64 / sim_ms,
         sim_mj / batch as f64
     );
-    println!("host wall-clock: {:.2} s for {batch} images (incl. PJRT)", wall_s);
-    Ok(())
+    println!("for batched serving throughput, run the `serving` example");
+    ExitCode::SUCCESS
 }

@@ -1,0 +1,62 @@
+//! Bench: serving-runtime sweep over batch size × chip count.
+//!
+//! Serves a fixed closed burst of requests through the batched
+//! multi-chip runtime for every (batch, chips) cell and reports
+//! simulated throughput, mean/p95 latency, per-request energy and the
+//! weight-residency hit rate — the serving-scale view of the paper's
+//! Table 3 condition (weights streamed once per chip, reused across
+//! the batch).
+
+use std::time::Instant;
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::cnn::network::small_cnn;
+use nandspin::cnn::ref_exec::ModelParams;
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::serve::{serve, Request, ServeConfig};
+
+fn main() {
+    let t0 = Instant::now();
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 5);
+    let n = 16usize;
+    let images: Vec<QTensor> = (0..n)
+        .map(|i| {
+            QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, 40 + i as u64)
+        })
+        .collect();
+
+    println!("== serving sweep: {} requests of {} (closed burst) ==", n, net.name);
+    println!(
+        "{:>6} {:>6} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "batch", "chips", "FPS", "mean (µs)", "p95 (µs)", "mJ/req", "wt hit%"
+    );
+    for &batch in &[1usize, 4, 16] {
+        for &chips in &[1usize, 2, 4] {
+            let scfg = ServeConfig {
+                chips,
+                max_batch: batch,
+                ..ServeConfig::default()
+            };
+            let requests: Vec<Request> = Request::stream(images.clone());
+            let report = serve(&ArchConfig::paper(), &scfg, &net, &params, requests);
+            report.verify().expect("aggregation identities");
+            assert_eq!(report.served(), n);
+            let (hits, misses) = report
+                .chips
+                .iter()
+                .fold((0u64, 0u64), |(h, m), c| (h + c.weight_hits, m + c.weight_misses));
+            println!(
+                "{:>6} {:>6} {:>10.1} {:>12.2} {:>12.2} {:>12.4} {:>9.1}%",
+                batch,
+                chips,
+                report.sim_fps(),
+                report.mean_latency_ms() * 1e3,
+                report.p95_latency_ms() * 1e3,
+                report.total_energy_mj() / n as f64,
+                100.0 * hits as f64 / (hits + misses).max(1) as f64
+            );
+        }
+    }
+    println!("\n[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());
+}

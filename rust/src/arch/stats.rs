@@ -115,6 +115,45 @@ impl OpCounts {
         self.local_bus_bits += o.local_bus_bits;
         self.global_bus_bits += o.global_bus_bits;
     }
+
+    fn sub(&mut self, o: &OpCounts) {
+        self.erases -= o.erases;
+        self.program_steps -= o.program_steps;
+        self.programmed_bits -= o.programmed_bits;
+        self.reads -= o.reads;
+        self.ands -= o.ands;
+        self.bitcounts -= o.bitcounts;
+        self.buffer_accesses -= o.buffer_accesses;
+        self.local_bus_bits -= o.local_bus_bits;
+        self.global_bus_bits -= o.global_bus_bits;
+    }
+}
+
+/// Queue / batching counters of the serving runtime
+/// ([`crate::coordinator::serve`](mod@crate::coordinator::serve)):
+/// how requests moved through the
+/// dynamic batcher and the per-chip queues. Kept here next to [`Stats`]
+/// so the serving report can aggregate device-level and queue-level
+/// accounting through one module.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QueueCounters {
+    /// Requests accepted into the batcher.
+    pub enqueued: u64,
+    /// Batches emitted (all flush causes).
+    pub batches: u64,
+    /// Batches flushed because they reached the size target.
+    pub size_flushes: u64,
+    /// Batches flushed because the oldest request hit the deadline.
+    pub deadline_flushes: u64,
+    /// Batches flushed by the end-of-stream drain.
+    pub drain_flushes: u64,
+    /// Largest number of requests ever waiting in the batcher.
+    pub max_queue_depth: usize,
+    /// Largest batch emitted.
+    pub max_batch: usize,
+    /// Batches whose dispatch stalled on a full per-chip queue
+    /// (backpressure events).
+    pub stalled_batches: u64,
 }
 
 /// Full statistics record.
@@ -191,6 +230,30 @@ impl Stats {
         for o in others {
             self.ops.add(&o.ops);
         }
+    }
+
+    /// The increment recorded since `earlier` was snapshotted from the
+    /// same accumulating record: per-phase energies/latencies and op
+    /// counts subtract. Used by the serving runtime to attribute one
+    /// engine's monotonically growing stats to individual requests.
+    ///
+    /// # Panics
+    /// In debug builds, if `earlier` is not an earlier snapshot of
+    /// `self` (any op count would go negative).
+    pub fn delta_since(&self, earlier: &Stats) -> Stats {
+        debug_assert!(
+            self.ops.program_steps >= earlier.ops.program_steps
+                && self.ops.reads >= earlier.ops.reads
+                && self.ops.ands >= earlier.ops.ands,
+            "delta_since: `earlier` is not a prefix snapshot"
+        );
+        let mut d = self.clone();
+        for i in 0..d.phases.len() {
+            d.phases[i].energy_fj -= earlier.phases[i].energy_fj;
+            d.phases[i].latency_ns -= earlier.phases[i].latency_ns;
+        }
+        d.ops.sub(&earlier.ops);
+        d
     }
 
     /// Per-phase latency fractions (sums to 1 unless empty).
@@ -274,6 +337,29 @@ mod tests {
         a.merge_serial(&b);
         assert_eq!(a[Phase::Pooling].energy_fj, 11.0);
         assert_eq!(a[Phase::Pooling].latency_ns, 6.0);
+    }
+
+    #[test]
+    fn delta_since_recovers_the_increment() {
+        let mut s = Stats::default();
+        s.record(Phase::Convolution, 10.0, 1.0);
+        s.ops.ands += 3;
+        let snap = s.clone();
+        s.record(Phase::Convolution, 5.0, 2.0);
+        s.record(Phase::Pooling, 7.0, 3.0);
+        s.ops.ands += 2;
+        s.ops.reads += 4;
+        let d = s.delta_since(&snap);
+        assert_eq!(d[Phase::Convolution].energy_fj, 5.0);
+        assert_eq!(d[Phase::Convolution].latency_ns, 2.0);
+        assert_eq!(d[Phase::Pooling].energy_fj, 7.0);
+        assert_eq!(d.ops.ands, 2);
+        assert_eq!(d.ops.reads, 4);
+        // Identity: snapshot + delta == final totals.
+        let mut back = snap.clone();
+        back.merge_serial(&d);
+        assert_eq!(back.total_energy_fj(), s.total_energy_fj());
+        assert_eq!(back.ops, s.ops);
     }
 
     #[test]

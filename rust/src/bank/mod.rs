@@ -3,7 +3,7 @@
 
 pub mod controller;
 
-pub use controller::Controller;
+pub use controller::{Controller, WeightResidency};
 
 use crate::arch::config::ArchConfig;
 use crate::arch::stats::{Phase, Stats};

@@ -14,6 +14,7 @@
 
 use crate::arch::config::ArchConfig;
 use crate::arch::stats::{Phase, Stats};
+use crate::bank::controller::WeightResidency;
 use crate::cnn::layer::Layer;
 use crate::cnn::network::Network;
 use crate::cnn::quantize::{BnParams, QuantParams};
@@ -42,13 +43,40 @@ pub struct FunctionalEngine {
     cfg: ArchConfig,
     /// Accumulated cost statistics.
     pub stats: Stats,
+    /// Weight-residency tracker (serving mode). `None` — the default —
+    /// streams weights on every inference, the paper's latency condition.
+    residency: Option<WeightResidency>,
+    /// Conv layers encountered so far in the current `run` (residency
+    /// tag).
+    conv_seq: usize,
+    /// Identity (name, node count) of the network whose weights are
+    /// resident; a different network evicts them.
+    resident_net: Option<(String, usize)>,
 }
 
 impl FunctionalEngine {
     /// New engine for `cfg`.
     pub fn new(cfg: ArchConfig) -> Self {
         cfg.validate().expect("invalid config");
-        Self { cfg, stats: Stats::default() }
+        Self { cfg, stats: Stats::default(), residency: None, conv_seq: 0, resident_net: None }
+    }
+
+    /// Switch the engine to the Table 3 serving condition: each conv
+    /// layer's weights are streamed over chip I/O once and then stay
+    /// resident in the subarray buffers across subsequent inferences of
+    /// the *same network*. Running a different network (by name / node
+    /// count) evicts the resident set and re-streams; note that two
+    /// distinct `ModelParams` for one network are indistinguishable
+    /// here — a serving pool pairs each engine with one parameter set.
+    pub fn make_weights_resident(&mut self) {
+        if self.residency.is_none() {
+            self.residency = Some(WeightResidency::new());
+        }
+    }
+
+    /// Residency tracker, if the engine is in serving mode.
+    pub fn residency(&self) -> Option<&WeightResidency> {
+        self.residency.as_ref()
     }
 
     fn fresh_subarray(&self) -> Subarray {
@@ -119,6 +147,16 @@ impl FunctionalEngine {
     pub fn run(&mut self, net: &Network, params: &ModelParams, input: &QTensor) -> Vec<WideTensor> {
         assert_eq!((input.c, input.h, input.w), net.input);
         assert!(input.w <= self.cfg.cols, "feature map wider than subarray");
+        self.conv_seq = 0;
+        if self.residency.is_some() {
+            let identity = (net.name.clone(), net.nodes.len());
+            if self.resident_net.as_ref() != Some(&identity) {
+                if let Some(r) = self.residency.as_mut() {
+                    r.evict_all();
+                }
+                self.resident_net = Some(identity);
+            }
+        }
         let input_wide = WideTensor::from_q(input);
         // Off-chip load of the input image.
         self.charge_transfer(
@@ -248,8 +286,18 @@ impl FunctionalEngine {
             planes.push(per_bit);
         }
 
-        // --- weights arrive over the global bus once per layer.
-        self.charge_transfer((k.oc * k.ic * kh * kw * mbits) as u64, Phase::LoadData);
+        // --- weights arrive over the global bus once per layer; a
+        // resident engine (serving mode) holds them across inferences,
+        // so only the first touch of each conv layer is charged.
+        let tag = self.conv_seq;
+        self.conv_seq += 1;
+        let need_stream = match self.residency.as_mut() {
+            Some(r) => r.acquire(tag),
+            None => true,
+        };
+        if need_stream {
+            self.charge_transfer((k.oc * k.ic * kh * kw * mbits) as u64, Phase::LoadData);
+        }
 
         let mut y = WideTensor::zeros(k.oc, oh, ow);
         // One accumulation subarray per output row, reused across filters.
@@ -676,5 +724,68 @@ mod tests {
     #[test]
     fn small_cnn_other_seeds() {
         check_network(&small_cnn(3), 3, 1234);
+    }
+
+    #[test]
+    fn resident_weights_are_charged_once() {
+        let net = micro_cnn(4);
+        let params = ModelParams::random(&net, 3, 7);
+        let img = QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, 8);
+
+        // Streaming engine: two runs cost exactly twice one run.
+        let mut stream = FunctionalEngine::new(ArchConfig::paper());
+        stream.run(&net, &params, &img);
+        let one = stream.stats.clone();
+        stream.run(&net, &params, &img);
+        assert!(
+            (stream.stats.total_latency_ns() - 2.0 * one.total_latency_ns()).abs()
+                < 1e-9 * stream.stats.total_latency_ns()
+        );
+
+        // Resident engine: identical outputs, second run strictly cheaper
+        // (weight stream skipped), and the residency tracker records the
+        // miss-then-hit pattern.
+        let mut resident = FunctionalEngine::new(ArchConfig::paper());
+        resident.make_weights_resident();
+        let a = resident.run(&net, &params, &img);
+        let warm_snap = resident.stats.clone();
+        let b = resident.run(&net, &params, &img);
+        assert_eq!(a, b);
+        let warm = resident.stats.delta_since(&warm_snap);
+        assert!(warm.total_latency_ns() < one.total_latency_ns());
+        assert!(
+            warm[crate::arch::stats::Phase::LoadData].latency_ns
+                < one[crate::arch::stats::Phase::LoadData].latency_ns,
+            "warm run must skip the weight stream"
+        );
+        let r = resident.residency().expect("resident mode");
+        assert_eq!(r.misses as usize, r.resident_layers());
+        assert_eq!(r.hits, r.misses, "second pass hits every conv layer");
+    }
+
+    #[test]
+    fn switching_networks_evicts_resident_weights() {
+        let micro = micro_cnn(4);
+        let micro_params = ModelParams::random(&micro, 3, 7);
+        let micro_img =
+            QTensor::random(micro.input.0, micro.input.1, micro.input.2, micro.input_bits, 8);
+        let small = small_cnn(3);
+        let small_params = ModelParams::random(&small, 3, 9);
+        let small_img =
+            QTensor::random(small.input.0, small.input.1, small.input.2, small.input_bits, 10);
+
+        let mut eng = FunctionalEngine::new(ArchConfig::paper());
+        eng.make_weights_resident();
+        eng.run(&micro, &micro_params, &micro_img);
+        eng.run(&small, &small_params, &small_img);
+        // The network switch evicted micro's weights, so small's conv
+        // layers all missed: no stale hits were recorded.
+        let r = eng.residency().expect("resident mode");
+        assert_eq!(r.hits, 0, "different network must not hit micro's resident weights");
+        // And switching back misses again (micro was evicted).
+        eng.run(&micro, &micro_params, &micro_img);
+        let r = eng.residency().expect("resident mode");
+        assert_eq!(r.hits, 0);
+        assert_eq!(r.misses as usize, 1 + 2 + 1, "micro + small convs + micro again");
     }
 }

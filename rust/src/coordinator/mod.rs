@@ -8,14 +8,20 @@
 //! * [`analytic::AnalyticModel`] — closed-form op-count model for the
 //!   full-scale benchmark networks (AlexNet / VGG19 / ResNet50) and the
 //!   design-space sweeps; generates the paper's figures.
+//!
+//! On top of both sits the [`serve`](mod@serve) subsystem: the batched
+//! multi-chip serving runtime (dynamic batcher → shard router →
+//! weight-resident engine pools) that models the Table 3 steady-state
+//! deployment.
 
 pub mod analytic;
 pub mod functional;
-pub mod server;
+pub mod serve;
 
 pub use analytic::{AnalyticModel, Calibration};
 pub use functional::FunctionalEngine;
-pub use server::{serve, Completion, Request, ServeReport};
+pub use serve::serve;
+pub use serve::{Completion, Request, ServeConfig, ServeReport};
 
 use crate::arch::area::AreaModel;
 use crate::arch::config::ArchConfig;
@@ -74,6 +80,19 @@ impl Coordinator {
             &stats,
             area,
         )
+    }
+
+    /// Serve a request stream through the batched multi-chip runtime
+    /// (see [`serve()`](fn@serve::serve)) at this coordinator's
+    /// operating point.
+    pub fn serve(
+        &self,
+        scfg: &ServeConfig,
+        net: &Network,
+        params: &ModelParams,
+        requests: Vec<Request>,
+    ) -> ServeReport {
+        serve::serve(&self.cfg, scfg, net, params, requests)
     }
 
     /// Bit-accurate functional run; returns all node outputs plus stats.

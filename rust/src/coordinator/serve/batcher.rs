@@ -1,0 +1,204 @@
+//! Dynamic batcher: size- and deadline-triggered request batching on the
+//! simulated clock.
+//!
+//! Requests accumulate until either the batch reaches the configured
+//! size target (*size flush*) or the **oldest** pending request has
+//! waited out the batching deadline (*deadline flush*) — the standard
+//! serving trade-off between throughput (big batches amortise the
+//! per-batch weight-residency warm-up and chip hand-off) and tail
+//! latency (no request waits longer than the deadline just to fill a
+//! batch). A final *drain flush* empties the batcher at end-of-stream.
+//!
+//! The batcher is a pure state machine over simulated nanoseconds — no
+//! threads, no host clock — so every trigger path is unit-testable and
+//! the whole serving schedule stays deterministic.
+
+use crate::arch::stats::QueueCounters;
+
+use super::Request;
+
+/// Why a batch left the batcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushCause {
+    /// The batch reached the size target.
+    Size,
+    /// The oldest pending request hit the batching deadline.
+    Deadline,
+    /// End-of-stream drain.
+    Drain,
+}
+
+/// One emitted batch: the requests plus their arrival times.
+#[derive(Debug)]
+pub struct Flush {
+    /// What triggered the flush.
+    pub cause: FlushCause,
+    /// Simulated time the batch left the batcher (ns).
+    pub at_ns: f64,
+    /// The batched requests, in arrival order.
+    pub requests: Vec<Request>,
+    /// Arrival time of each request (ns), parallel to `requests`.
+    pub arrivals_ns: Vec<f64>,
+}
+
+impl Flush {
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// True when the batch is empty (never emitted by the batcher).
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// The dynamic batcher.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    max_batch: usize,
+    deadline_ns: f64,
+    pending: Vec<(Request, f64)>,
+    /// Queue / flush counters.
+    pub counters: QueueCounters,
+}
+
+impl DynamicBatcher {
+    /// Batcher with a size target of `max_batch` requests and a batching
+    /// deadline of `deadline_ns` simulated nanoseconds.
+    ///
+    /// # Panics
+    /// If `max_batch` is 0 or `deadline_ns` is negative/NaN.
+    pub fn new(max_batch: usize, deadline_ns: f64) -> Self {
+        assert!(max_batch >= 1, "batch size target must be >= 1");
+        assert!(deadline_ns >= 0.0, "deadline must be a non-negative time");
+        Self { max_batch, deadline_ns, pending: Vec::new(), counters: QueueCounters::default() }
+    }
+
+    /// Requests currently waiting.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Arrival time of the oldest pending request, if any (ns).
+    pub fn oldest_arrival_ns(&self) -> Option<f64> {
+        self.pending.first().map(|&(_, t)| t)
+    }
+
+    /// Accept a request arriving at `now_ns`. Returns the flushed batch
+    /// when this arrival fills it to the size target.
+    ///
+    /// Callers should [`poll`](Self::poll) at (or before) `now_ns` first
+    /// so an overdue deadline flush is emitted ahead of the new arrival.
+    pub fn push(&mut self, req: Request, now_ns: f64) -> Option<Flush> {
+        self.pending.push((req, now_ns));
+        self.counters.enqueued += 1;
+        self.counters.max_queue_depth = self.counters.max_queue_depth.max(self.pending.len());
+        if self.pending.len() >= self.max_batch {
+            return Some(self.flush(FlushCause::Size, now_ns));
+        }
+        None
+    }
+
+    /// Fire the deadline timer: if the oldest pending request has waited
+    /// `deadline_ns` by `now_ns`, flush. The emitted batch is stamped
+    /// with the exact deadline expiry, not `now_ns`, so accounting is
+    /// independent of how sparsely the clock is polled.
+    pub fn poll(&mut self, now_ns: f64) -> Option<Flush> {
+        let due = self.oldest_arrival_ns()? + self.deadline_ns;
+        if due <= now_ns {
+            return Some(self.flush(FlushCause::Deadline, due));
+        }
+        None
+    }
+
+    /// End-of-stream: flush whatever is pending at `now_ns`.
+    pub fn drain(&mut self, now_ns: f64) -> Option<Flush> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        Some(self.flush(FlushCause::Drain, now_ns))
+    }
+
+    fn flush(&mut self, cause: FlushCause, at_ns: f64) -> Flush {
+        let (requests, arrivals_ns) = std::mem::take(&mut self.pending).into_iter().unzip();
+        let f = Flush { cause, at_ns, requests, arrivals_ns };
+        self.counters.batches += 1;
+        self.counters.max_batch = self.counters.max_batch.max(f.len());
+        match cause {
+            FlushCause::Size => self.counters.size_flushes += 1,
+            FlushCause::Deadline => self.counters.deadline_flushes += 1,
+            FlushCause::Drain => self.counters.drain_flushes += 1,
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::tensor::QTensor;
+
+    fn req(id: u64) -> Request {
+        Request { id, image: QTensor::random(1, 4, 6, 2, id) }
+    }
+
+    #[test]
+    fn size_trigger_flushes_exactly_at_target() {
+        let mut b = DynamicBatcher::new(3, 1e6);
+        assert!(b.push(req(0), 0.0).is_none());
+        assert!(b.push(req(1), 10.0).is_none());
+        let f = b.push(req(2), 20.0).expect("size flush");
+        assert_eq!(f.cause, FlushCause::Size);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.at_ns, 20.0);
+        assert_eq!(f.arrivals_ns, vec![0.0, 10.0, 20.0]);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.counters.size_flushes, 1);
+        assert_eq!(b.counters.max_batch, 3);
+    }
+
+    #[test]
+    fn deadline_trigger_fires_at_exact_expiry() {
+        let mut b = DynamicBatcher::new(8, 100.0);
+        assert!(b.push(req(0), 50.0).is_none());
+        assert!(b.push(req(1), 60.0).is_none());
+        // Not yet due.
+        assert!(b.poll(149.9).is_none());
+        // Polled late: the flush is stamped at the expiry (150), not the
+        // poll time (500).
+        let f = b.poll(500.0).expect("deadline flush");
+        assert_eq!(f.cause, FlushCause::Deadline);
+        assert_eq!(f.at_ns, 150.0);
+        assert_eq!(f.len(), 2);
+        assert_eq!(b.counters.deadline_flushes, 1);
+        // Nothing pending → no further deadline flushes.
+        assert!(b.poll(1e9).is_none());
+    }
+
+    #[test]
+    fn drain_empties_the_batcher() {
+        let mut b = DynamicBatcher::new(8, 1e6);
+        assert!(b.drain(0.0).is_none(), "nothing to drain");
+        b.push(req(0), 0.0);
+        let f = b.drain(42.0).expect("drain flush");
+        assert_eq!(f.cause, FlushCause::Drain);
+        assert_eq!(f.at_ns, 42.0);
+        assert_eq!(f.len(), 1);
+        assert_eq!(b.counters.drain_flushes, 1);
+        assert_eq!(b.counters.enqueued, 1);
+    }
+
+    #[test]
+    fn max_queue_depth_tracks_high_water_mark() {
+        let mut b = DynamicBatcher::new(4, 1e6);
+        b.push(req(0), 0.0);
+        b.push(req(1), 1.0);
+        b.push(req(2), 2.0);
+        assert_eq!(b.counters.max_queue_depth, 3);
+        b.push(req(3), 3.0).expect("size flush");
+        b.push(req(4), 4.0);
+        assert_eq!(b.counters.max_queue_depth, 4);
+        assert_eq!(b.counters.enqueued, 5);
+    }
+}

@@ -1,0 +1,293 @@
+//! The batched multi-chip serving runtime: the L3 deployment topology.
+//!
+//! The paper's headline gains (the ~2.6× speedup / ~1.4× energy
+//! efficiency of the parallelism-friendly mapping) pay off at *serving*
+//! scale, where weights are loaded once and reused across a stream of
+//! requests — Table 3's operating condition. This subsystem models that
+//! deployment end to end:
+//!
+//! ```text
+//!  requests ──▶ DynamicBatcher ──▶ ShardRouter ──▶ per-chip queues
+//!               (size/deadline       (deterministic   (bounded; FIFO;
+//!                flush)               least-loaded)    backpressure)
+//!                                                        │
+//!                                      weight-resident   ▼
+//!                         ServeReport ◀── engine pool (1 chip = 1
+//!                                          FunctionalEngine, weights
+//!                                          streamed once per chip)
+//! ```
+//!
+//! * [`batcher::DynamicBatcher`] groups requests until a batch fills
+//!   (size flush) or the oldest request hits the deadline (deadline
+//!   flush) — the throughput/tail-latency dial.
+//! * [`router::ShardRouter`] maps each batch onto one of N simulated
+//!   chips, deterministically (least routed work, lowest index ties).
+//! * [`pool`] executes each chip's batches on its own weight-resident
+//!   [`FunctionalEngine`](crate::coordinator::functional::FunctionalEngine)
+//!   (one host thread per chip) and schedules them on the simulated
+//!   clock behind a bounded queue ([`pool::timeline`]), so a saturated
+//!   chip exerts backpressure instead of queueing unboundedly.
+//! * [`report::ServeReport`] rolls per-request completions up into
+//!   per-chip and aggregate latency/energy accounts and can
+//!   [`verify`](report::ServeReport::verify) that every roll-up equals
+//!   the fold of its parts.
+//!
+//! Everything is deterministic: batching and routing run on the
+//! simulated clock before execution starts, chips are independent, and
+//! host threads only parallelise the simulation work itself.
+
+pub mod batcher;
+pub mod pool;
+pub mod report;
+pub mod router;
+
+pub use batcher::{DynamicBatcher, Flush, FlushCause};
+pub use pool::{BatchTiming, PlannedBatch};
+pub use report::{ChipReport, Completion, ServeReport};
+pub use router::ShardRouter;
+
+use std::time::Instant;
+
+use crate::arch::config::ArchConfig;
+use crate::cnn::network::Network;
+use crate::cnn::ref_exec::ModelParams;
+use crate::cnn::tensor::QTensor;
+
+/// One inference request.
+#[derive(Debug)]
+pub struct Request {
+    /// Caller-assigned id.
+    pub id: u64,
+    /// Input image.
+    pub image: QTensor,
+}
+
+impl Request {
+    /// Work weight of the request for routing: its input volume in bits.
+    pub fn work_bits(&self) -> u64 {
+        (self.image.c * self.image.h * self.image.w * self.image.bits as usize) as u64
+    }
+
+    /// Number `images` into a request stream: ids `0..n` in order.
+    pub fn stream(images: Vec<QTensor>) -> Vec<Request> {
+        images
+            .into_iter()
+            .enumerate()
+            .map(|(i, image)| Request { id: i as u64, image })
+            .collect()
+    }
+}
+
+/// Configuration of the serving runtime.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Simulated PIM chips (each a full weight replica with its own
+    /// functional engine).
+    pub chips: usize,
+    /// Batch size target: a batch flushes as soon as it holds this many
+    /// requests.
+    pub max_batch: usize,
+    /// Batching deadline in simulated microseconds: no request waits
+    /// longer than this in the batcher.
+    pub deadline_us: f64,
+    /// Per-chip queue capacity in batches (waiting + in service). A
+    /// flush into a full queue stalls — backpressure.
+    pub queue_depth: usize,
+    /// Simulated inter-arrival gap of the request stream (ns); `0.0`
+    /// models a closed burst where everything arrives at once.
+    pub arrival_interval_ns: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            chips: 4,
+            max_batch: 8,
+            deadline_us: 50.0,
+            queue_depth: 2,
+            arrival_interval_ns: 0.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.chips == 0 {
+            return Err("need at least one chip".into());
+        }
+        if self.max_batch == 0 {
+            return Err("batch size target must be >= 1".into());
+        }
+        if self.deadline_us.is_nan() || self.deadline_us < 0.0 {
+            return Err("deadline must be a non-negative time".into());
+        }
+        if self.queue_depth == 0 {
+            return Err("queue depth must be >= 1".into());
+        }
+        if self.arrival_interval_ns.is_nan() || self.arrival_interval_ns < 0.0 {
+            return Err("arrival interval must be a non-negative time".into());
+        }
+        Ok(())
+    }
+}
+
+/// Serve `requests` through the batched multi-chip runtime.
+///
+/// Requests arrive on the simulated clock at `scfg.arrival_interval_ns`
+/// spacing (in the given order); the stream drains at the last arrival.
+/// Outputs are bit-exact with
+/// [`ref_exec::execute`](crate::cnn::ref_exec::execute) per request,
+/// whichever chip serves it.
+///
+/// # Panics
+/// If `scfg` is invalid or a network output is empty.
+pub fn serve(
+    cfg: &ArchConfig,
+    scfg: &ServeConfig,
+    net: &Network,
+    params: &ModelParams,
+    requests: Vec<Request>,
+) -> ServeReport {
+    scfg.validate().expect("invalid serve config");
+    let started = Instant::now();
+
+    // Plan: walk the arrival stream through batcher + router on the
+    // simulated clock. Deterministic — no execution yet.
+    let mut batcher = DynamicBatcher::new(scfg.max_batch, scfg.deadline_us * 1e3);
+    let mut router = ShardRouter::new(scfg.chips);
+    let mut planned: Vec<PlannedBatch> = Vec::new();
+    let mut seq = 0usize;
+    let mut last_arrival_ns = 0.0f64;
+    for (i, req) in requests.into_iter().enumerate() {
+        let t = i as f64 * scfg.arrival_interval_ns;
+        last_arrival_ns = t;
+        if let Some(f) = batcher.poll(t) {
+            planned.push(plan(f, &mut router, &mut seq));
+        }
+        if let Some(f) = batcher.push(req, t) {
+            planned.push(plan(f, &mut router, &mut seq));
+        }
+    }
+    if let Some(f) = batcher.drain(last_arrival_ns) {
+        planned.push(plan(f, &mut router, &mut seq));
+    }
+    let counters = batcher.counters;
+
+    // Execute: one host thread per chip, weight-resident engines.
+    let results = pool::execute(cfg, net, params, scfg.chips, planned);
+
+    // Account: schedule each chip's batches behind its bounded queue.
+    let timings: Vec<Vec<BatchTiming>> = results
+        .iter()
+        .map(|r| {
+            let flushes: Vec<f64> = r.batches.iter().map(|b| b.flush_ns).collect();
+            let services: Vec<f64> = r.batches.iter().map(|b| b.service_ns()).collect();
+            pool::timeline(&flushes, &services, scfg.queue_depth)
+        })
+        .collect();
+    ServeReport::assemble(results, timings, counters, started.elapsed().as_secs_f64())
+}
+
+/// Route one flushed batch and stamp it with its sequence number.
+fn plan(flush: Flush, router: &mut ShardRouter, seq: &mut usize) -> PlannedBatch {
+    let work: u64 = flush.requests.iter().map(Request::work_bits).sum();
+    let chip = router.route(work);
+    let b = PlannedBatch {
+        seq: *seq,
+        chip,
+        cause: flush.cause,
+        flush_ns: flush.at_ns,
+        requests: flush.requests,
+        arrivals_ns: flush.arrivals_ns,
+    };
+    *seq += 1;
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::network::small_cnn;
+    use crate::cnn::ref_exec;
+
+    fn requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
+        Request::stream(
+            (0..n)
+                .map(|i| {
+                    QTensor::random(
+                        net.input.0,
+                        net.input.1,
+                        net.input.2,
+                        net.input_bits,
+                        seed + i as u64,
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn serves_bit_exactly_across_chips() {
+        let net = small_cnn(3);
+        let params = ModelParams::random(&net, 3, 2);
+        let reqs = requests(&net, 6, 100);
+        let images: Vec<QTensor> = reqs.iter().map(|r| r.image.clone()).collect();
+        let scfg = ServeConfig { chips: 3, max_batch: 2, ..ServeConfig::default() };
+        let report = serve(&ArchConfig::paper(), &scfg, &net, &params, reqs);
+        assert_eq!(report.served(), 6);
+        report.verify().expect("aggregation identities");
+        for c in &report.completions {
+            let golden = ref_exec::execute(&net, &params, &images[c.id as usize]);
+            assert_eq!(&c.output, golden.last().unwrap(), "request {}", c.id);
+            assert!(c.stats.total_latency_ns() > 0.0);
+        }
+        // All three chips participated in the closed burst.
+        let distinct: std::collections::HashSet<usize> =
+            report.completions.iter().map(|c| c.chip).collect();
+        assert_eq!(distinct.len(), 3, "expected all chips busy, got {distinct:?}");
+        assert!(report.sim_fps() > 0.0);
+    }
+
+    #[test]
+    fn chip_assignment_is_deterministic_across_runs() {
+        let net = small_cnn(2);
+        let params = ModelParams::random(&net, 2, 5);
+        let scfg = ServeConfig { chips: 2, max_batch: 2, ..ServeConfig::default() };
+        let assignment = |seed: u64| {
+            let report =
+                serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, 6, seed));
+            let mut by_id: Vec<(u64, usize)> =
+                report.completions.iter().map(|c| (c.id, c.chip)).collect();
+            by_id.sort_unstable();
+            by_id
+        };
+        assert_eq!(assignment(9), assignment(9));
+    }
+
+    #[test]
+    fn resident_weights_make_big_batches_cheaper_per_request() {
+        // One chip, one batch: the weight stream amortises across the
+        // batch, so per-request mean energy falls as the batch grows.
+        let net = small_cnn(3);
+        let params = ModelParams::random(&net, 3, 7);
+        let scfg = ServeConfig { chips: 1, max_batch: 16, ..ServeConfig::default() };
+        let run = |n: usize| {
+            let report =
+                serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, n, 30));
+            report.total_energy_mj() / n as f64
+        };
+        assert!(run(4) < run(1), "batching must amortise the weight stream");
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        assert!(ServeConfig { chips: 0, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { max_batch: 0, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { queue_depth: 0, ..ServeConfig::default() }.validate().is_err());
+        assert!(
+            ServeConfig { deadline_us: f64::NAN, ..ServeConfig::default() }.validate().is_err()
+        );
+        assert!(ServeConfig::default().validate().is_ok());
+    }
+}

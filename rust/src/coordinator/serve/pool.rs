@@ -1,0 +1,246 @@
+//! Weight-resident engine pool and the per-chip queue timeline.
+//!
+//! Execution model: one [`FunctionalEngine`] per simulated PIM chip,
+//! switched into the Table 3 serving condition
+//! ([`FunctionalEngine::make_weights_resident`]) so the network's
+//! weights cross chip I/O once per chip and are then reused by every
+//! request the chip serves. Chips are independent (full weight
+//! replicas), so the pool runs one host thread per chip; results are
+//! collected in chip order and the simulated-time accounting is done
+//! afterwards by the pure [`timeline`] scheduler, which keeps the whole
+//! run deterministic regardless of host-thread interleaving.
+//!
+//! [`timeline`] models each chip as a FIFO single server behind a
+//! bounded batch queue: a batch flushed while the queue is full is held
+//! back (backpressure) until a slot frees, which is how a saturated
+//! chip pushes delay upstream instead of queueing unboundedly.
+
+use std::thread;
+
+use crate::arch::config::ArchConfig;
+use crate::arch::stats::Stats;
+use crate::cnn::network::Network;
+use crate::cnn::ref_exec::{ModelParams, WideTensor};
+
+use crate::coordinator::functional::FunctionalEngine;
+
+use super::batcher::FlushCause;
+use super::Request;
+
+/// A batch after planning: flushed, routed, awaiting execution.
+#[derive(Debug)]
+pub struct PlannedBatch {
+    /// Global flush sequence number (batcher emission order).
+    pub seq: usize,
+    /// Chip the router assigned.
+    pub chip: usize,
+    /// Why the batcher flushed it.
+    pub cause: FlushCause,
+    /// Simulated flush time (ns).
+    pub flush_ns: f64,
+    /// The batched requests, in arrival order.
+    pub requests: Vec<Request>,
+    /// Arrival time of each request (ns), parallel to `requests`.
+    pub arrivals_ns: Vec<f64>,
+}
+
+/// One executed request: output plus its own simulated cost.
+#[derive(Debug)]
+pub struct ExecutedRequest {
+    /// Request id.
+    pub id: u64,
+    /// Final network output.
+    pub output: WideTensor,
+    /// Simulated PIM cost of this request alone (engine-stats delta).
+    pub stats: Stats,
+}
+
+/// One executed batch, still carrying its planning metadata.
+#[derive(Debug)]
+pub struct ExecutedBatch {
+    /// Global flush sequence number.
+    pub seq: usize,
+    /// Why the batcher flushed it.
+    pub cause: FlushCause,
+    /// Simulated flush time (ns).
+    pub flush_ns: f64,
+    /// Per-request arrival times (ns).
+    pub arrivals_ns: Vec<f64>,
+    /// Executed requests, in batch order.
+    pub requests: Vec<ExecutedRequest>,
+}
+
+impl ExecutedBatch {
+    /// Serial service time of the whole batch on its chip (ns).
+    pub fn service_ns(&self) -> f64 {
+        self.requests.iter().map(|r| r.stats.total_latency_ns()).sum()
+    }
+}
+
+/// Everything one chip produced.
+#[derive(Debug)]
+pub struct ChipResult {
+    /// Chip index.
+    pub chip: usize,
+    /// Executed batches, in dispatch order.
+    pub batches: Vec<ExecutedBatch>,
+    /// Weight-residency hits on this chip's engine.
+    pub weight_hits: u64,
+    /// Weight-residency misses (streams) on this chip's engine.
+    pub weight_misses: u64,
+}
+
+/// Execute `planned` batches on `chips` weight-resident engines, one
+/// host thread per chip. Returns per-chip results ordered by chip
+/// index; within a chip, batches keep their flush order.
+pub fn execute(
+    cfg: &ArchConfig,
+    net: &Network,
+    params: &ModelParams,
+    chips: usize,
+    planned: Vec<PlannedBatch>,
+) -> Vec<ChipResult> {
+    let mut per_chip: Vec<Vec<PlannedBatch>> = (0..chips).map(|_| Vec::new()).collect();
+    for b in planned {
+        assert!(b.chip < chips, "router produced an out-of-range chip");
+        per_chip[b.chip].push(b);
+    }
+
+    thread::scope(|scope| {
+        let handles: Vec<_> = per_chip
+            .into_iter()
+            .enumerate()
+            .map(|(chip, batches)| {
+                scope.spawn(move || run_chip(cfg, net, params, chip, batches))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("chip worker panicked")).collect()
+    })
+}
+
+/// Serve one chip's batches on a fresh weight-resident engine.
+fn run_chip(
+    cfg: &ArchConfig,
+    net: &Network,
+    params: &ModelParams,
+    chip: usize,
+    batches: Vec<PlannedBatch>,
+) -> ChipResult {
+    let mut engine = FunctionalEngine::new(cfg.clone());
+    engine.make_weights_resident();
+    let mut out = Vec::with_capacity(batches.len());
+    for b in batches {
+        let mut executed = Vec::with_capacity(b.requests.len());
+        for req in b.requests {
+            let before = engine.stats.clone();
+            let mut outputs = engine.run(net, params, &req.image);
+            let output = outputs.pop().expect("non-empty network");
+            let stats = engine.stats.delta_since(&before);
+            executed.push(ExecutedRequest { id: req.id, output, stats });
+        }
+        out.push(ExecutedBatch {
+            seq: b.seq,
+            cause: b.cause,
+            flush_ns: b.flush_ns,
+            arrivals_ns: b.arrivals_ns,
+            requests: executed,
+        });
+    }
+    let (hits, misses) = engine
+        .residency()
+        .map(|r| (r.hits, r.misses))
+        .unwrap_or((0, 0));
+    ChipResult { chip, batches: out, weight_hits: hits, weight_misses: misses }
+}
+
+/// Dispatch timing of one batch on its chip.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchTiming {
+    /// When the batch entered the chip queue (ns). Later than the flush
+    /// time iff the queue was full (backpressure).
+    pub enqueue_ns: f64,
+    /// When the chip started executing the batch (ns).
+    pub start_ns: f64,
+    /// When the chip finished the batch (ns).
+    pub finish_ns: f64,
+    /// True when the batch stalled on a full queue before enqueueing.
+    pub stalled: bool,
+}
+
+/// Simulated-time schedule of one chip's batches: FIFO single server
+/// behind a bounded queue of `queue_depth` batches (waiting + in
+/// service; `queue_depth == 1` means no buffering — a new batch waits
+/// for the previous one to finish before it is even accepted).
+///
+/// `flush_ns[i]` is when batch `i` became ready, `service_ns[i]` how
+/// long it occupies the chip; both slices run in flush order.
+///
+/// # Panics
+/// If the slices differ in length or `queue_depth` is 0.
+pub fn timeline(flush_ns: &[f64], service_ns: &[f64], queue_depth: usize) -> Vec<BatchTiming> {
+    assert_eq!(flush_ns.len(), service_ns.len());
+    assert!(queue_depth >= 1, "queue depth must be >= 1");
+    let mut timings: Vec<BatchTiming> = Vec::with_capacity(flush_ns.len());
+    for i in 0..flush_ns.len() {
+        // Backpressure: wait for the batch `queue_depth` places ahead to
+        // clear the queue before this one can enter it.
+        let free_slot_ns = if i >= queue_depth { timings[i - queue_depth].finish_ns } else { 0.0 };
+        let enqueue_ns = flush_ns[i].max(free_slot_ns);
+        let prev_finish = if i > 0 { timings[i - 1].finish_ns } else { 0.0 };
+        let start_ns = enqueue_ns.max(prev_finish);
+        timings.push(BatchTiming {
+            enqueue_ns,
+            start_ns,
+            finish_ns: start_ns + service_ns[i],
+            stalled: enqueue_ns > flush_ns[i],
+        });
+    }
+    timings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_chip_starts_batches_at_flush_time() {
+        let t = timeline(&[0.0, 100.0], &[10.0, 10.0], 2);
+        assert_eq!(t[0].start_ns, 0.0);
+        assert_eq!(t[0].finish_ns, 10.0);
+        assert_eq!(t[1].start_ns, 100.0, "chip idle, no queueing");
+        assert!(!t[0].stalled && !t[1].stalled);
+    }
+
+    #[test]
+    fn busy_chip_queues_fifo() {
+        let t = timeline(&[0.0, 1.0, 2.0], &[10.0, 10.0, 10.0], 3);
+        assert_eq!(t[1].start_ns, 10.0);
+        assert_eq!(t[2].start_ns, 20.0);
+        assert_eq!(t[2].finish_ns, 30.0);
+        assert!(!t.iter().any(|b| b.stalled), "queue depth 3 absorbs all three");
+    }
+
+    #[test]
+    fn full_queue_applies_backpressure() {
+        // Depth 2: batch 2 cannot enqueue until batch 0 finishes, batch 3
+        // until batch 1 finishes — even though all flush at t=0.
+        let t = timeline(&[0.0, 0.0, 0.0, 0.0], &[10.0, 10.0, 10.0, 10.0], 2);
+        assert_eq!(t[2].enqueue_ns, 10.0);
+        assert!(t[2].stalled);
+        assert_eq!(t[3].enqueue_ns, 20.0);
+        assert!(t[3].stalled);
+        // FIFO service order is preserved under backpressure.
+        assert_eq!(
+            t.iter().map(|b| b.start_ns).collect::<Vec<_>>(),
+            vec![0.0, 10.0, 20.0, 30.0]
+        );
+    }
+
+    #[test]
+    fn depth_one_serialises_completely() {
+        let t = timeline(&[0.0, 0.0], &[5.0, 5.0], 1);
+        assert_eq!(t[1].enqueue_ns, 5.0, "no buffering at depth 1");
+        assert!(t[1].stalled);
+        assert_eq!(t[1].finish_ns, 10.0);
+    }
+}

@@ -1,0 +1,434 @@
+//! Serving reports: per-request completions, per-chip accounts and the
+//! aggregate view, with self-checking aggregation identities.
+//!
+//! All times are simulated nanoseconds on the accelerator clock (the
+//! same unit [`Stats`] uses); `wall_seconds` is the only host-side
+//! number. The cardinal rule is that every aggregate is a fold of the
+//! per-request records — [`ServeReport::verify`] re-derives the totals
+//! and fails loudly if any roll-up drifted from its parts.
+
+use std::fmt;
+
+use crate::arch::stats::{QueueCounters, Stats};
+use crate::cnn::ref_exec::WideTensor;
+
+use super::pool::{BatchTiming, ChipResult};
+
+/// One completed request.
+#[derive(Debug)]
+pub struct Completion {
+    /// Request id.
+    pub id: u64,
+    /// Chip that served the request.
+    pub chip: usize,
+    /// Global sequence number of the batch it rode in.
+    pub batch: usize,
+    /// Final network output.
+    pub output: WideTensor,
+    /// Simulated PIM cost of this request alone.
+    pub stats: Stats,
+    /// Simulated arrival time (ns).
+    pub arrival_ns: f64,
+    /// When its chip started executing it (ns).
+    pub start_ns: f64,
+    /// When its chip finished it (ns).
+    pub finish_ns: f64,
+}
+
+impl Completion {
+    /// Time spent waiting (batcher + chip queue) before execution (ns).
+    pub fn queue_wait_ns(&self) -> f64 {
+        self.start_ns - self.arrival_ns
+    }
+
+    /// End-to-end simulated latency: arrival → finish (ns).
+    pub fn latency_ns(&self) -> f64 {
+        self.finish_ns - self.arrival_ns
+    }
+
+    /// Pure execution (service) time on the chip (ns).
+    pub fn service_ns(&self) -> f64 {
+        self.finish_ns - self.start_ns
+    }
+}
+
+/// Per-chip account.
+#[derive(Debug)]
+pub struct ChipReport {
+    /// Chip index.
+    pub chip: usize,
+    /// Requests served.
+    pub served: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Batches that stalled on this chip's full queue (backpressure).
+    pub stalled_batches: u64,
+    /// Serial merge of the chip's per-request stats.
+    pub stats: Stats,
+    /// Total execution time (ns) — the chip's busy time.
+    pub busy_ns: f64,
+    /// When the chip finished its last batch (ns; 0 when idle all run).
+    pub finish_ns: f64,
+    /// Total queue wait accumulated by this chip's requests (ns).
+    pub queue_wait_ns: f64,
+    /// Weight-residency hits on this chip's engine.
+    pub weight_hits: u64,
+    /// Weight-residency misses (weight streams) on this chip's engine.
+    pub weight_misses: u64,
+}
+
+impl ChipReport {
+    /// Fraction of the run's makespan this chip spent executing.
+    pub fn utilisation(&self, makespan_ns: f64) -> f64 {
+        if makespan_ns > 0.0 {
+            self.busy_ns / makespan_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Summary of one serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// All completions, ordered by finish time (ties by id).
+    pub completions: Vec<Completion>,
+    /// Per-chip accounts, ordered by chip index.
+    pub chips: Vec<ChipReport>,
+    /// Batcher / queue counters.
+    pub counters: QueueCounters,
+    /// Host wall-clock the simulation itself took, seconds.
+    pub wall_seconds: f64,
+}
+
+impl ServeReport {
+    /// Build the report from per-chip execution results and their queue
+    /// timelines (`timings[chip]` parallel to `results[chip].batches`).
+    pub(super) fn assemble(
+        results: Vec<ChipResult>,
+        timings: Vec<Vec<BatchTiming>>,
+        counters: QueueCounters,
+        wall_seconds: f64,
+    ) -> Self {
+        let mut completions = Vec::new();
+        let mut chips = Vec::with_capacity(results.len());
+        let mut counters = counters;
+        for (result, chip_timings) in results.into_iter().zip(timings) {
+            assert_eq!(result.batches.len(), chip_timings.len());
+            let mut report = ChipReport {
+                chip: result.chip,
+                served: 0,
+                batches: 0,
+                stalled_batches: 0,
+                stats: Stats::default(),
+                busy_ns: 0.0,
+                finish_ns: 0.0,
+                queue_wait_ns: 0.0,
+                weight_hits: result.weight_hits,
+                weight_misses: result.weight_misses,
+            };
+            for (batch, timing) in result.batches.into_iter().zip(chip_timings) {
+                report.batches += 1;
+                if timing.stalled {
+                    report.stalled_batches += 1;
+                    counters.stalled_batches += 1;
+                }
+                report.finish_ns = report.finish_ns.max(timing.finish_ns);
+                // Requests in a batch run serially on the chip.
+                let mut cursor_ns = timing.start_ns;
+                for (req, arrival_ns) in batch.requests.into_iter().zip(batch.arrivals_ns) {
+                    let service = req.stats.total_latency_ns();
+                    let completion = Completion {
+                        id: req.id,
+                        chip: result.chip,
+                        batch: batch.seq,
+                        output: req.output,
+                        stats: req.stats,
+                        arrival_ns,
+                        start_ns: cursor_ns,
+                        finish_ns: cursor_ns + service,
+                    };
+                    cursor_ns += service;
+                    report.served += 1;
+                    report.busy_ns += service;
+                    report.queue_wait_ns += completion.queue_wait_ns();
+                    report.stats.merge_serial(&completion.stats);
+                    completions.push(completion);
+                }
+            }
+            chips.push(report);
+        }
+        completions.sort_by(|a, b| {
+            a.finish_ns.total_cmp(&b.finish_ns).then(a.id.cmp(&b.id))
+        });
+        Self { completions, chips, counters, wall_seconds }
+    }
+
+    /// Requests served.
+    pub fn served(&self) -> usize {
+        self.completions.len()
+    }
+
+    /// Simulated makespan: when the last chip went idle (ns).
+    pub fn makespan_ns(&self) -> f64 {
+        self.chips.iter().fold(0.0f64, |m, c| m.max(c.finish_ns))
+    }
+
+    /// Aggregate throughput over the run: requests per simulated second.
+    pub fn sim_fps(&self) -> f64 {
+        let span = self.makespan_ns();
+        if span > 0.0 {
+            self.served() as f64 / (span * 1e-9)
+        } else {
+            0.0
+        }
+    }
+
+    /// Serial merge of every request's simulated stats.
+    pub fn total_stats(&self) -> Stats {
+        let mut total = Stats::default();
+        for c in &self.chips {
+            total.merge_serial(&c.stats);
+        }
+        total
+    }
+
+    /// Total simulated energy across all requests (mJ).
+    pub fn total_energy_mj(&self) -> f64 {
+        self.total_stats().total_energy_mj()
+    }
+
+    /// Mean end-to-end simulated latency (ms).
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.completions.iter().map(|c| c.latency_ns()).sum();
+        sum / self.completions.len() as f64 * 1e-6
+    }
+
+    /// p95 end-to-end simulated latency (ms).
+    pub fn p95_latency_ms(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        let mut lat: Vec<f64> = self.completions.iter().map(|c| c.latency_ns()).collect();
+        lat.sort_by(f64::total_cmp);
+        let idx = ((lat.len() as f64 * 0.95).ceil() as usize).clamp(1, lat.len()) - 1;
+        lat[idx] * 1e-6
+    }
+
+    /// Check the aggregation identities: every per-chip and aggregate
+    /// number must equal the fold of its per-request parts, and the
+    /// queue counters must be consistent with the emitted batches.
+    pub fn verify(&self) -> Result<(), String> {
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0);
+        if self.counters.enqueued != self.served() as u64 {
+            return Err(format!(
+                "enqueued {} != completions {}",
+                self.counters.enqueued,
+                self.served()
+            ));
+        }
+        let chip_served: u64 = self.chips.iter().map(|c| c.served).sum();
+        if chip_served != self.served() as u64 {
+            return Err(format!("chip served sum {} != completions {}", chip_served, self.served()));
+        }
+        let chip_batches: u64 = self.chips.iter().map(|c| c.batches).sum();
+        if chip_batches != self.counters.batches {
+            return Err(format!(
+                "chip batch sum {} != batcher flushes {}",
+                chip_batches, self.counters.batches
+            ));
+        }
+        let flushes = self.counters.size_flushes
+            + self.counters.deadline_flushes
+            + self.counters.drain_flushes;
+        if flushes != self.counters.batches {
+            return Err(format!(
+                "flush causes {} != batches {}",
+                flushes, self.counters.batches
+            ));
+        }
+        for chip in &self.chips {
+            let per_req: Vec<&Completion> =
+                self.completions.iter().filter(|c| c.chip == chip.chip).collect();
+            if per_req.len() as u64 != chip.served {
+                return Err(format!("chip {}: served mismatch", chip.chip));
+            }
+            let energy: f64 = per_req.iter().map(|c| c.stats.total_energy_fj()).sum();
+            if !close(energy, chip.stats.total_energy_fj()) {
+                return Err(format!("chip {}: energy roll-up mismatch", chip.chip));
+            }
+            let busy: f64 = per_req.iter().map(|c| c.service_ns()).sum();
+            if !close(busy, chip.busy_ns) {
+                return Err(format!("chip {}: busy-time roll-up mismatch", chip.chip));
+            }
+            let wait: f64 = per_req.iter().map(|c| c.queue_wait_ns()).sum();
+            if !close(wait, chip.queue_wait_ns) {
+                return Err(format!("chip {}: queue-wait roll-up mismatch", chip.chip));
+            }
+        }
+        let total = self.total_stats();
+        let req_energy: f64 = self.completions.iter().map(|c| c.stats.total_energy_fj()).sum();
+        if !close(total.total_energy_fj(), req_energy) {
+            return Err("aggregate energy != sum of per-request energies".into());
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let makespan = self.makespan_ns();
+        writeln!(
+            f,
+            "{:>5} {:>8} {:>8} {:>8} {:>12} {:>12} {:>10} {:>8} {:>10}",
+            "chip", "served", "batches", "stalled", "busy (ms)", "wait (ms)", "E (mJ)", "util", "wt hit/miss"
+        )?;
+        for c in &self.chips {
+            writeln!(
+                f,
+                "{:>5} {:>8} {:>8} {:>8} {:>12.4} {:>12.4} {:>10.4} {:>7.1}% {:>7}/{}",
+                c.chip,
+                c.served,
+                c.batches,
+                c.stalled_batches,
+                c.busy_ns * 1e-6,
+                c.queue_wait_ns * 1e-6,
+                c.stats.total_energy_mj(),
+                100.0 * c.utilisation(makespan),
+                c.weight_hits,
+                c.weight_misses,
+            )?;
+        }
+        writeln!(
+            f,
+            "aggregate: {} requests in {} batches ({} size / {} deadline / {} drain flushes)",
+            self.served(),
+            self.counters.batches,
+            self.counters.size_flushes,
+            self.counters.deadline_flushes,
+            self.counters.drain_flushes,
+        )?;
+        writeln!(
+            f,
+            "latency: mean {:.4} ms, p95 {:.4} ms; makespan {:.4} ms; {:.1} FPS; {:.4} mJ total",
+            self.mean_latency_ms(),
+            self.p95_latency_ms(),
+            makespan * 1e-6,
+            self.sim_fps(),
+            self.total_energy_mj(),
+        )?;
+        write!(f, "host wall-clock: {:.3} s", self.wall_seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batcher::FlushCause;
+    use super::super::pool::{BatchTiming, ChipResult, ExecutedBatch, ExecutedRequest};
+    use super::*;
+    use crate::arch::stats::Phase;
+
+    /// Hand-build a two-chip result set with known numbers.
+    fn synthetic_report() -> ServeReport {
+        let req = |id: u64, lat_ns: f64, energy_fj: f64| {
+            let mut stats = Stats::default();
+            stats.record(Phase::Convolution, energy_fj, lat_ns);
+            ExecutedRequest { id, output: WideTensor::zeros(1, 1, 1), stats }
+        };
+        let results = vec![
+            ChipResult {
+                chip: 0,
+                batches: vec![ExecutedBatch {
+                    seq: 0,
+                    cause: FlushCause::Size,
+                    flush_ns: 0.0,
+                    arrivals_ns: vec![0.0, 0.0],
+                    requests: vec![req(0, 100.0, 10.0), req(1, 50.0, 5.0)],
+                }],
+                weight_hits: 1,
+                weight_misses: 1,
+            },
+            ChipResult {
+                chip: 1,
+                batches: vec![ExecutedBatch {
+                    seq: 1,
+                    cause: FlushCause::Drain,
+                    flush_ns: 20.0,
+                    arrivals_ns: vec![10.0],
+                    requests: vec![req(2, 200.0, 20.0)],
+                }],
+                weight_hits: 0,
+                weight_misses: 1,
+            },
+        ];
+        let timings = vec![
+            vec![BatchTiming { enqueue_ns: 0.0, start_ns: 0.0, finish_ns: 150.0, stalled: false }],
+            vec![BatchTiming { enqueue_ns: 20.0, start_ns: 20.0, finish_ns: 220.0, stalled: false }],
+        ];
+        let counters = QueueCounters {
+            enqueued: 3,
+            batches: 2,
+            size_flushes: 1,
+            drain_flushes: 1,
+            max_queue_depth: 2,
+            max_batch: 2,
+            ..QueueCounters::default()
+        };
+        ServeReport::assemble(results, timings, counters, 0.01)
+    }
+
+    #[test]
+    fn per_request_timing_is_serial_within_a_batch() {
+        let r = synthetic_report();
+        let by_id = |id: u64| r.completions.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(by_id(0).start_ns, 0.0);
+        assert_eq!(by_id(0).finish_ns, 100.0);
+        assert_eq!(by_id(1).start_ns, 100.0, "second request waits for the first");
+        assert_eq!(by_id(1).finish_ns, 150.0);
+        assert_eq!(by_id(2).start_ns, 20.0);
+        assert_eq!(by_id(2).queue_wait_ns(), 10.0, "arrived at 10, started at 20");
+    }
+
+    #[test]
+    fn aggregation_identities_hold() {
+        let r = synthetic_report();
+        r.verify().expect("identities");
+        assert_eq!(r.served(), 3);
+        assert_eq!(r.makespan_ns(), 220.0);
+        assert_eq!(r.chips[0].busy_ns, 150.0);
+        assert_eq!(r.chips[1].busy_ns, 200.0);
+        let total = r.total_stats();
+        assert_eq!(total.total_energy_fj(), 35.0);
+        assert!((r.sim_fps() - 3.0 / (220.0 * 1e-9)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn verify_catches_a_broken_rollup() {
+        let mut r = synthetic_report();
+        r.chips[0].busy_ns += 1.0;
+        assert!(r.verify().is_err(), "tampered roll-up must fail verification");
+        let mut r2 = synthetic_report();
+        r2.counters.enqueued += 1;
+        assert!(r2.verify().is_err());
+    }
+
+    #[test]
+    fn completions_are_ordered_by_finish_time() {
+        let r = synthetic_report();
+        let finishes: Vec<f64> = r.completions.iter().map(|c| c.finish_ns).collect();
+        let mut sorted = finishes.clone();
+        sorted.sort_by(f64::total_cmp);
+        assert_eq!(finishes, sorted);
+    }
+
+    #[test]
+    fn latency_percentiles_cover_the_tail() {
+        let r = synthetic_report();
+        // Latencies: id0 100, id1 150, id2 210 (arrived 10, finished 220).
+        assert!((r.mean_latency_ms() - (100.0 + 150.0 + 210.0) / 3.0 * 1e-6).abs() < 1e-12);
+        assert!((r.p95_latency_ms() - 210.0 * 1e-6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,107 @@
+//! Shard router: deterministic batch → chip assignment.
+//!
+//! Each simulated PIM chip holds a full weight replica (data
+//! parallelism — the mapping *within* a chip is the paper's Fig. 5
+//! scheme and is unchanged here), so any chip can serve any batch and
+//! routing is purely a load-balancing decision. The router assigns each
+//! batch to the chip with the least total routed work so far, breaking
+//! ties on the lowest chip index. Given the same batch sequence the
+//! assignment is identical on every run — no hashing, no randomness —
+//! which keeps the whole serving schedule reproducible.
+
+/// Deterministic least-loaded router over `chips` identical chips.
+#[derive(Debug, Clone)]
+pub struct ShardRouter {
+    /// Total work (weight units) routed to each chip so far.
+    routed_work: Vec<u64>,
+    /// Batches routed to each chip so far.
+    routed_batches: Vec<u64>,
+}
+
+impl ShardRouter {
+    /// Router over `chips` chips.
+    ///
+    /// # Panics
+    /// If `chips` is 0.
+    pub fn new(chips: usize) -> Self {
+        assert!(chips >= 1, "need at least one chip");
+        Self { routed_work: vec![0; chips], routed_batches: vec![0; chips] }
+    }
+
+    /// Number of chips.
+    pub fn chips(&self) -> usize {
+        self.routed_work.len()
+    }
+
+    /// Route one batch of `work` units (e.g. total input bits): returns
+    /// the chip index with the least routed work, lowest index winning
+    /// ties, and charges the work to it.
+    pub fn route(&mut self, work: u64) -> usize {
+        let chip = self
+            .routed_work
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &w)| (w, i))
+            .map(|(i, _)| i)
+            .expect("at least one chip");
+        self.routed_work[chip] += work.max(1);
+        self.routed_batches[chip] += 1;
+        chip
+    }
+
+    /// Total work routed to `chip` so far.
+    pub fn routed_work(&self, chip: usize) -> u64 {
+        self.routed_work[chip]
+    }
+
+    /// Batches routed to `chip` so far.
+    pub fn routed_batches(&self, chip: usize) -> u64 {
+        self.routed_batches[chip]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_work_round_robins_by_index() {
+        let mut r = ShardRouter::new(3);
+        let chips: Vec<usize> = (0..6).map(|_| r.route(10)).collect();
+        assert_eq!(chips, vec![0, 1, 2, 0, 1, 2]);
+        for c in 0..3 {
+            assert_eq!(r.routed_work(c), 20);
+            assert_eq!(r.routed_batches(c), 2);
+        }
+    }
+
+    #[test]
+    fn unequal_work_balances_toward_lightest_chip() {
+        let mut r = ShardRouter::new(2);
+        assert_eq!(r.route(100), 0);
+        // Chip 1 is lightest until it has absorbed 100 units.
+        assert_eq!(r.route(30), 1);
+        assert_eq!(r.route(30), 1);
+        assert_eq!(r.route(30), 1);
+        // Now 100 vs 90 → chip 1 again, then chip 0.
+        assert_eq!(r.route(30), 1);
+        assert_eq!(r.route(1), 0);
+    }
+
+    #[test]
+    fn assignment_is_deterministic() {
+        let works = [7u64, 3, 3, 9, 1, 1, 4, 8, 2, 6];
+        let run = || {
+            let mut r = ShardRouter::new(4);
+            works.iter().map(|&w| r.route(w)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "same inputs, same assignment");
+    }
+
+    #[test]
+    fn zero_work_batches_still_advance_the_router() {
+        let mut r = ShardRouter::new(2);
+        assert_eq!(r.route(0), 0);
+        assert_eq!(r.route(0), 1, "zero-work batches must not pile on one chip");
+    }
+}

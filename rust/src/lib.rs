@@ -35,10 +35,35 @@
 //! * [`baselines`] — analytic cost models for DRISA, PRIME, STT-CiM,
 //!   MRIMA and IMCE, calibrated to their published Table-3 operating
 //!   points.
-//! * [`runtime`] — PJRT (CPU) runtime that loads the AOT-lowered JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and cross-checks the simulator's
-//!   functional outputs.
+//! * [`runtime`] — artifact runtime for the AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); execution needs a PJRT backend,
+//!   which the offline build stubs out (callers degrade gracefully).
 //! * [`workload`] — synthetic image / workload generators.
+//!
+//! ## Serving
+//!
+//! On top of the two engines, [`coordinator::serve`](mod@coordinator::serve)
+//! is the deployment topology: a dynamic batcher (size- and
+//! deadline-triggered) feeds a
+//! deterministic shard router across N simulated PIM chips, each chip
+//! serving its bounded queue on a weight-resident engine — the Table 3
+//! steady-state condition, with per-request, per-chip and aggregate
+//! latency/energy accounting in
+//! [`ServeReport`](coordinator::serve::ServeReport).
+//!
+//! ## Orientation for new contributors
+//!
+//! Start with `ARCHITECTURE.md` at the repository root for the full L1
+//! (device) → L2 (subarray/mat/bank) → L3 (coordinator/serving) map and
+//! the design rationale, and `README.md` for the build/run quickstart.
+//! The deepest invariant in the codebase: the functional engine, the
+//! analytic model and the golden executor must agree — bit-for-bit for
+//! outputs ([`cnn::ref_exec`] vs [`coordinator::FunctionalEngine`]) and
+//! op-for-op for costs (both engines charge the one calibrated cost
+//! model in [`device::energy`]). Most tests are phrased as one of those
+//! two agreements.
+
+#![warn(missing_docs)]
 
 pub mod arch;
 pub mod bank;

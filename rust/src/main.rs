@@ -10,6 +10,9 @@
 //! * `inspect-device` — §5.1 device/circuit numbers
 //! * `verify`         — bit-exact functional run vs golden executor
 //! * `run`            — batched synthetic inference with FPS report
+//! * `serve`          — batched multi-chip serving runtime (dynamic
+//!   batcher → shard router → weight-resident engine pools) with
+//!   per-chip and aggregate latency/energy accounting
 //!
 //! Argument parsing is hand-rolled (the build is offline; see
 //! Cargo.toml).
@@ -24,7 +27,7 @@ use nandspin::baselines::designs::BaselineKind;
 use nandspin::cnn::network::{alexnet, resnet50, small_cnn, vgg19, Network};
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::Coordinator;
+use nandspin::coordinator::{Coordinator, Request, ServeConfig};
 use nandspin::device::llg::SwitchingModel;
 use nandspin::device::DeviceCosts;
 use nandspin::nvsim::NvSimModel;
@@ -41,7 +44,9 @@ fn usage() -> ExitCode {
            area\n\
            inspect-device\n\
            verify          [--seed N]\n\
-           run             [--batch N] [--seed N]"
+           run             [--batch N] [--seed N] [--chips N]\n\
+           serve           [--chips N] [--batch N] [--deadline-us F]\n\
+                           [--requests N] [--arrival-ns F] [--queue N] [--seed N]"
     );
     ExitCode::FAILURE
 }
@@ -284,39 +289,91 @@ fn cmd_verify(args: &[String]) {
     }
 }
 
+/// Build synthetic requests for `net`.
+fn synthetic_requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
+    Request::stream(ImageBatch::synthetic(net, n, seed).images)
+}
+
+/// Validate a serve configuration or exit with a clean error.
+fn checked(scfg: ServeConfig) -> ServeConfig {
+    if let Err(e) = scfg.validate() {
+        eprintln!("invalid serve configuration: {e}");
+        std::process::exit(2);
+    }
+    scfg
+}
+
 fn cmd_run(args: &[String]) {
+    if args.iter().any(|a| a == "--workers") {
+        eprintln!("--workers was replaced by --chips (one engine = one simulated PIM chip)");
+        std::process::exit(2);
+    }
     let get = flags(args);
     let batch: usize = get("batch", "8").parse().unwrap_or(8);
     let seed: u64 = get("seed", "1").parse().unwrap_or(1);
-    let workers: usize = get("workers", "4").parse().unwrap_or(4);
+    let chips: usize = get("chips", "4").parse().unwrap_or(4);
+    if batch == 0 {
+        eprintln!("invalid serve configuration: need at least one request (--batch)");
+        std::process::exit(2);
+    }
     let net = small_cnn(4);
     let params = ModelParams::random(&net, 4, seed);
-    let images = ImageBatch::synthetic(&net, batch, seed);
-    let requests = images
-        .images
-        .iter()
-        .enumerate()
-        .map(|(i, img)| nandspin::coordinator::Request { id: i as u64, image: img.clone() })
-        .collect();
-    let report =
-        nandspin::coordinator::serve(&ArchConfig::paper(), &net, &params, requests, workers);
-    let sim_ms = report.total_sim_ms();
-    let sim_mj: f64 = report.completions.iter().map(|c| c.stats.total_energy_mj()).sum();
-    println!(
-        "== served {} requests on {} simulated PIM chips ({} worker threads) ==",
-        batch, workers, workers
+    // Split the closed burst so every chip gets work.
+    let scfg = checked(ServeConfig {
+        chips,
+        max_batch: batch.div_ceil(chips.max(1)).max(1),
+        ..ServeConfig::default()
+    });
+    let report = nandspin::coordinator::serve(
+        &ArchConfig::paper(),
+        &scfg,
+        &net,
+        &params,
+        synthetic_requests(&net, batch, seed),
     );
+    report.verify().expect("serve aggregation identities");
+    let sim_ms: f64 =
+        report.completions.iter().map(|c| c.stats.total_latency_ms()).sum();
+    println!("== served {batch} requests on {chips} simulated PIM chips ==");
     println!(
         "simulated: {:.4} ms/img, {:.4} mJ/img, {:.1} FPS aggregate",
         sim_ms / batch as f64,
-        sim_mj / batch as f64,
-        report.sim_fps(workers)
+        report.total_energy_mj() / batch as f64,
+        report.sim_fps()
     );
     println!(
         "host wall-clock: {:.2} s ({:.1} img/s simulation speed)",
         report.wall_seconds,
         batch as f64 / report.wall_seconds
     );
+}
+
+fn cmd_serve(args: &[String]) {
+    let get = flags(args);
+    let scfg = checked(ServeConfig {
+        chips: get("chips", "4").parse().unwrap_or(4),
+        max_batch: get("batch", "8").parse().unwrap_or(8),
+        deadline_us: get("deadline-us", "50").parse().unwrap_or(50.0),
+        queue_depth: get("queue", "2").parse().unwrap_or(2),
+        arrival_interval_ns: get("arrival-ns", "0").parse().unwrap_or(0.0),
+    });
+    let requests: usize = get("requests", "32").parse().unwrap_or(32);
+    let seed: u64 = get("seed", "1").parse().unwrap_or(1);
+    let net = small_cnn(4);
+    let params = ModelParams::random(&net, 4, seed);
+    println!(
+        "== serving {} requests of {} on {} chips (batch {}, deadline {} µs, queue {}) ==",
+        requests, net.name, scfg.chips, scfg.max_batch, scfg.deadline_us, scfg.queue_depth
+    );
+    let report = nandspin::coordinator::serve(
+        &ArchConfig::paper(),
+        &scfg,
+        &net,
+        &params,
+        synthetic_requests(&net, requests, seed),
+    );
+    report.verify().expect("serve aggregation identities");
+    println!("{report}");
 }
 
 fn main() -> ExitCode {
@@ -332,6 +389,7 @@ fn main() -> ExitCode {
         "inspect-device" => cmd_inspect_device(),
         "verify" => cmd_verify(rest),
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         _ => return usage(),
     }
     ExitCode::SUCCESS
