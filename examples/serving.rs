@@ -3,12 +3,17 @@
 //! A stream of requests arrives at a fixed rate; the dynamic batcher
 //! groups them (size target or deadline, whichever first), the shard
 //! router spreads batches across four simulated PIM chips, and each
-//! chip serves its queue on a weight-resident functional engine —
-//! weights cross chip I/O once per chip and are then reused by every
-//! request (the Table 3 serving condition). The report shows where
-//! time went per request, per chip, and in aggregate, and a golden
-//! cross-check confirms outputs are bit-exact whichever chip served
-//! them.
+//! chip serves its queue on a weight-resident engine — weights cross
+//! chip I/O once per chip and are then reused by every request (the
+//! Table 3 serving condition). The serve pool is generic over the
+//! `InferenceEngine` trait, so the same stream is served three ways:
+//!
+//! * **functional** — bit-accurate; outputs cross-checked against the
+//!   golden executor, whichever chip served them;
+//! * **analytic** — per-request stats synthesized from the closed-form
+//!   op streams (the path that scales to AlexNet/VGG19/ResNet50);
+//! * **hybrid** — analytic serving with every K-th request replayed on
+//!   a functional engine and the stat ratios spot-checked.
 //!
 //! Run: `cargo run --release --example serving`
 
@@ -16,7 +21,7 @@ use nandspin::arch::config::ArchConfig;
 use nandspin::cnn::network::small_cnn;
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::serve::{serve, Request, ServeConfig};
+use nandspin::coordinator::serve::{serve, EngineMode, Request, ServeConfig};
 use nandspin::workload::ImageBatch;
 
 fn main() {
@@ -35,12 +40,13 @@ fn main() {
         deadline_us: 100.0,
         queue_depth: 2,
         arrival_interval_ns: 20_000.0,
+        engine: EngineMode::Functional,
     };
     println!(
         "serving {n} requests of {} on {} chips (batch ≤ {}, deadline {} µs)\n",
         net.name, scfg.chips, scfg.max_batch, scfg.deadline_us
     );
-    let report = serve(&ArchConfig::paper(), &scfg, &net, &params, requests);
+    let report = serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests);
 
     // Every aggregate must be the fold of its per-request parts.
     report.verify().expect("aggregation identities");
@@ -48,7 +54,8 @@ fn main() {
     // Spot-check bit-exactness against the golden executor.
     for c in report.completions.iter().take(3) {
         let golden = ref_exec::execute(&net, &params, &images[c.id as usize]);
-        assert_eq!(&c.output, golden.last().unwrap(), "request {}", c.id);
+        let output = c.output.as_ref().expect("functional mode carries outputs");
+        assert_eq!(output, golden.last().unwrap(), "request {}", c.id);
     }
     println!("outputs bit-exact vs golden executor (spot-checked)\n");
 
@@ -77,7 +84,7 @@ fn main() {
         &ArchConfig::paper(),
         &ServeConfig { chips: 1, max_batch: 1, ..scfg },
         &net,
-        &params,
+        Some(&params),
         vec![Request { id: 0, image: images[0].clone() }],
     );
     let cold_mj = cold.total_energy_mj();
@@ -87,5 +94,42 @@ fn main() {
         cold_mj,
         warm_mj,
         cold_mj / warm_mj
+    );
+
+    // The same stream on the analytic engine: identical batching and
+    // routing laws, closed-form per-request stats, no output tensors —
+    // the path that serves the paper's full-size networks.
+    let analytic = serve(
+        &ArchConfig::paper(),
+        &ServeConfig { engine: EngineMode::Analytic, ..scfg },
+        &net,
+        None,
+        Request::stream(images.clone()),
+    );
+    analytic.verify().expect("analytic aggregation identities");
+    println!(
+        "\nanalytic engine, same stream: {:.1} FPS, {:.4} mJ/req (synthesized stats)",
+        analytic.sim_fps(),
+        analytic.total_energy_mj() / analytic.served() as f64
+    );
+
+    // Hybrid: serve analytically, replay every 8th request functionally
+    // and cross-check the stat ratios.
+    let hybrid = serve(
+        &ArchConfig::paper(),
+        &ServeConfig { engine: EngineMode::Hybrid { check_every: 8 }, ..scfg },
+        &net,
+        Some(&params),
+        Request::stream(images.clone()),
+    );
+    hybrid.verify().expect("hybrid aggregation identities");
+    let sc = hybrid.spot_check.expect("small network => functional spot-check runs");
+    println!(
+        "hybrid spot-check: {} functional replays, latency ratio {:.3}–{:.3}×, energy ratio {:.3}–{:.3}×",
+        sc.checked,
+        sc.latency_ratio.0,
+        sc.latency_ratio.1,
+        sc.energy_ratio.0,
+        sc.energy_ratio.1
     );
 }

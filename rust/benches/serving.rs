@@ -1,11 +1,17 @@
-//! Bench: serving-runtime sweep over batch size × chip count.
+//! Bench: serving-runtime sweep over batch size × chip count × engine.
 //!
 //! Serves a fixed closed burst of requests through the batched
-//! multi-chip runtime for every (batch, chips) cell and reports
+//! multi-chip runtime for every (engine, batch, chips) cell and reports
 //! simulated throughput, mean/p95 latency, per-request energy and the
 //! weight-residency hit rate — the serving-scale view of the paper's
 //! Table 3 condition (weights streamed once per chip, reused across
-//! the batch).
+//! the batch). The functional and analytic engines run the identical
+//! stream, so the grid doubles as an engine-agreement check at serving
+//! scale.
+//!
+//! Besides the human table, the bench writes `BENCH_serving.json`
+//! (same grid, machine-readable) so the perf trajectory can be tracked
+//! across PRs.
 
 use std::time::Instant;
 
@@ -13,7 +19,7 @@ use nandspin::arch::config::ArchConfig;
 use nandspin::cnn::network::small_cnn;
 use nandspin::cnn::ref_exec::ModelParams;
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::serve::{serve, Request, ServeConfig};
+use nandspin::coordinator::serve::{serve, EngineMode, Request, ServeConfig};
 
 fn main() {
     let t0 = Instant::now();
@@ -28,35 +34,68 @@ fn main() {
 
     println!("== serving sweep: {} requests of {} (closed burst) ==", n, net.name);
     println!(
-        "{:>6} {:>6} {:>10} {:>12} {:>12} {:>12} {:>10}",
-        "batch", "chips", "FPS", "mean (µs)", "p95 (µs)", "mJ/req", "wt hit%"
+        "{:>10} {:>6} {:>6} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "engine", "batch", "chips", "FPS", "mean (µs)", "p95 (µs)", "mJ/req", "wt hit%"
     );
-    for &batch in &[1usize, 4, 16] {
-        for &chips in &[1usize, 2, 4] {
-            let scfg = ServeConfig {
-                chips,
-                max_batch: batch,
-                ..ServeConfig::default()
-            };
-            let requests: Vec<Request> = Request::stream(images.clone());
-            let report = serve(&ArchConfig::paper(), &scfg, &net, &params, requests);
-            report.verify().expect("aggregation identities");
-            assert_eq!(report.served(), n);
-            let (hits, misses) = report
-                .chips
-                .iter()
-                .fold((0u64, 0u64), |(h, m), c| (h + c.weight_hits, m + c.weight_misses));
-            println!(
-                "{:>6} {:>6} {:>10.1} {:>12.2} {:>12.2} {:>12.4} {:>9.1}%",
-                batch,
-                chips,
-                report.sim_fps(),
-                report.mean_latency_ms() * 1e3,
-                report.p95_latency_ms() * 1e3,
-                report.total_energy_mj() / n as f64,
-                100.0 * hits as f64 / (hits + misses).max(1) as f64
-            );
+    let mut rows: Vec<String> = Vec::new();
+    for &engine in &[EngineMode::Functional, EngineMode::Analytic] {
+        for &batch in &[1usize, 4, 16] {
+            for &chips in &[1usize, 2, 4] {
+                let scfg = ServeConfig {
+                    chips,
+                    max_batch: batch,
+                    engine,
+                    ..ServeConfig::default()
+                };
+                let requests: Vec<Request> = Request::stream(images.clone());
+                let report = serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests);
+                report.verify().expect("aggregation identities");
+                assert_eq!(report.served(), n);
+                let (hits, misses) = report
+                    .chips
+                    .iter()
+                    .fold((0u64, 0u64), |(h, m), c| (h + c.weight_hits, m + c.weight_misses));
+                let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+                let mean_us = report.mean_latency_ms() * 1e3;
+                let p95_us = report.p95_latency_ms() * 1e3;
+                let mj_per_req = report.total_energy_mj() / n as f64;
+                println!(
+                    "{:>10} {:>6} {:>6} {:>10.1} {:>12.2} {:>12.2} {:>12.4} {:>9.1}%",
+                    engine.label(),
+                    batch,
+                    chips,
+                    report.sim_fps(),
+                    mean_us,
+                    p95_us,
+                    mj_per_req,
+                    100.0 * hit_rate
+                );
+                rows.push(format!(
+                    "    {{\"engine\": \"{}\", \"batch\": {}, \"chips\": {}, \
+                     \"sim_fps\": {:.3}, \"mean_latency_us\": {:.3}, \
+                     \"p95_latency_us\": {:.3}, \"mj_per_request\": {:.6}, \
+                     \"weight_hit_rate\": {:.4}}}",
+                    engine.label(),
+                    batch,
+                    chips,
+                    report.sim_fps(),
+                    mean_us,
+                    p95_us,
+                    mj_per_req,
+                    hit_rate
+                ));
+            }
         }
     }
-    println!("\n[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());
+
+    let json = format!(
+        "{{\n  \"bench\": \"serving\",\n  \"network\": \"{}\",\n  \"requests\": {},\n  \
+         \"grid\": [\n{}\n  ]\n}}\n",
+        net.name,
+        n,
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("\n[wrote BENCH_serving.json: {} grid cells]", rows.len());
+    println!("[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());
 }

@@ -270,6 +270,27 @@ pub fn micro_cnn(bits: u8) -> Network {
     Network { name: "MicroCNN".into(), input: (1, 4, 6), input_bits: bits, nodes: b.nodes }
 }
 
+/// Names accepted by [`preset`]: the paper's three full-size benchmarks
+/// first, then the small functional-mode networks.
+pub const PRESET_NAMES: [&str; 6] =
+    ["alexnet", "vgg19", "resnet50", "small", "small_resnet", "micro"];
+
+/// Look up a benchmark / functional-mode network preset by CLI name.
+/// `bits` sets the activation precision (and the default weight
+/// precision callers derive from it). Returns `None` for unknown names
+/// (see [`PRESET_NAMES`]).
+pub fn preset(name: &str, bits: u8) -> Option<Network> {
+    match name {
+        "alexnet" => Some(alexnet(bits)),
+        "vgg19" => Some(vgg19(bits)),
+        "resnet50" => Some(resnet50(bits)),
+        "small" | "small_cnn" => Some(small_cnn(bits)),
+        "small_resnet" => Some(small_resnet(bits)),
+        "micro" | "micro_cnn" => Some(micro_cnn(bits)),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -327,5 +348,16 @@ mod tests {
     fn weights_counted() {
         let n = micro_cnn(4);
         assert_eq!(n.total_weights(), 2 * 1 * 2 * 2);
+    }
+
+    #[test]
+    fn preset_lookup_covers_every_name() {
+        for name in PRESET_NAMES {
+            let net = preset(name, 4).unwrap_or_else(|| panic!("preset {name} missing"));
+            assert!(!net.nodes.is_empty(), "{name}");
+        }
+        assert!(preset("lenet", 4).is_none());
+        assert_eq!(preset("alexnet", 8).unwrap().name, "AlexNet");
+        assert_eq!(preset("small", 4).unwrap().name, "SmallCNN");
     }
 }

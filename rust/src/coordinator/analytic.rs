@@ -32,7 +32,7 @@ fn clog2(v: usize) -> u32 {
 /// Calibration knobs of the analytic model (documented in DESIGN.md §7 /
 /// EXPERIMENTS.md). Defaults are pinned so the ResNet50 ⟨8:8⟩ breakdown
 /// reproduces Fig. 16's ordering.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Calibration {
     /// Effective cycles per bit for off-chip data delivery (DRAM fetch +
     /// handshake on top of the raw bus cycle). Pinned against Fig. 16's

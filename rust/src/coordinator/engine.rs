@@ -1,0 +1,526 @@
+//! The engine abstraction: one [`InferenceEngine`] trait over both
+//! execution paths.
+//!
+//! Historically the coordinator exposed two unrelated types — the
+//! bit-accurate [`FunctionalEngine`] and the closed-form
+//! [`AnalyticModel`] — and the serving runtime hardcoded the former,
+//! which meant the paper's full-size benchmark networks
+//! (AlexNet/VGG19/ResNet50) could never be *served*, only costed in
+//! one-shot sweeps. This module collapses the split:
+//!
+//! * [`InferenceEngine`] is the common contract: plan a network,
+//!   execute requests (accumulating [`Stats`]), and manage weight
+//!   residency for the Table 3 serving condition.
+//! * [`FunctionalEngine`] implements it at [`Fidelity::BitAccurate`]:
+//!   every layer runs on simulated subarrays and the outputs are
+//!   bit-exact with the golden executor.
+//! * [`AnalyticEngine`] implements it at [`Fidelity::Synthesized`]: a
+//!   stateful wrapper around [`AnalyticModel`] that synthesizes each
+//!   request's latency/energy from the closed-form op streams —
+//!   deterministic, drawn from the same `DeviceCosts` table, with the
+//!   same cold-then-warm weight-residency behaviour.
+//! * [`EngineFactory`] builds either kind for a given [`ArchConfig`];
+//!   the serve pool uses it to stay engine-generic (one factory = one
+//!   homogeneous chip pool).
+//!
+//! Both engines draw every cost from the single L1 `DeviceCosts` table,
+//! so a request executed functionally and the same request synthesized
+//! analytically must land within the same order of magnitude — the
+//! hybrid serve mode (`EngineMode::Hybrid`) exploits exactly that to
+//! spot-check analytic runs against functional replays.
+
+use crate::arch::config::ArchConfig;
+use crate::arch::stats::Stats;
+use crate::bank::controller::WeightResidency;
+use crate::cnn::layer::Layer;
+use crate::cnn::network::Network;
+use crate::cnn::ref_exec::{ModelParams, WideTensor};
+use crate::cnn::tensor::QTensor;
+use crate::coordinator::analytic::{AnalyticModel, Calibration};
+use crate::coordinator::functional::FunctionalEngine;
+
+/// The two engine implementations the factory can build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Bit-accurate execution on simulated subarrays
+    /// ([`FunctionalEngine`]).
+    Functional,
+    /// Closed-form op-stream synthesis ([`AnalyticEngine`]).
+    Analytic,
+}
+
+impl EngineKind {
+    /// Human/CLI label.
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::Functional => "functional",
+            EngineKind::Analytic => "analytic",
+        }
+    }
+}
+
+/// Fidelity an engine executes at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Every layer executed on simulated subarrays; outputs are
+    /// bit-exact with the golden executor.
+    BitAccurate,
+    /// Latency/energy synthesized from closed-form op streams; no
+    /// output tensors are produced.
+    Synthesized,
+}
+
+/// What an engine would do with a network, before running anything.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Network the plan was built for.
+    pub network: String,
+    /// Nodes in the execution schedule.
+    pub nodes: usize,
+    /// Total multiply-accumulates of one inference.
+    pub total_macs: u64,
+    /// Fidelity the engine executes at.
+    pub fidelity: Fidelity,
+    /// Whether this engine can run the network at all.
+    pub supported: bool,
+    /// Why `supported` is false, when it is.
+    pub unsupported_reason: Option<String>,
+}
+
+/// One executed request: optional bit-accurate outputs plus the
+/// request's own simulated cost.
+#[derive(Debug)]
+pub struct Execution {
+    /// All node outputs in schedule order ([`Fidelity::BitAccurate`]
+    /// engines); `None` when the engine synthesizes stats only.
+    pub outputs: Option<Vec<WideTensor>>,
+    /// Simulated PIM cost of this request alone.
+    pub stats: Stats,
+}
+
+/// The common engine contract the serving runtime is generic over.
+///
+/// An engine is stateful: it accumulates [`Stats`] across requests and,
+/// once [`make_weights_resident`](InferenceEngine::make_weights_resident)
+/// has been called, streams each layer's weights over chip I/O only on
+/// first touch (the Table 3 serving condition), re-streaming when the
+/// served network changes.
+pub trait InferenceEngine: Send {
+    /// Which implementation this is.
+    fn kind(&self) -> EngineKind;
+
+    /// Plan `net` without executing: schedule size, fidelity, and
+    /// whether this engine supports the network at all.
+    fn plan(&self, net: &Network) -> ExecutionPlan;
+
+    /// Switch to the Table 3 serving condition: weights are streamed
+    /// once and reused across subsequent requests of the same network.
+    fn make_weights_resident(&mut self);
+
+    /// Weight-residency tracker, if the engine is in serving mode.
+    fn residency(&self) -> Option<&WeightResidency>;
+
+    /// Execute one request. Bit-accurate engines require `params`;
+    /// synthesized engines use them only to pick the weight precision
+    /// (falling back to the network's input precision).
+    fn execute(
+        &mut self,
+        net: &Network,
+        params: Option<&ModelParams>,
+        input: &QTensor,
+    ) -> Execution;
+}
+
+/// Why `net` cannot run on the functional engine, if it cannot: the
+/// bit-accurate path stores each feature-map row in one subarray row,
+/// so every (padded) feature map must fit the subarray width.
+fn functional_limit(cfg: &ArchConfig, net: &Network) -> Option<String> {
+    let (_, _, in_w) = net.input;
+    if in_w > cfg.cols {
+        return Some(format!(
+            "input width {in_w} exceeds the {}-column subarray",
+            cfg.cols
+        ));
+    }
+    let shapes = net.shapes();
+    for (i, node) in net.nodes.iter().enumerate() {
+        let in_shape = match node.input {
+            Some(j) => shapes[j],
+            None if i == 0 => net.input,
+            None => shapes[i - 1],
+        };
+        let (_, _, mut w) = in_shape;
+        if let Layer::Conv { pad, .. } = node.layer {
+            w += 2 * pad;
+        }
+        let (_, _, ow) = shapes[i];
+        if w > cfg.cols || ow > cfg.cols {
+            return Some(format!(
+                "node {i} feature map ({} cols) exceeds the {}-column subarray",
+                w.max(ow),
+                cfg.cols
+            ));
+        }
+    }
+    None
+}
+
+impl InferenceEngine for FunctionalEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Functional
+    }
+
+    fn plan(&self, net: &Network) -> ExecutionPlan {
+        let unsupported_reason = functional_limit(self.cfg(), net);
+        ExecutionPlan {
+            network: net.name.clone(),
+            nodes: net.nodes.len(),
+            total_macs: net.total_macs(),
+            fidelity: Fidelity::BitAccurate,
+            supported: unsupported_reason.is_none(),
+            unsupported_reason,
+        }
+    }
+
+    fn make_weights_resident(&mut self) {
+        FunctionalEngine::make_weights_resident(self);
+    }
+
+    fn residency(&self) -> Option<&WeightResidency> {
+        FunctionalEngine::residency(self)
+    }
+
+    fn execute(
+        &mut self,
+        net: &Network,
+        params: Option<&ModelParams>,
+        input: &QTensor,
+    ) -> Execution {
+        let params = params.expect("the functional engine needs model parameters");
+        let before = self.stats.clone();
+        let outputs = self.run(net, params, input);
+        Execution { outputs: Some(outputs), stats: self.stats.delta_since(&before) }
+    }
+}
+
+/// Per-network synthesis cache of the analytic engine: one closed-form
+/// evaluation in each residency state, reused for every request.
+#[derive(Debug, Clone)]
+struct NetCache {
+    /// (name, node count) identity of the cached network — the same
+    /// identity heuristic [`FunctionalEngine`] uses for residency.
+    identity: (String, usize),
+    /// Weight precision the cache was built for.
+    wbits: u8,
+    /// Calibration the stats were synthesized with (a knob change
+    /// invalidates the cache).
+    cal: Calibration,
+    /// Per-inference stats with the weight stream charged.
+    cold: Stats,
+    /// Per-inference stats with weights resident (stream skipped).
+    warm: Stats,
+    /// Conv layers (residency tags) in the network.
+    conv_layers: usize,
+}
+
+/// Stateful serving wrapper around [`AnalyticModel`]: implements
+/// [`InferenceEngine`] by synthesizing each request's latency/energy
+/// from the closed-form op streams.
+///
+/// Per-request stats are deterministic: the first request after a
+/// network switch is charged the cold (weight-streaming) evaluation,
+/// every subsequent request of the same network the warm
+/// (weights-resident) one — mirroring [`FunctionalEngine`]'s residency
+/// behaviour, with the same hit/miss bookkeeping. Without
+/// [`make_weights_resident`](InferenceEngine::make_weights_resident),
+/// every request charges the cold evaluation (the paper's latency
+/// condition).
+#[derive(Debug, Clone)]
+pub struct AnalyticEngine {
+    /// The closed-form model requests are synthesized from. Calibration
+    /// knobs may be adjusted here; `cal.weights_resident` is overridden
+    /// per request by the engine's own residency state.
+    pub model: AnalyticModel,
+    /// Accumulated cost statistics across executed requests.
+    pub stats: Stats,
+    residency: Option<WeightResidency>,
+    cache: Option<NetCache>,
+}
+
+impl AnalyticEngine {
+    /// New engine for `cfg` with default calibration.
+    pub fn new(cfg: ArchConfig) -> Self {
+        Self {
+            model: AnalyticModel::new(cfg),
+            stats: Stats::default(),
+            residency: None,
+            cache: None,
+        }
+    }
+
+    /// (Re)build the synthesis cache when the network, the weight
+    /// precision or a calibration knob changes. A network or precision
+    /// switch also evicts resident weights (they would have to be
+    /// re-streamed); a pure calibration change re-costs the op streams
+    /// but leaves residency intact.
+    fn ensure_cache(&mut self, net: &Network, wbits: u8) {
+        let identity = (net.name.clone(), net.nodes.len());
+        let (stale, switched) = match &self.cache {
+            Some(c) => (
+                c.identity != identity || c.wbits != wbits || c.cal != self.model.cal,
+                c.identity != identity || c.wbits != wbits,
+            ),
+            None => (true, false),
+        };
+        if !stale {
+            return;
+        }
+        if switched {
+            if let Some(r) = self.residency.as_mut() {
+                r.evict_all();
+            }
+        }
+        let mut cold_model = self.model.clone();
+        cold_model.cal.weights_resident = false;
+        let mut warm_model = self.model.clone();
+        warm_model.cal.weights_resident = true;
+        let conv_layers =
+            net.nodes.iter().filter(|n| matches!(n.layer, Layer::Conv { .. })).count();
+        self.cache = Some(NetCache {
+            identity,
+            wbits,
+            cal: self.model.cal,
+            cold: cold_model.network_stats(net, wbits),
+            warm: warm_model.network_stats(net, wbits),
+            conv_layers,
+        });
+    }
+}
+
+impl InferenceEngine for AnalyticEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Analytic
+    }
+
+    fn plan(&self, net: &Network) -> ExecutionPlan {
+        ExecutionPlan {
+            network: net.name.clone(),
+            nodes: net.nodes.len(),
+            total_macs: net.total_macs(),
+            fidelity: Fidelity::Synthesized,
+            supported: true,
+            unsupported_reason: None,
+        }
+    }
+
+    fn make_weights_resident(&mut self) {
+        if self.residency.is_none() {
+            self.residency = Some(WeightResidency::new());
+        }
+    }
+
+    fn residency(&self) -> Option<&WeightResidency> {
+        self.residency.as_ref()
+    }
+
+    fn execute(
+        &mut self,
+        net: &Network,
+        params: Option<&ModelParams>,
+        input: &QTensor,
+    ) -> Execution {
+        assert_eq!(
+            (input.c, input.h, input.w),
+            net.input,
+            "input shape does not match the network"
+        );
+        let wbits = params
+            .and_then(|p| p.conv_weights.iter().map(|k| k.bits).max())
+            .unwrap_or(net.input_bits);
+        self.ensure_cache(net, wbits);
+        let cache = self.cache.as_ref().expect("cache populated by ensure_cache");
+        // Same bookkeeping as the functional engine: one residency tag
+        // per conv layer, all of which miss on the first touch of a
+        // network and hit afterwards.
+        let warm = match self.residency.as_mut() {
+            Some(r) => {
+                let mut any_miss = false;
+                for tag in 0..cache.conv_layers {
+                    if r.acquire(tag) {
+                        any_miss = true;
+                    }
+                }
+                !any_miss
+            }
+            None => false,
+        };
+        let delta = if warm { cache.warm.clone() } else { cache.cold.clone() };
+        self.stats.merge_serial(&delta);
+        Execution { outputs: None, stats: delta }
+    }
+}
+
+/// Builds engines of one kind for one operating point — the seam that
+/// keeps the serve pool engine-generic (one factory = one homogeneous
+/// chip pool).
+#[derive(Debug, Clone)]
+pub struct EngineFactory {
+    cfg: ArchConfig,
+    kind: EngineKind,
+}
+
+impl EngineFactory {
+    /// Factory building `kind` engines for `cfg`.
+    pub fn new(cfg: ArchConfig, kind: EngineKind) -> Self {
+        Self { cfg, kind }
+    }
+
+    /// Kind of engine this factory builds.
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// Operating point the engines simulate.
+    pub fn cfg(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    /// Build a fresh engine.
+    pub fn build(&self) -> Box<dyn InferenceEngine> {
+        match self.kind {
+            EngineKind::Functional => Box::new(FunctionalEngine::new(self.cfg.clone())),
+            EngineKind::Analytic => Box::new(AnalyticEngine::new(self.cfg.clone())),
+        }
+    }
+
+    /// Plan `net` on a fresh engine of this factory's kind.
+    pub fn plan(&self, net: &Network) -> ExecutionPlan {
+        self.build().plan(net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::stats::Phase;
+    use crate::cnn::network::{alexnet, micro_cnn, small_cnn};
+    use crate::cnn::ref_exec;
+
+    fn input_for(net: &Network, seed: u64) -> QTensor {
+        QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, seed)
+    }
+
+    #[test]
+    fn factory_builds_the_requested_kind() {
+        let cfg = ArchConfig::paper();
+        for kind in [EngineKind::Functional, EngineKind::Analytic] {
+            let engine = EngineFactory::new(cfg.clone(), kind).build();
+            assert_eq!(engine.kind(), kind);
+            assert!(engine.residency().is_none(), "engines start in latency mode");
+        }
+    }
+
+    #[test]
+    fn functional_plan_flags_wide_networks() {
+        let factory = EngineFactory::new(ArchConfig::paper(), EngineKind::Functional);
+        let small = factory.plan(&small_cnn(3));
+        assert!(small.supported, "{:?}", small.unsupported_reason);
+        assert_eq!(small.fidelity, Fidelity::BitAccurate);
+        let big = factory.plan(&alexnet(8));
+        assert!(!big.supported);
+        assert!(big.unsupported_reason.is_some());
+        // The analytic engine takes anything.
+        let analytic = EngineFactory::new(ArchConfig::paper(), EngineKind::Analytic);
+        let plan = analytic.plan(&alexnet(8));
+        assert!(plan.supported);
+        assert_eq!(plan.fidelity, Fidelity::Synthesized);
+        assert!(plan.total_macs > 0);
+    }
+
+    #[test]
+    fn functional_execute_via_trait_is_bit_exact() {
+        let net = micro_cnn(3);
+        let params = ModelParams::random(&net, 3, 5);
+        let input = input_for(&net, 6);
+        let golden = ref_exec::execute(&net, &params, &input);
+        let mut engine =
+            EngineFactory::new(ArchConfig::paper(), EngineKind::Functional).build();
+        let exec = engine.execute(&net, Some(&params), &input);
+        assert_eq!(exec.outputs.as_ref().expect("bit-accurate"), &golden);
+        assert!(exec.stats.total_latency_ns() > 0.0);
+        assert!(exec.stats.ops.ands > 0);
+    }
+
+    #[test]
+    fn analytic_engine_is_deterministic_and_outputless() {
+        let net = small_cnn(4);
+        let input = input_for(&net, 9);
+        let mut engine = AnalyticEngine::new(ArchConfig::paper());
+        let a = engine.execute(&net, None, &input);
+        let b = engine.execute(&net, None, &input);
+        assert!(a.outputs.is_none() && b.outputs.is_none());
+        assert_eq!(a.stats, b.stats, "no residency: every request streams weights");
+        assert!(a.stats.total_latency_ns() > 0.0);
+        // Accumulated stats are the serial fold of the two requests.
+        assert!(
+            (engine.stats.total_energy_fj() - 2.0 * a.stats.total_energy_fj()).abs()
+                < 1e-9 * engine.stats.total_energy_fj()
+        );
+    }
+
+    #[test]
+    fn analytic_residency_amortises_the_weight_stream() {
+        let net = small_cnn(4);
+        let input = input_for(&net, 9);
+        let mut engine = AnalyticEngine::new(ArchConfig::paper());
+        InferenceEngine::make_weights_resident(&mut engine);
+        let cold = engine.execute(&net, None, &input);
+        let warm = engine.execute(&net, None, &input);
+        assert!(warm.stats.total_latency_ns() < cold.stats.total_latency_ns());
+        assert!(
+            warm.stats[Phase::LoadData].latency_ns < cold.stats[Phase::LoadData].latency_ns,
+            "warm requests must skip the weight stream"
+        );
+        let convs = net
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.layer, Layer::Conv { .. }))
+            .count();
+        let r = engine.residency().expect("resident mode");
+        assert_eq!(r.misses as usize, convs);
+        assert_eq!(r.hits as usize, convs);
+    }
+
+    #[test]
+    fn analytic_calibration_change_invalidates_the_synthesis_cache() {
+        let net = small_cnn(3);
+        let input = input_for(&net, 4);
+        let mut engine = AnalyticEngine::new(ArchConfig::paper());
+        let before = engine.execute(&net, None, &input);
+        // Disable the cross-writing pipeline: same op mix, slower — the
+        // cached synthesis must be rebuilt, not served stale.
+        engine.model.cal.cross_writing_pipeline = false;
+        let after = engine.execute(&net, None, &input);
+        assert!(
+            after.stats.total_latency_ns() > before.stats.total_latency_ns(),
+            "calibration change must re-cost the op streams"
+        );
+        assert_eq!(after.stats.ops, before.stats.ops, "op mix is calibration-independent");
+    }
+
+    #[test]
+    fn analytic_network_switch_evicts_resident_weights() {
+        let micro = micro_cnn(3);
+        let small = small_cnn(3);
+        let mut engine = AnalyticEngine::new(ArchConfig::paper());
+        InferenceEngine::make_weights_resident(&mut engine);
+        engine.execute(&micro, None, &input_for(&micro, 1));
+        engine.execute(&small, None, &input_for(&small, 2));
+        let r = engine.residency().expect("resident mode");
+        assert_eq!(r.hits, 0, "network switch must not hit stale weights");
+        // Switching back misses again.
+        engine.execute(&micro, None, &input_for(&micro, 3));
+        let r = engine.residency().expect("resident mode");
+        assert_eq!(r.hits, 0);
+    }
+}

@@ -61,6 +61,11 @@ impl FunctionalEngine {
         Self { cfg, stats: Stats::default(), residency: None, conv_seq: 0, resident_net: None }
     }
 
+    /// Architecture configuration the engine simulates.
+    pub fn cfg(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
     /// Switch the engine to the Table 3 serving condition: each conv
     /// layer's weights are streamed over chip I/O once and then stay
     /// resident in the subarray buffers across subsequent inferences of

@@ -1,27 +1,40 @@
 //! The inference coordinator: the paper's system contribution at L3.
 //!
-//! Two execution engines share one cost model:
+//! One engine abstraction, two implementations sharing one cost model:
 //!
-//! * [`functional::FunctionalEngine`] — bit-accurate execution of every
-//!   layer on simulated NAND-SPIN subarrays (small networks; outputs are
-//!   checked against the golden executor and the PJRT artifact).
-//! * [`analytic::AnalyticModel`] — closed-form op-count model for the
-//!   full-scale benchmark networks (AlexNet / VGG19 / ResNet50) and the
-//!   design-space sweeps; generates the paper's figures.
+//! * [`engine::InferenceEngine`] — the common contract: plan a network,
+//!   execute requests, manage weight residency. Everything above
+//!   (serving, CLI, benches) is generic over it.
+//! * [`functional::FunctionalEngine`] — implements it bit-accurately:
+//!   every layer runs on simulated NAND-SPIN subarrays (small networks;
+//!   outputs are checked against the golden executor and the PJRT
+//!   artifact).
+//! * [`engine::AnalyticEngine`] — implements it in closed form, as a
+//!   stateful serving wrapper around [`analytic::AnalyticModel`]: the
+//!   op-count model for the full-scale benchmark networks
+//!   (AlexNet / VGG19 / ResNet50) and the design-space sweeps that
+//!   generate the paper's figures.
 //!
-//! On top of both sits the [`serve`](mod@serve) subsystem: the batched
+//! On top sits the [`serve`](mod@serve) subsystem: the batched
 //! multi-chip serving runtime (dynamic batcher → shard router →
-//! weight-resident engine pools) that models the Table 3 steady-state
-//! deployment.
+//! weight-resident engine pools built by an [`engine::EngineFactory`])
+//! that models the Table 3 steady-state deployment for either engine,
+//! plus a hybrid mode that serves analytically and spot-checks against
+//! functional replays.
 
 pub mod analytic;
+pub mod engine;
 pub mod functional;
 pub mod serve;
 
 pub use analytic::{AnalyticModel, Calibration};
+pub use engine::{
+    AnalyticEngine, EngineFactory, EngineKind, Execution, ExecutionPlan, Fidelity,
+    InferenceEngine,
+};
 pub use functional::FunctionalEngine;
 pub use serve::serve;
-pub use serve::{Completion, Request, ServeConfig, ServeReport};
+pub use serve::{Completion, EngineMode, Request, ServeConfig, ServeReport, SpotCheck};
 
 use crate::arch::area::AreaModel;
 use crate::arch::config::ArchConfig;
@@ -84,15 +97,21 @@ impl Coordinator {
 
     /// Serve a request stream through the batched multi-chip runtime
     /// (see [`serve()`](fn@serve::serve)) at this coordinator's
-    /// operating point.
+    /// operating point. `params` may be `None` for analytic-only serves
+    /// (full-size networks).
     pub fn serve(
         &self,
         scfg: &ServeConfig,
         net: &Network,
-        params: &ModelParams,
+        params: Option<&ModelParams>,
         requests: Vec<Request>,
     ) -> ServeReport {
         serve::serve(&self.cfg, scfg, net, params, requests)
+    }
+
+    /// Engine factory for this coordinator's operating point.
+    pub fn engine_factory(&self, kind: EngineKind) -> EngineFactory {
+        EngineFactory::new(self.cfg.clone(), kind)
     }
 
     /// Bit-accurate functional run; returns all node outputs plus stats.

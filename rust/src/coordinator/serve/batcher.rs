@@ -11,7 +11,12 @@
 //!
 //! The batcher is a pure state machine over simulated nanoseconds — no
 //! threads, no host clock — so every trigger path is unit-testable and
-//! the whole serving schedule stays deterministic.
+//! the whole serving schedule stays deterministic. It is also fully
+//! engine-agnostic: batching sees only requests and the simulated
+//! clock, never the
+//! [`InferenceEngine`](crate::coordinator::engine::InferenceEngine)
+//! that will execute them, so the same schedule drives functional,
+//! analytic and hybrid serves.
 
 use crate::arch::stats::QueueCounters;
 

@@ -4,7 +4,9 @@
 //! efficiency of the parallelism-friendly mapping) pay off at *serving*
 //! scale, where weights are loaded once and reused across a stream of
 //! requests — Table 3's operating condition. This subsystem models that
-//! deployment end to end:
+//! deployment end to end, generically over the
+//! [`InferenceEngine`](crate::coordinator::engine::InferenceEngine)
+//! trait:
 //!
 //! ```text
 //!  requests ──▶ DynamicBatcher ──▶ ShardRouter ──▶ per-chip queues
@@ -13,8 +15,9 @@
 //!                                                        │
 //!                                      weight-resident   ▼
 //!                         ServeReport ◀── engine pool (1 chip = 1
-//!                                          FunctionalEngine, weights
-//!                                          streamed once per chip)
+//!                                          engine from EngineFactory:
+//!                                          functional or analytic,
+//!                                          weights streamed once)
 //! ```
 //!
 //! * [`batcher::DynamicBatcher`] groups requests until a batch fills
@@ -23,7 +26,8 @@
 //! * [`router::ShardRouter`] maps each batch onto one of N simulated
 //!   chips, deterministically (least routed work, lowest index ties).
 //! * [`pool`] executes each chip's batches on its own weight-resident
-//!   [`FunctionalEngine`](crate::coordinator::functional::FunctionalEngine)
+//!   engine built by an
+//!   [`EngineFactory`](crate::coordinator::engine::EngineFactory)
 //!   (one host thread per chip) and schedules them on the simulated
 //!   clock behind a bounded queue ([`pool::timeline`]), so a saturated
 //!   chip exerts backpressure instead of queueing unboundedly.
@@ -31,6 +35,13 @@
 //!   per-chip and aggregate latency/energy accounts and can
 //!   [`verify`](report::ServeReport::verify) that every roll-up equals
 //!   the fold of its parts.
+//!
+//! [`EngineMode`] selects what the pool builds: `Functional` serves
+//! bit-accurately (small networks, outputs checked), `Analytic` serves
+//! the paper's full-size benchmarks at closed-form speed (stats only),
+//! and `Hybrid` serves analytically while replaying every K-th request
+//! on a functional engine to cross-check stats plausibility
+//! ([`SpotCheck`]).
 //!
 //! Everything is deterministic: batching and routing run on the
 //! simulated clock before execution starts, chips are independent, and
@@ -43,7 +54,7 @@ pub mod router;
 
 pub use batcher::{DynamicBatcher, Flush, FlushCause};
 pub use pool::{BatchTiming, PlannedBatch};
-pub use report::{ChipReport, Completion, ServeReport};
+pub use report::{ChipReport, Completion, ServeReport, SpotCheck};
 pub use router::ShardRouter;
 
 use std::time::Instant;
@@ -52,6 +63,7 @@ use crate::arch::config::ArchConfig;
 use crate::cnn::network::Network;
 use crate::cnn::ref_exec::ModelParams;
 use crate::cnn::tensor::QTensor;
+use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine};
 
 /// One inference request.
 #[derive(Debug)]
@@ -78,11 +90,56 @@ impl Request {
     }
 }
 
+/// Which engine the serving pool executes requests on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Bit-accurate functional engines: outputs are produced and
+    /// bit-exact (small networks only).
+    Functional,
+    /// Closed-form analytic engines: any network, synthesized stats,
+    /// no output tensors.
+    Analytic,
+    /// Serve on analytic engines, but replay sampled requests on a
+    /// functional engine and cross-check stats plausibility. The
+    /// replay only happens when the network fits the functional path
+    /// (the small presets) and model parameters were supplied;
+    /// otherwise the serve degrades to pure analytic.
+    Hybrid {
+        /// Replay stride: requests at stream positions `0, k, 2k, …`
+        /// are spot-checked.
+        check_every: usize,
+    },
+}
+
+impl EngineMode {
+    /// Engine kind the pool builds for this mode.
+    pub fn serving_kind(self) -> EngineKind {
+        match self {
+            EngineMode::Functional => EngineKind::Functional,
+            EngineMode::Analytic | EngineMode::Hybrid { .. } => EngineKind::Analytic,
+        }
+    }
+
+    /// Whether completions carry bit-accurate outputs.
+    pub fn bit_accurate(self) -> bool {
+        matches!(self, EngineMode::Functional)
+    }
+
+    /// Human/CLI label.
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineMode::Functional => "functional",
+            EngineMode::Analytic => "analytic",
+            EngineMode::Hybrid { .. } => "hybrid",
+        }
+    }
+}
+
 /// Configuration of the serving runtime.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
     /// Simulated PIM chips (each a full weight replica with its own
-    /// functional engine).
+    /// engine).
     pub chips: usize,
     /// Batch size target: a batch flushes as soon as it holds this many
     /// requests.
@@ -96,6 +153,8 @@ pub struct ServeConfig {
     /// Simulated inter-arrival gap of the request stream (ns); `0.0`
     /// models a closed burst where everything arrives at once.
     pub arrival_interval_ns: f64,
+    /// Which engine the pool serves on.
+    pub engine: EngineMode,
 }
 
 impl Default for ServeConfig {
@@ -106,6 +165,7 @@ impl Default for ServeConfig {
             deadline_us: 50.0,
             queue_depth: 2,
             arrival_interval_ns: 0.0,
+            engine: EngineMode::Functional,
         }
     }
 }
@@ -128,6 +188,11 @@ impl ServeConfig {
         if self.arrival_interval_ns.is_nan() || self.arrival_interval_ns < 0.0 {
             return Err("arrival interval must be a non-negative time".into());
         }
+        if let EngineMode::Hybrid { check_every } = self.engine {
+            if check_every == 0 {
+                return Err("hybrid check stride must be >= 1".into());
+            }
+        }
         Ok(())
     }
 }
@@ -136,21 +201,57 @@ impl ServeConfig {
 ///
 /// Requests arrive on the simulated clock at `scfg.arrival_interval_ns`
 /// spacing (in the given order); the stream drains at the last arrival.
-/// Outputs are bit-exact with
+/// With [`EngineMode::Functional`], outputs are bit-exact with
 /// [`ref_exec::execute`](crate::cnn::ref_exec::execute) per request,
-/// whichever chip serves it.
+/// whichever chip serves it, and `params` is required. With
+/// [`EngineMode::Analytic`] (or `Hybrid`), any network serves —
+/// including the paper's full-size benchmarks — with synthesized
+/// per-request stats; `params` is optional and only sets the weight
+/// precision (and enables the hybrid functional replay).
 ///
 /// # Panics
-/// If `scfg` is invalid or a network output is empty.
+/// If `scfg` is invalid, the engine cannot run `net` (functional mode
+/// on a network wider than the subarray), a bit-accurate mode is
+/// missing `params`, or a network output is empty.
 pub fn serve(
     cfg: &ArchConfig,
     scfg: &ServeConfig,
     net: &Network,
-    params: &ModelParams,
+    params: Option<&ModelParams>,
     requests: Vec<Request>,
 ) -> ServeReport {
     scfg.validate().expect("invalid serve config");
+    let factory = EngineFactory::new(cfg.clone(), scfg.engine.serving_kind());
+    let eplan = factory.plan(net);
+    assert!(
+        eplan.supported,
+        "{} engine cannot serve {}: {}",
+        factory.kind().label(),
+        net.name,
+        eplan.unsupported_reason.as_deref().unwrap_or("unsupported network"),
+    );
+    if scfg.engine.bit_accurate() {
+        assert!(params.is_some(), "functional serving needs model parameters");
+    }
     let started = Instant::now();
+
+    // Hybrid: sample every K-th request (by stream position) for the
+    // functional replay, before the planner consumes the stream — but
+    // only when the replay is actually possible (params supplied and
+    // the network fits the bit-accurate path); otherwise skip the
+    // clones and degrade to pure analytic.
+    let replay_possible = matches!(scfg.engine, EngineMode::Hybrid { .. })
+        && params.is_some()
+        && EngineFactory::new(cfg.clone(), EngineKind::Functional).plan(net).supported;
+    let samples: Vec<(u64, QTensor)> = match scfg.engine {
+        EngineMode::Hybrid { check_every } if replay_possible => requests
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % check_every == 0)
+            .map(|(_, r)| (r.id, r.image.clone()))
+            .collect(),
+        _ => Vec::new(),
+    };
 
     // Plan: walk the arrival stream through batcher + router on the
     // simulated clock. Deterministic — no execution yet.
@@ -175,7 +276,7 @@ pub fn serve(
     let counters = batcher.counters;
 
     // Execute: one host thread per chip, weight-resident engines.
-    let results = pool::execute(cfg, net, params, scfg.chips, planned);
+    let results = pool::execute(&factory, net, params, scfg.chips, planned);
 
     // Account: schedule each chip's batches behind its bounded queue.
     let timings: Vec<Vec<BatchTiming>> = results
@@ -186,7 +287,19 @@ pub fn serve(
             pool::timeline(&flushes, &services, scfg.queue_depth)
         })
         .collect();
-    ServeReport::assemble(results, timings, counters, started.elapsed().as_secs_f64())
+    let mut report = ServeReport::assemble(
+        scfg.engine,
+        results,
+        timings,
+        counters,
+        started.elapsed().as_secs_f64(),
+    );
+    if let (true, Some(params)) = (replay_possible, params) {
+        let sc = spot_check(cfg, net, params, &samples, &report);
+        report.spot_check = sc;
+        report.wall_seconds = started.elapsed().as_secs_f64();
+    }
+    report
 }
 
 /// Route one flushed batch and stamp it with its sequence number.
@@ -203,6 +316,40 @@ fn plan(flush: Flush, router: &mut ShardRouter, seq: &mut usize) -> PlannedBatch
     };
     *seq += 1;
     b
+}
+
+/// Replay the sampled requests on a bit-accurate functional engine and
+/// fold each replay's functional/analytic stat ratios into a
+/// [`SpotCheck`]. The caller has already established that the replay
+/// is possible (params supplied, network fits the functional path);
+/// returns `None` only for an empty sample.
+fn spot_check(
+    cfg: &ArchConfig,
+    net: &Network,
+    params: &ModelParams,
+    samples: &[(u64, QTensor)],
+    report: &ServeReport,
+) -> Option<SpotCheck> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut engine = EngineFactory::new(cfg.clone(), EngineKind::Functional).build();
+    engine.make_weights_resident();
+    let mut check = SpotCheck::new();
+    for (id, image) in samples {
+        let replay = engine.execute(net, Some(params), image);
+        let analytic = &report
+            .completions
+            .iter()
+            .find(|c| c.id == *id)
+            .expect("sampled request completed")
+            .stats;
+        check.observe(
+            replay.stats.total_latency_ns() / analytic.total_latency_ns().max(f64::MIN_POSITIVE),
+            replay.stats.total_energy_fj() / analytic.total_energy_fj().max(f64::MIN_POSITIVE),
+        );
+    }
+    Some(check)
 }
 
 #[cfg(test)]
@@ -234,12 +381,13 @@ mod tests {
         let reqs = requests(&net, 6, 100);
         let images: Vec<QTensor> = reqs.iter().map(|r| r.image.clone()).collect();
         let scfg = ServeConfig { chips: 3, max_batch: 2, ..ServeConfig::default() };
-        let report = serve(&ArchConfig::paper(), &scfg, &net, &params, reqs);
+        let report = serve(&ArchConfig::paper(), &scfg, &net, Some(&params), reqs);
         assert_eq!(report.served(), 6);
         report.verify().expect("aggregation identities");
         for c in &report.completions {
             let golden = ref_exec::execute(&net, &params, &images[c.id as usize]);
-            assert_eq!(&c.output, golden.last().unwrap(), "request {}", c.id);
+            let output = c.output.as_ref().expect("functional mode carries outputs");
+            assert_eq!(output, golden.last().unwrap(), "request {}", c.id);
             assert!(c.stats.total_latency_ns() > 0.0);
         }
         // All three chips participated in the closed burst.
@@ -255,8 +403,13 @@ mod tests {
         let params = ModelParams::random(&net, 2, 5);
         let scfg = ServeConfig { chips: 2, max_batch: 2, ..ServeConfig::default() };
         let assignment = |seed: u64| {
-            let report =
-                serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, 6, seed));
+            let report = serve(
+                &ArchConfig::paper(),
+                &scfg,
+                &net,
+                Some(&params),
+                requests(&net, 6, seed),
+            );
             let mut by_id: Vec<(u64, usize)> =
                 report.completions.iter().map(|c| (c.id, c.chip)).collect();
             by_id.sort_unstable();
@@ -273,11 +426,39 @@ mod tests {
         let params = ModelParams::random(&net, 3, 7);
         let scfg = ServeConfig { chips: 1, max_batch: 16, ..ServeConfig::default() };
         let run = |n: usize| {
-            let report =
-                serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, n, 30));
+            let report = serve(
+                &ArchConfig::paper(),
+                &scfg,
+                &net,
+                Some(&params),
+                requests(&net, n, 30),
+            );
             report.total_energy_mj() / n as f64
         };
         assert!(run(4) < run(1), "batching must amortise the weight stream");
+    }
+
+    #[test]
+    fn analytic_mode_shares_the_batching_and_routing_laws() {
+        // Same stream, same plan: only the engine (and thus the stats
+        // fidelity) changes between functional and analytic serves.
+        let net = small_cnn(3);
+        let params = ModelParams::random(&net, 3, 7);
+        let scfg = ServeConfig { chips: 2, max_batch: 2, ..ServeConfig::default() };
+        let functional =
+            serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 6, 40));
+        let acfg = ServeConfig { engine: EngineMode::Analytic, ..scfg };
+        let analytic =
+            serve(&ArchConfig::paper(), &acfg, &net, Some(&params), requests(&net, 6, 40));
+        analytic.verify().expect("analytic identities");
+        let routes = |r: &ServeReport| {
+            let mut v: Vec<(u64, usize, usize)> =
+                r.completions.iter().map(|c| (c.id, c.chip, c.batch)).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(routes(&functional), routes(&analytic), "planning is engine-agnostic");
+        assert!(analytic.completions.iter().all(|c| c.output.is_none()));
     }
 
     #[test]
@@ -288,6 +469,18 @@ mod tests {
         assert!(
             ServeConfig { deadline_us: f64::NAN, ..ServeConfig::default() }.validate().is_err()
         );
+        assert!(ServeConfig {
+            engine: EngineMode::Hybrid { check_every: 0 },
+            ..ServeConfig::default()
+        }
+        .validate()
+        .is_err());
         assert!(ServeConfig::default().validate().is_ok());
+        assert!(ServeConfig {
+            engine: EngineMode::Hybrid { check_every: 4 },
+            ..ServeConfig::default()
+        }
+        .validate()
+        .is_ok());
     }
 }

@@ -1,8 +1,10 @@
 //! Weight-resident engine pool and the per-chip queue timeline.
 //!
-//! Execution model: one [`FunctionalEngine`] per simulated PIM chip,
-//! switched into the Table 3 serving condition
-//! ([`FunctionalEngine::make_weights_resident`]) so the network's
+//! Execution model: one [`InferenceEngine`] per simulated PIM chip,
+//! built by the run's [`EngineFactory`] (functional or analytic — the
+//! pool is generic over the trait) and switched into the Table 3
+//! serving condition
+//! ([`InferenceEngine::make_weights_resident`]) so the network's
 //! weights cross chip I/O once per chip and are then reused by every
 //! request the chip serves. Chips are independent (full weight
 //! replicas), so the pool runs one host thread per chip; results are
@@ -17,12 +19,11 @@
 
 use std::thread;
 
-use crate::arch::config::ArchConfig;
 use crate::arch::stats::Stats;
 use crate::cnn::network::Network;
 use crate::cnn::ref_exec::{ModelParams, WideTensor};
 
-use crate::coordinator::functional::FunctionalEngine;
+use crate::coordinator::engine::{EngineFactory, InferenceEngine};
 
 use super::batcher::FlushCause;
 use super::Request;
@@ -44,13 +45,15 @@ pub struct PlannedBatch {
     pub arrivals_ns: Vec<f64>,
 }
 
-/// One executed request: output plus its own simulated cost.
+/// One executed request: its own simulated cost, plus the output when
+/// the engine runs bit-accurately.
 #[derive(Debug)]
 pub struct ExecutedRequest {
     /// Request id.
     pub id: u64,
-    /// Final network output.
-    pub output: WideTensor,
+    /// Final network output (bit-accurate engines); `None` when the
+    /// engine synthesizes stats only.
+    pub output: Option<WideTensor>,
     /// Simulated PIM cost of this request alone (engine-stats delta).
     pub stats: Stats,
 }
@@ -90,13 +93,15 @@ pub struct ChipResult {
     pub weight_misses: u64,
 }
 
-/// Execute `planned` batches on `chips` weight-resident engines, one
-/// host thread per chip. Returns per-chip results ordered by chip
-/// index; within a chip, batches keep their flush order.
+/// Execute `planned` batches on `chips` weight-resident engines built
+/// by `factory`, one host thread per chip. Returns per-chip results
+/// ordered by chip index; within a chip, batches keep their flush
+/// order. `params` is required by bit-accurate engines and optional
+/// for synthesized ones.
 pub fn execute(
-    cfg: &ArchConfig,
+    factory: &EngineFactory,
     net: &Network,
-    params: &ModelParams,
+    params: Option<&ModelParams>,
     chips: usize,
     planned: Vec<PlannedBatch>,
 ) -> Vec<ChipResult> {
@@ -111,7 +116,7 @@ pub fn execute(
             .into_iter()
             .enumerate()
             .map(|(chip, batches)| {
-                scope.spawn(move || run_chip(cfg, net, params, chip, batches))
+                scope.spawn(move || run_chip(factory, net, params, chip, batches))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("chip worker panicked")).collect()
@@ -120,23 +125,21 @@ pub fn execute(
 
 /// Serve one chip's batches on a fresh weight-resident engine.
 fn run_chip(
-    cfg: &ArchConfig,
+    factory: &EngineFactory,
     net: &Network,
-    params: &ModelParams,
+    params: Option<&ModelParams>,
     chip: usize,
     batches: Vec<PlannedBatch>,
 ) -> ChipResult {
-    let mut engine = FunctionalEngine::new(cfg.clone());
+    let mut engine = factory.build();
     engine.make_weights_resident();
     let mut out = Vec::with_capacity(batches.len());
     for b in batches {
         let mut executed = Vec::with_capacity(b.requests.len());
         for req in b.requests {
-            let before = engine.stats.clone();
-            let mut outputs = engine.run(net, params, &req.image);
-            let output = outputs.pop().expect("non-empty network");
-            let stats = engine.stats.delta_since(&before);
-            executed.push(ExecutedRequest { id: req.id, output, stats });
+            let exec = engine.execute(net, params, &req.image);
+            let output = exec.outputs.map(|mut outs| outs.pop().expect("non-empty network"));
+            executed.push(ExecutedRequest { id: req.id, output, stats: exec.stats });
         }
         out.push(ExecutedBatch {
             seq: b.seq,

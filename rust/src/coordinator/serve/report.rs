@@ -5,7 +5,10 @@
 //! same unit [`Stats`] uses); `wall_seconds` is the only host-side
 //! number. The cardinal rule is that every aggregate is a fold of the
 //! per-request records — [`ServeReport::verify`] re-derives the totals
-//! and fails loudly if any roll-up drifted from its parts.
+//! and fails loudly if any roll-up drifted from its parts. The report
+//! also records which [`EngineMode`] produced it: bit-accurate runs
+//! carry per-request outputs, synthesized (analytic/hybrid) runs carry
+//! stats only, and `verify` checks the fidelity bookkeeping matches.
 
 use std::fmt;
 
@@ -13,6 +16,7 @@ use crate::arch::stats::{QueueCounters, Stats};
 use crate::cnn::ref_exec::WideTensor;
 
 use super::pool::{BatchTiming, ChipResult};
+use super::EngineMode;
 
 /// One completed request.
 #[derive(Debug)]
@@ -23,8 +27,9 @@ pub struct Completion {
     pub chip: usize,
     /// Global sequence number of the batch it rode in.
     pub batch: usize,
-    /// Final network output.
-    pub output: WideTensor,
+    /// Final network output (bit-accurate engines); `None` when the
+    /// engine synthesizes stats only.
+    pub output: Option<WideTensor>,
     /// Simulated PIM cost of this request alone.
     pub stats: Stats,
     /// Simulated arrival time (ns).
@@ -88,15 +93,75 @@ impl ChipReport {
     }
 }
 
+/// Hybrid-mode functional spot-check: sampled requests replayed on a
+/// bit-accurate engine, with the observed functional/analytic stat
+/// ratios. Both engines draw every cost from the one `DeviceCosts`
+/// table, but the analytic model folds in mapping-level parallelism
+/// that the serial functional simulation does not — so this is an
+/// order-of-magnitude plausibility band ([`SpotCheck::TOLERANCE`]),
+/// not an equality check.
+#[derive(Debug, Clone, Copy)]
+pub struct SpotCheck {
+    /// Requests replayed on the functional engine.
+    pub checked: u64,
+    /// (min, max) functional/analytic total-latency ratio observed.
+    pub latency_ratio: (f64, f64),
+    /// (min, max) functional/analytic total-energy ratio observed.
+    pub energy_ratio: (f64, f64),
+}
+
+impl SpotCheck {
+    /// Plausibility band every observed ratio must stay inside.
+    pub const TOLERANCE: (f64, f64) = (1e-3, 1e3);
+
+    /// Empty check (nothing observed yet).
+    pub fn new() -> Self {
+        Self {
+            checked: 0,
+            latency_ratio: (f64::INFINITY, 0.0),
+            energy_ratio: (f64::INFINITY, 0.0),
+        }
+    }
+
+    /// Fold one replay's ratios in.
+    pub fn observe(&mut self, latency_ratio: f64, energy_ratio: f64) {
+        self.checked += 1;
+        self.latency_ratio = (
+            self.latency_ratio.0.min(latency_ratio),
+            self.latency_ratio.1.max(latency_ratio),
+        );
+        self.energy_ratio =
+            (self.energy_ratio.0.min(energy_ratio), self.energy_ratio.1.max(energy_ratio));
+    }
+
+    /// True when every observed ratio sits inside [`Self::TOLERANCE`]
+    /// (vacuously true when nothing was checked).
+    pub fn passed(&self) -> bool {
+        let inside =
+            |(lo, hi): (f64, f64)| lo >= Self::TOLERANCE.0 && hi <= Self::TOLERANCE.1;
+        self.checked == 0 || (inside(self.latency_ratio) && inside(self.energy_ratio))
+    }
+}
+
+impl Default for SpotCheck {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Summary of one serving run.
 #[derive(Debug)]
 pub struct ServeReport {
+    /// Engine mode the run served on.
+    pub engine: EngineMode,
     /// All completions, ordered by finish time (ties by id).
     pub completions: Vec<Completion>,
     /// Per-chip accounts, ordered by chip index.
     pub chips: Vec<ChipReport>,
     /// Batcher / queue counters.
     pub counters: QueueCounters,
+    /// Functional spot-check of a hybrid run, when one was possible.
+    pub spot_check: Option<SpotCheck>,
     /// Host wall-clock the simulation itself took, seconds.
     pub wall_seconds: f64,
 }
@@ -105,6 +170,7 @@ impl ServeReport {
     /// Build the report from per-chip execution results and their queue
     /// timelines (`timings[chip]` parallel to `results[chip].batches`).
     pub(super) fn assemble(
+        engine: EngineMode,
         results: Vec<ChipResult>,
         timings: Vec<Vec<BatchTiming>>,
         counters: QueueCounters,
@@ -161,7 +227,7 @@ impl ServeReport {
         completions.sort_by(|a, b| {
             a.finish_ns.total_cmp(&b.finish_ns).then(a.id.cmp(&b.id))
         });
-        Self { completions, chips, counters, wall_seconds }
+        Self { engine, completions, chips, counters, spot_check: None, wall_seconds }
     }
 
     /// Requests served.
@@ -174,7 +240,8 @@ impl ServeReport {
         self.chips.iter().fold(0.0f64, |m, c| m.max(c.finish_ns))
     }
 
-    /// Aggregate throughput over the run: requests per simulated second.
+    /// Aggregate throughput over the run: requests per simulated second
+    /// (0 for an empty run).
     pub fn sim_fps(&self) -> f64 {
         let span = self.makespan_ns();
         if span > 0.0 {
@@ -198,7 +265,7 @@ impl ServeReport {
         self.total_stats().total_energy_mj()
     }
 
-    /// Mean end-to-end simulated latency (ms).
+    /// Mean end-to-end simulated latency (ms; 0 for an empty run).
     pub fn mean_latency_ms(&self) -> f64 {
         if self.completions.is_empty() {
             return 0.0;
@@ -207,7 +274,8 @@ impl ServeReport {
         sum / self.completions.len() as f64 * 1e-6
     }
 
-    /// p95 end-to-end simulated latency (ms).
+    /// p95 end-to-end simulated latency (ms; 0 for an empty run, the
+    /// single observation for a one-request run).
     pub fn p95_latency_ms(&self) -> f64 {
         if self.completions.is_empty() {
             return 0.0;
@@ -219,8 +287,10 @@ impl ServeReport {
     }
 
     /// Check the aggregation identities: every per-chip and aggregate
-    /// number must equal the fold of its per-request parts, and the
-    /// queue counters must be consistent with the emitted batches.
+    /// number must equal the fold of its per-request parts, the queue
+    /// counters must be consistent with the emitted batches, the output
+    /// fidelity must match the engine mode, and a hybrid spot-check (if
+    /// one ran) must sit inside its plausibility band.
     pub fn verify(&self) -> Result<(), String> {
         let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0);
         if self.counters.enqueued != self.served() as u64 {
@@ -250,6 +320,16 @@ impl ServeReport {
                 flushes, self.counters.batches
             ));
         }
+        let bit_accurate = self.engine.bit_accurate();
+        for c in &self.completions {
+            if c.output.is_some() != bit_accurate {
+                return Err(format!(
+                    "request {}: output fidelity does not match the {} engine mode",
+                    c.id,
+                    self.engine.label()
+                ));
+            }
+        }
         for chip in &self.chips {
             let per_req: Vec<&Completion> =
                 self.completions.iter().filter(|c| c.chip == chip.chip).collect();
@@ -273,6 +353,16 @@ impl ServeReport {
         let req_energy: f64 = self.completions.iter().map(|c| c.stats.total_energy_fj()).sum();
         if !close(total.total_energy_fj(), req_energy) {
             return Err("aggregate energy != sum of per-request energies".into());
+        }
+        if let Some(sc) = &self.spot_check {
+            if !sc.passed() {
+                return Err(format!(
+                    "functional spot-check outside plausibility band {:?}: latency {:?}, energy {:?}",
+                    SpotCheck::TOLERANCE,
+                    sc.latency_ratio,
+                    sc.energy_ratio
+                ));
+            }
         }
         Ok(())
     }
@@ -313,6 +403,25 @@ impl fmt::Display for ServeReport {
         )?;
         writeln!(
             f,
+            "engine: {}{}",
+            self.engine.label(),
+            if self.engine.bit_accurate() { " (bit-accurate)" } else { " (synthesized stats)" },
+        )?;
+        if let Some(sc) = &self.spot_check {
+            writeln!(
+                f,
+                "spot-check: {} functional replays; functional/analytic latency {:.3}–{:.3}×, \
+                 energy {:.3}–{:.3}× — {}",
+                sc.checked,
+                sc.latency_ratio.0,
+                sc.latency_ratio.1,
+                sc.energy_ratio.0,
+                sc.energy_ratio.1,
+                if sc.passed() { "PLAUSIBLE" } else { "OUT OF BAND" },
+            )?;
+        }
+        writeln!(
+            f,
             "latency: mean {:.4} ms, p95 {:.4} ms; makespan {:.4} ms; {:.1} FPS; {:.4} mJ total",
             self.mean_latency_ms(),
             self.p95_latency_ms(),
@@ -331,13 +440,14 @@ mod tests {
     use super::*;
     use crate::arch::stats::Phase;
 
+    fn req(id: u64, lat_ns: f64, energy_fj: f64) -> ExecutedRequest {
+        let mut stats = Stats::default();
+        stats.record(Phase::Convolution, energy_fj, lat_ns);
+        ExecutedRequest { id, output: Some(WideTensor::zeros(1, 1, 1)), stats }
+    }
+
     /// Hand-build a two-chip result set with known numbers.
     fn synthetic_report() -> ServeReport {
-        let req = |id: u64, lat_ns: f64, energy_fj: f64| {
-            let mut stats = Stats::default();
-            stats.record(Phase::Convolution, energy_fj, lat_ns);
-            ExecutedRequest { id, output: WideTensor::zeros(1, 1, 1), stats }
-        };
         let results = vec![
             ChipResult {
                 chip: 0,
@@ -377,7 +487,7 @@ mod tests {
             max_batch: 2,
             ..QueueCounters::default()
         };
-        ServeReport::assemble(results, timings, counters, 0.01)
+        ServeReport::assemble(EngineMode::Functional, results, timings, counters, 0.01)
     }
 
     #[test]
@@ -416,6 +526,37 @@ mod tests {
     }
 
     #[test]
+    fn verify_catches_fidelity_mismatches() {
+        // A functional-mode report whose completions lost their outputs.
+        let mut r = synthetic_report();
+        r.completions[0].output = None;
+        assert!(r.verify().is_err(), "functional completions must carry outputs");
+        // An analytic-mode report must NOT carry outputs.
+        let mut r2 = synthetic_report();
+        r2.engine = EngineMode::Analytic;
+        assert!(r2.verify().is_err(), "synthesized completions must not carry outputs");
+        for c in &mut r2.completions {
+            c.output = None;
+        }
+        r2.verify().expect("outputless analytic report verifies");
+    }
+
+    #[test]
+    fn verify_enforces_the_spot_check_band() {
+        let mut r = synthetic_report();
+        let mut sc = SpotCheck::new();
+        sc.observe(1.5, 0.8);
+        assert!(sc.passed());
+        r.spot_check = Some(sc);
+        r.verify().expect("in-band spot check");
+        let mut bad = SpotCheck::new();
+        bad.observe(1e6, 1.0);
+        assert!(!bad.passed());
+        r.spot_check = Some(bad);
+        assert!(r.verify().is_err(), "out-of-band spot check must fail verify");
+    }
+
+    #[test]
     fn completions_are_ordered_by_finish_time() {
         let r = synthetic_report();
         let finishes: Vec<f64> = r.completions.iter().map(|c| c.finish_ns).collect();
@@ -430,5 +571,63 @@ mod tests {
         // Latencies: id0 100, id1 150, id2 210 (arrived 10, finished 220).
         assert!((r.mean_latency_ms() - (100.0 + 150.0 + 210.0) / 3.0 * 1e-6).abs() < 1e-12);
         assert!((r.p95_latency_ms() - 210.0 * 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_has_sane_aggregates() {
+        // Zero-request streams must neither panic nor divide by zero.
+        let r = ServeReport::assemble(
+            EngineMode::Functional,
+            vec![],
+            vec![],
+            QueueCounters::default(),
+            0.0,
+        );
+        assert_eq!(r.served(), 0);
+        assert_eq!(r.makespan_ns(), 0.0);
+        assert_eq!(r.sim_fps(), 0.0);
+        assert_eq!(r.mean_latency_ms(), 0.0);
+        assert_eq!(r.p95_latency_ms(), 0.0);
+        assert_eq!(r.total_energy_mj(), 0.0);
+        r.verify().expect("empty report verifies");
+        let text = format!("{r}");
+        assert!(text.contains("0 requests"), "{text}");
+    }
+
+    #[test]
+    fn single_request_report_percentiles_collapse() {
+        let results = vec![ChipResult {
+            chip: 0,
+            batches: vec![ExecutedBatch {
+                seq: 0,
+                cause: FlushCause::Drain,
+                flush_ns: 0.0,
+                arrivals_ns: vec![0.0],
+                requests: vec![req(0, 40.0, 4.0)],
+            }],
+            weight_hits: 0,
+            weight_misses: 1,
+        }];
+        let timings = vec![vec![BatchTiming {
+            enqueue_ns: 0.0,
+            start_ns: 0.0,
+            finish_ns: 40.0,
+            stalled: false,
+        }]];
+        let counters = QueueCounters {
+            enqueued: 1,
+            batches: 1,
+            drain_flushes: 1,
+            max_queue_depth: 1,
+            max_batch: 1,
+            ..QueueCounters::default()
+        };
+        let r = ServeReport::assemble(EngineMode::Functional, results, timings, counters, 0.0);
+        r.verify().expect("single-request report verifies");
+        assert_eq!(r.served(), 1);
+        // Mean and p95 are the one observation — no index over/underflow.
+        assert!((r.mean_latency_ms() - 40.0 * 1e-6).abs() < 1e-15);
+        assert!((r.p95_latency_ms() - 40.0 * 1e-6).abs() < 1e-15);
+        assert!((r.sim_fps() - 1.0 / (40.0 * 1e-9)).abs() < 1e-3);
     }
 }

@@ -7,7 +7,10 @@
 //! batch to the chip with the least total routed work so far, breaking
 //! ties on the lowest chip index. Given the same batch sequence the
 //! assignment is identical on every run — no hashing, no randomness —
-//! which keeps the whole serving schedule reproducible.
+//! which keeps the whole serving schedule reproducible. Like the
+//! batcher, the router is engine-agnostic: it routes on request work
+//! bits alone, so functional, analytic and hybrid serves of the same
+//! stream produce the same chip assignment.
 
 /// Deterministic least-loaded router over `chips` identical chips.
 #[derive(Debug, Clone)]

@@ -28,10 +28,10 @@
 //! * [`mapping`] — the paper's data-mapping scheme: bit-planes across
 //!   subarrays, weight reuse via the subarray buffer, and the cross-writing
 //!   partial-sum placement.
-//! * [`coordinator`] — the inference scheduler that decomposes a network
-//!   into primitive op streams, drives the simulator (functional mode) or
-//!   the analytic model (full-scale mode), and produces the paper's
-//!   metrics.
+//! * [`coordinator`] — the inference scheduler: one
+//!   [`InferenceEngine`](coordinator::InferenceEngine) trait with a
+//!   bit-accurate implementation (functional mode) and a closed-form
+//!   one (full-scale analytic mode), producing the paper's metrics.
 //! * [`baselines`] — analytic cost models for DRISA, PRIME, STT-CiM,
 //!   MRIMA and IMCE, calibrated to their published Table-3 operating
 //!   points.
@@ -42,14 +42,19 @@
 //!
 //! ## Serving
 //!
-//! On top of the two engines, [`coordinator::serve`](mod@coordinator::serve)
+//! On top of the engine trait, [`coordinator::serve`](mod@coordinator::serve)
 //! is the deployment topology: a dynamic batcher (size- and
 //! deadline-triggered) feeds a
 //! deterministic shard router across N simulated PIM chips, each chip
 //! serving its bounded queue on a weight-resident engine — the Table 3
 //! steady-state condition, with per-request, per-chip and aggregate
 //! latency/energy accounting in
-//! [`ServeReport`](coordinator::serve::ServeReport).
+//! [`ServeReport`](coordinator::serve::ServeReport). The pool builds
+//! functional or analytic engines via
+//! [`EngineFactory`](coordinator::EngineFactory), so the paper's
+//! full-size benchmarks (AlexNet/VGG19/ResNet50) serve at closed-form
+//! speed, and a hybrid mode spot-checks analytic stats against
+//! functional replays.
 //!
 //! ## Orientation for new contributors
 //!

@@ -24,10 +24,10 @@ use nandspin::arch::area::AreaModel;
 use nandspin::arch::config::ArchConfig;
 use nandspin::arch::stats::Phase;
 use nandspin::baselines::designs::BaselineKind;
-use nandspin::cnn::network::{alexnet, resnet50, small_cnn, vgg19, Network};
+use nandspin::cnn::network::{preset, resnet50, small_cnn, Network, PRESET_NAMES};
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::{Coordinator, Request, ServeConfig};
+use nandspin::coordinator::{Coordinator, EngineKind, EngineMode, Request, ServeConfig};
 use nandspin::device::llg::SwitchingModel;
 use nandspin::device::DeviceCosts;
 use nandspin::nvsim::NvSimModel;
@@ -45,7 +45,10 @@ fn usage() -> ExitCode {
            inspect-device\n\
            verify          [--seed N]\n\
            run             [--batch N] [--seed N] [--chips N]\n\
-           serve           [--chips N] [--batch N] [--deadline-us F]\n\
+           serve           [--engine functional|analytic|hybrid]\n\
+                           [--network alexnet|vgg19|resnet50|small|small_resnet|micro]\n\
+                           [--bits N] [--check-every N]\n\
+                           [--chips N] [--batch N] [--deadline-us F]\n\
                            [--requests N] [--arrival-ns F] [--queue N] [--seed N]"
     );
     ExitCode::FAILURE
@@ -62,16 +65,10 @@ fn flags(args: &[String]) -> impl Fn(&str, &str) -> String + '_ {
 }
 
 fn model_by_name(name: &str, bits: u8) -> Network {
-    match name {
-        "alexnet" => alexnet(bits),
-        "vgg19" => vgg19(bits),
-        "resnet50" => resnet50(bits),
-        "small" => small_cnn(bits),
-        other => {
-            eprintln!("unknown model '{other}', using resnet50");
-            resnet50(bits)
-        }
-    }
+    preset(name, bits).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}', using resnet50");
+        resnet50(bits)
+    })
 }
 
 fn cmd_breakdown(args: &[String]) {
@@ -328,7 +325,7 @@ fn cmd_run(args: &[String]) {
         &ArchConfig::paper(),
         &scfg,
         &net,
-        &params,
+        Some(&params),
         synthetic_requests(&net, batch, seed),
     );
     report.verify().expect("serve aggregation identities");
@@ -350,26 +347,79 @@ fn cmd_run(args: &[String]) {
 
 fn cmd_serve(args: &[String]) {
     let get = flags(args);
+    let network = get("network", "small");
+    // Small functional-mode presets default to the 4-bit operating
+    // point (the historical serve default); full-size benchmarks to the
+    // paper's ⟨8:8⟩. A malformed --bits falls back to the same default.
+    let default_bits: u8 = if matches!(
+        network.as_str(),
+        "small" | "small_cnn" | "small_resnet" | "micro" | "micro_cnn"
+    ) {
+        4
+    } else {
+        8
+    };
+    let bits: u8 = get("bits", &default_bits.to_string()).parse().unwrap_or(default_bits);
+    let check_every: usize = get("check-every", "4").parse().unwrap_or(4);
+    let engine = match get("engine", "functional").as_str() {
+        "functional" => EngineMode::Functional,
+        "analytic" => EngineMode::Analytic,
+        "hybrid" => EngineMode::Hybrid { check_every },
+        other => {
+            eprintln!("unknown engine '{other}' (use functional|analytic|hybrid)");
+            std::process::exit(2);
+        }
+    };
+    let Some(net) = preset(&network, bits) else {
+        eprintln!("unknown network '{network}' (use one of {PRESET_NAMES:?})");
+        std::process::exit(2);
+    };
     let scfg = checked(ServeConfig {
         chips: get("chips", "4").parse().unwrap_or(4),
         max_batch: get("batch", "8").parse().unwrap_or(8),
         deadline_us: get("deadline-us", "50").parse().unwrap_or(50.0),
         queue_depth: get("queue", "2").parse().unwrap_or(2),
         arrival_interval_ns: get("arrival-ns", "0").parse().unwrap_or(0.0),
+        engine,
     });
     let requests: usize = get("requests", "32").parse().unwrap_or(32);
     let seed: u64 = get("seed", "1").parse().unwrap_or(1);
-    let net = small_cnn(4);
-    let params = ModelParams::random(&net, 4, seed);
+
+    // Model parameters are only materialised when a functional engine
+    // will actually run: always for `--engine functional`, and for the
+    // hybrid replay when the network fits the bit-accurate path.
+    // (Randomising full-size weights for an analytic-only serve would
+    // cost hundreds of MB for nothing.)
+    let functional_plan = Coordinator::paper()
+        .engine_factory(EngineKind::Functional)
+        .plan(&net);
+    if engine == EngineMode::Functional && !functional_plan.supported {
+        eprintln!(
+            "network '{}' cannot run on the functional engine ({}); use --engine analytic or hybrid",
+            net.name,
+            functional_plan.unsupported_reason.as_deref().unwrap_or("unsupported"),
+        );
+        std::process::exit(2);
+    }
+    let needs_params = engine == EngineMode::Functional
+        || (matches!(engine, EngineMode::Hybrid { .. }) && functional_plan.supported);
+    let params = if needs_params { Some(ModelParams::random(&net, bits, seed)) } else { None };
+
     println!(
-        "== serving {} requests of {} on {} chips (batch {}, deadline {} µs, queue {}) ==",
-        requests, net.name, scfg.chips, scfg.max_batch, scfg.deadline_us, scfg.queue_depth
+        "== serving {} requests of {} on {} chips (engine {}, batch {}, deadline {} µs, queue {}) ==",
+        requests,
+        net.name,
+        scfg.chips,
+        scfg.engine.label(),
+        scfg.max_batch,
+        scfg.deadline_us,
+        scfg.queue_depth
     );
     let report = nandspin::coordinator::serve(
         &ArchConfig::paper(),
         &scfg,
         &net,
-        &params,
+        params.as_ref(),
         synthetic_requests(&net, requests, seed),
     );
     report.verify().expect("serve aggregation identities");

@@ -1,13 +1,15 @@
 //! Integration tests of the batched multi-chip serving runtime:
 //! end-to-end correctness across chips, the batching triggers, queue
-//! backpressure, deterministic routing, and the `ServeReport`
-//! aggregation identities (sum of per-chip accounts == totals).
+//! backpressure, deterministic routing, the `ServeReport` aggregation
+//! identities (sum of per-chip accounts == totals), and the
+//! engine-generic paths: analytic serving of the full-size benchmark
+//! networks and hybrid serving with functional spot-checks.
 
 use nandspin::arch::config::ArchConfig;
-use nandspin::cnn::network::{micro_cnn, small_cnn, Network};
+use nandspin::cnn::network::{alexnet, micro_cnn, small_cnn, Network};
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::serve::{serve, FlushCause, Request, ServeConfig};
+use nandspin::coordinator::serve::{serve, EngineMode, FlushCause, Request, ServeConfig};
 
 fn requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
     Request::stream(
@@ -26,13 +28,14 @@ fn end_to_end_bit_exact_and_identities_hold() {
     let reqs = requests(&net, 10, 500);
     let images: Vec<QTensor> = reqs.iter().map(|r| r.image.clone()).collect();
     let scfg = ServeConfig { chips: 4, max_batch: 3, ..ServeConfig::default() };
-    let report = serve(&ArchConfig::paper(), &scfg, &net, &params, reqs);
+    let report = serve(&ArchConfig::paper(), &scfg, &net, Some(&params), reqs);
 
     assert_eq!(report.served(), 10);
     report.verify().expect("aggregation identities");
     for c in &report.completions {
         let golden = ref_exec::execute(&net, &params, &images[c.id as usize]);
-        assert_eq!(&c.output, golden.last().unwrap(), "request {} (chip {})", c.id, c.chip);
+        let output = c.output.as_ref().expect("functional mode carries outputs");
+        assert_eq!(output, golden.last().unwrap(), "request {} (chip {})", c.id, c.chip);
         assert!(c.latency_ns() > 0.0 && c.service_ns() > 0.0);
         assert!(c.queue_wait_ns() >= 0.0);
     }
@@ -49,7 +52,8 @@ fn closed_burst_emits_size_flushes_plus_drain() {
     let params = ModelParams::random(&net, 2, 1);
     // 10 requests, batch target 4 → two size flushes + one 2-request drain.
     let scfg = ServeConfig { chips: 2, max_batch: 4, ..ServeConfig::default() };
-    let report = serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, 10, 9));
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 10, 9));
     assert_eq!(report.counters.size_flushes, 2);
     assert_eq!(report.counters.drain_flushes, 1);
     assert_eq!(report.counters.deadline_flushes, 0, "burst arrives instantly");
@@ -72,7 +76,8 @@ fn slow_arrivals_trigger_deadline_flushes() {
         arrival_interval_ns: 100_000.0,
         ..ServeConfig::default()
     };
-    let report = serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, 5, 21));
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 5, 21));
     assert_eq!(report.counters.deadline_flushes, 4);
     assert_eq!(report.counters.drain_flushes, 1);
     assert_eq!(report.counters.size_flushes, 0);
@@ -101,7 +106,8 @@ fn saturating_one_chip_applies_backpressure() {
         queue_depth: 1,
         ..ServeConfig::default()
     };
-    let report = serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, 4, 33));
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 4, 33));
     assert_eq!(report.counters.batches, 4);
     assert!(
         report.counters.stalled_batches >= 3,
@@ -129,7 +135,7 @@ fn routing_is_deterministic_and_balanced() {
     let scfg = ServeConfig { chips: 4, max_batch: 1, ..ServeConfig::default() };
     let run = || {
         let report =
-            serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, 8, 77));
+            serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 8, 77));
         let mut by_id: Vec<(u64, usize)> =
             report.completions.iter().map(|c| (c.id, c.chip)).collect();
         by_id.sort_unstable();
@@ -150,10 +156,12 @@ fn report_display_mentions_every_chip() {
     let net = micro_cnn(3);
     let params = ModelParams::random(&net, 2, 1);
     let scfg = ServeConfig { chips: 2, max_batch: 2, ..ServeConfig::default() };
-    let report = serve(&ArchConfig::paper(), &scfg, &net, &params, requests(&net, 4, 13));
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 4, 13));
     let text = format!("{report}");
     assert!(text.contains("aggregate"), "{text}");
     assert!(text.contains("FPS"), "{text}");
+    assert!(text.contains("engine: functional"), "{text}");
     // Flush-cause consistency surfaced in the summary line.
     assert_eq!(
         report.counters.size_flushes + report.counters.deadline_flushes
@@ -168,4 +176,144 @@ fn serving_matches_flush_cause_enum() {
     // tooling; pin its variants.
     let causes = [FlushCause::Size, FlushCause::Deadline, FlushCause::Drain];
     assert_eq!(causes.len(), 3);
+}
+
+// ================================================================
+// Report edge cases: empty and single-request streams.
+// ================================================================
+
+#[test]
+fn empty_stream_serves_cleanly() {
+    let net = micro_cnn(3);
+    let params = ModelParams::random(&net, 2, 1);
+    let scfg = ServeConfig { chips: 3, ..ServeConfig::default() };
+    let report = serve(&ArchConfig::paper(), &scfg, &net, Some(&params), Vec::new());
+    assert_eq!(report.served(), 0);
+    assert_eq!(report.counters.batches, 0);
+    assert_eq!(report.sim_fps(), 0.0);
+    assert_eq!(report.mean_latency_ms(), 0.0);
+    assert_eq!(report.p95_latency_ms(), 0.0);
+    assert_eq!(report.makespan_ns(), 0.0);
+    report.verify().expect("empty stream verifies");
+    // Display must not divide by zero either.
+    let text = format!("{report}");
+    assert!(text.contains("0 requests"), "{text}");
+}
+
+#[test]
+fn single_request_stream_serves_cleanly() {
+    let net = micro_cnn(3);
+    let params = ModelParams::random(&net, 2, 1);
+    let scfg = ServeConfig { chips: 4, ..ServeConfig::default() };
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 1, 55));
+    assert_eq!(report.served(), 1);
+    report.verify().expect("single-request stream verifies");
+    // Percentiles collapse to the one observation.
+    let lat_ms = report.completions[0].latency_ns() * 1e-6;
+    assert!((report.mean_latency_ms() - lat_ms).abs() < 1e-12);
+    assert!((report.p95_latency_ms() - lat_ms).abs() < 1e-12);
+    assert!(report.sim_fps() > 0.0);
+}
+
+// ================================================================
+// Engine-generic serving: analytic and hybrid modes.
+// ================================================================
+
+#[test]
+fn analytic_engine_serves_and_amortises_weights() {
+    let net = small_cnn(3);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 1,
+        engine: EngineMode::Analytic,
+        ..ServeConfig::default()
+    };
+    let report = serve(&ArchConfig::paper(), &scfg, &net, None, requests(&net, 6, 70));
+    assert_eq!(report.served(), 6);
+    report.verify().expect("analytic identities");
+    for c in &report.completions {
+        assert!(c.output.is_none(), "analytic completions carry no outputs");
+        assert!(c.stats.total_latency_ns() > 0.0);
+        assert!(c.stats.total_energy_fj() > 0.0);
+    }
+    // Round-robin routing: ids 0,2,4 on chip 0 and 1,3,5 on chip 1; the
+    // first request per chip streams weights (cold), the rest reuse them.
+    let by_id = |id: u64| {
+        report
+            .completions
+            .iter()
+            .find(|c| c.id == id)
+            .unwrap_or_else(|| panic!("request {id} missing"))
+    };
+    assert!(
+        by_id(0).stats.total_latency_ns() > by_id(2).stats.total_latency_ns(),
+        "first request per chip must be charged the weight stream"
+    );
+    assert_eq!(by_id(2).stats, by_id(4).stats, "warm analytic requests are identical");
+    for chip in &report.chips {
+        assert!(chip.weight_misses > 0, "every chip streams weights once");
+        assert!(chip.weight_hits > chip.weight_misses, "warm requests dominate");
+    }
+}
+
+#[test]
+fn analytic_engine_serves_full_size_alexnet() {
+    // The acceptance condition of the engine-generic refactor: the
+    // paper's full-size benchmark serves through the same batcher /
+    // router / pool / report pipeline, with no model parameters needed.
+    let net = alexnet(8);
+    let scfg = ServeConfig {
+        chips: 4,
+        max_batch: 8,
+        engine: EngineMode::Analytic,
+        ..ServeConfig::default()
+    };
+    let report = serve(&ArchConfig::paper(), &scfg, &net, None, requests(&net, 8, 90));
+    assert_eq!(report.served(), 8);
+    report.verify().expect("full-size analytic identities");
+    assert!(report.sim_fps() > 0.0);
+    assert!(report.total_energy_mj() > 0.0);
+    // AlexNet ⟨8:8⟩ per-request latency is macroscopic (microseconds at
+    // the very least) — well beyond the tiny functional nets.
+    assert!(report.completions.iter().all(|c| c.stats.total_latency_ms() > 1e-3));
+}
+
+#[test]
+fn hybrid_mode_spot_checks_small_presets() {
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 17);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 2,
+        engine: EngineMode::Hybrid { check_every: 2 },
+        ..ServeConfig::default()
+    };
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 6, 60));
+    report.verify().expect("hybrid identities incl. spot-check band");
+    let sc = report.spot_check.expect("small preset => functional replay possible");
+    assert_eq!(sc.checked, 3, "positions 0, 2, 4 replayed");
+    assert!(sc.passed(), "latency {:?} energy {:?}", sc.latency_ratio, sc.energy_ratio);
+    assert!(sc.latency_ratio.0 <= sc.latency_ratio.1);
+    // Hybrid serves analytically: no outputs on the completions.
+    assert!(report.completions.iter().all(|c| c.output.is_none()));
+}
+
+#[test]
+fn hybrid_mode_degrades_to_analytic_on_full_size_networks() {
+    // AlexNet cannot replay on the functional engine (feature maps wider
+    // than a subarray) and no params are supplied — the serve must still
+    // complete, with the spot-check skipped.
+    let net = alexnet(8);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 4,
+        engine: EngineMode::Hybrid { check_every: 2 },
+        ..ServeConfig::default()
+    };
+    let report = serve(&ArchConfig::paper(), &scfg, &net, None, requests(&net, 4, 31));
+    assert_eq!(report.served(), 4);
+    report.verify().expect("degraded hybrid identities");
+    assert!(report.spot_check.is_none(), "no functional replay possible");
 }
