@@ -1,0 +1,252 @@
+//! Bench: functional-engine hot paths, with packed-vs-scalar ratios.
+//!
+//! The bit-accurate engine's throughput comes from the word-parallel
+//! host representation (packed `u128` rows, bit-sliced counters, plane
+//! folds). This bench times each leg of that hot path — the bitwise
+//! conv pass, the composed add/multiply primitives, and a full
+//! small-network inference — and, for the legs where it is meaningful,
+//! times a faithful emulation of the pre-refactor scalar per-column
+//! host loops over the *same* device-op sequence, so the speedup of
+//! the packed representation is measured (not asserted) on every run.
+//!
+//! Results are written to `BENCH_functional.json` (machine-readable,
+//! one snapshot per run — same contract as `BENCH_serving.json`) next
+//! to the human table, so the functional-leg trajectory is tracked
+//! across PRs.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::arch::stats::{Phase, Stats};
+use nandspin::cnn::network::small_cnn;
+use nandspin::cnn::ref_exec::ModelParams;
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::engine::{EngineFactory, EngineKind};
+use nandspin::coordinator::serve::pool::{execute_with_workers, PlannedBatch};
+use nandspin::coordinator::serve::{FlushCause, Request};
+use nandspin::coordinator::FunctionalEngine;
+use nandspin::device::energy::DeviceCosts;
+use nandspin::subarray::conv::{
+    bitplane_conv_counts_tiled, window_sum_planes, BitKernel, ConvGeometry,
+};
+use nandspin::subarray::primitives::{add_columns, multiply_columns};
+use nandspin::subarray::{BitCounterBank, Subarray};
+use nandspin::util::Rng;
+
+fn time<F: FnMut()>(iters: u32, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Scalar emulation of the pre-refactor per-column counter bank: one
+/// `u32` per column, updated with a 128-iteration walk per accumulate.
+fn scalar_accumulate(counters: &mut [u32; 128], row: u128) {
+    for (col, c) in counters.iter_mut().enumerate() {
+        *c += ((row >> col) & 1) as u32;
+    }
+}
+
+/// Scalar emulation of the pre-refactor conv pass host work: tiling
+/// words rebuilt bit-by-bit per call, drained counts scattered into a
+/// per-column `Vec<u32>`, window sums folded column by column. The
+/// device-op sequence (buffer loads, ANDs, drains) is the same as the
+/// packed pass — only the host bookkeeping differs.
+fn scalar_conv_pass(
+    sub: &mut Subarray,
+    geo: ConvGeometry,
+    kernel: &BitKernel,
+    stats: &mut Stats,
+) -> Vec<Vec<u32>> {
+    let out_h = geo.out_h(kernel.kh);
+    let out_w = geo.out_w(kernel.kw);
+    let count_bits = 32 - (kernel.kh as u32).leading_zeros();
+    let mut all = Vec::new();
+    for p in 0..kernel.kw {
+        for kr in 0..kernel.kh {
+            let word = kernel.tile_row(kr, p, geo.in_w); // rebuilt per call
+            sub.buffer_write(kr, word, stats, Phase::Convolution);
+        }
+        for or in 0..out_h {
+            sub.counters.reset();
+            let r0 = or * geo.stride;
+            for kr in 0..kernel.kh {
+                sub.and_count(r0 + kr, kr, stats, Phase::Convolution);
+            }
+            let mut counts = vec![0u32; geo.in_w];
+            for bitpos in 0..count_bits {
+                let lsbs = sub.counter_lsbs_shift(stats, Phase::Convolution);
+                for (j, c) in counts.iter_mut().enumerate() {
+                    *c |= (((lsbs >> j) & 1) as u32) << bitpos;
+                }
+            }
+            all.push((p, or, counts));
+        }
+    }
+    // Per-column window fold.
+    let mut out = vec![vec![0u32; out_w]; out_h];
+    for (p, or, counts) in &all {
+        for oc in 0..out_w {
+            let c0 = oc * geo.stride;
+            if c0 % kernel.kw != *p {
+                continue;
+            }
+            out[*or][oc] = (0..kernel.kw).map(|kc| counts[c0 + kc]).sum();
+        }
+    }
+    out
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let mut rng = Rng::seed_from_u64(0xF0);
+    println!("== functional-engine microbenchmarks (packed host representation) ==");
+
+    // ---- Leg 1: counter accumulate, packed vs scalar. ----------------
+    let rows: Vec<u128> =
+        (0..64).map(|_| (rng.next_u64() as u128) << 64 | rng.next_u64() as u128).collect();
+    let mut bank = BitCounterBank::new(128);
+    let packed_acc = time(20_000, || {
+        bank.reset();
+        for &r in &rows {
+            bank.accumulate(black_box(r));
+        }
+    }) / rows.len() as f64;
+    let mut scalar_bank = [0u32; 128];
+    let scalar_acc = time(2_000, || {
+        scalar_bank = [0u32; 128];
+        for &r in &rows {
+            scalar_accumulate(&mut scalar_bank, black_box(r));
+        }
+    }) / rows.len() as f64;
+    let acc_speedup = scalar_acc / packed_acc.max(f64::MIN_POSITIVE);
+    println!(
+        "counter accumulate     packed {:>8.1} ns  scalar {:>8.1} ns  ({:.1}x)",
+        packed_acc * 1e9,
+        scalar_acc * 1e9,
+        acc_speedup
+    );
+
+    // ---- Leg 2: one full bit-plane conv pass, packed vs scalar. ------
+    let geo = ConvGeometry { in_h: 64, in_w: 128, stride: 1 };
+    let kbits: Vec<bool> = (0..9).map(|_| rng.gen_bool()).collect();
+    let kernel = BitKernel::new(3, 3, kbits);
+    let tiling = kernel.tilings(geo.in_w);
+    let mut sub = Subarray::new(256, 128, 16, DeviceCosts::default());
+    let mut stats = Stats::default();
+    for r in 0..geo.in_h {
+        let word = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+        sub.write_row(r, word, &mut stats, Phase::LoadData);
+    }
+    let packed_conv = time(400, || {
+        let counts =
+            bitplane_conv_counts_tiled(&mut sub, 0, geo, &tiling, &mut stats, Phase::Convolution);
+        black_box(window_sum_planes(&counts, geo, 3, 3));
+    });
+    let scalar_conv = time(100, || {
+        black_box(scalar_conv_pass(&mut sub, geo, &kernel, &mut stats));
+    });
+    let conv_speedup = scalar_conv / packed_conv.max(f64::MIN_POSITIVE);
+    println!(
+        "conv pass 3x3 @64x128  packed {:>8.1} µs  scalar {:>8.1} µs  ({:.1}x)",
+        packed_conv * 1e6,
+        scalar_conv * 1e6,
+        conv_speedup
+    );
+
+    // ---- Leg 3: composed primitives. ---------------------------------
+    let mut sub2 = Subarray::new(256, 128, 16, DeviceCosts::default());
+    for b in 0..64 {
+        let word = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+        sub2.write_row(b, word, &mut stats, Phase::LoadData);
+    }
+    let bases: Vec<usize> = (0..8).map(|i| i * 8).collect();
+    let add_us = time(2_000, || {
+        black_box(add_columns(&mut sub2, &bases, 8, 128, &mut stats, Phase::Pooling));
+    }) * 1e6;
+    for j in 0..8 {
+        let word = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+        sub2.buffer_write(j, word, &mut stats, Phase::LoadData);
+    }
+    let buf_rows: Vec<usize> = (0..8).collect();
+    let mul_us = time(1_000, || {
+        black_box(multiply_columns(&mut sub2, 0, 8, &buf_rows, 128, &mut stats, Phase::BatchNorm));
+    }) * 1e6;
+    println!("add_columns 8x8b       {add_us:>8.2} µs/op");
+    println!("multiply_columns 8x8b  {mul_us:>8.2} µs/op");
+
+    // ---- Leg 4: full small-network inference. ------------------------
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 5);
+    let img = QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, 6);
+    let mut engine = FunctionalEngine::new(ArchConfig::paper());
+    let run_ms = time(20, || {
+        black_box(engine.run(&net, &params, &img));
+    }) * 1e3;
+    println!("small_cnn inference    {run_ms:>8.2} ms/run");
+
+    // ---- Leg 5: functional serve, sequential vs worker-split. --------
+    let n = 16usize;
+    let (c, h, w) = net.input;
+    let make_planned = |seed: u64| -> Vec<PlannedBatch> {
+        let images: Vec<QTensor> = (0..n)
+            .map(|i| QTensor::random(c, h, w, net.input_bits, seed + i as u64))
+            .collect();
+        let requests = Request::stream(images);
+        let arrivals = vec![0.0; n];
+        vec![PlannedBatch {
+            seq: 0,
+            chip: 0,
+            cause: FlushCause::Size,
+            flush_ns: 0.0,
+            requests,
+            arrivals_ns: arrivals,
+        }]
+    };
+    let factory = EngineFactory::new(ArchConfig::paper(), EngineKind::Functional);
+    let t = Instant::now();
+    let seq = execute_with_workers(&factory, &net, Some(&params), 1, make_planned(40), Some(1));
+    let serve_seq_s = t.elapsed().as_secs_f64();
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let t = Instant::now();
+    let par =
+        execute_with_workers(&factory, &net, Some(&params), 1, make_planned(40), Some(workers));
+    let serve_par_s = t.elapsed().as_secs_f64();
+    assert_eq!(seq[0].weight_hits, par[0].weight_hits, "split must be bit-identical");
+    let serve_speedup = serve_seq_s / serve_par_s.max(f64::MIN_POSITIVE);
+    println!(
+        "serve {n} reqs (1 chip)  1 worker {serve_seq_s:>6.2} s  {workers} workers {serve_par_s:>6.2} s  ({serve_speedup:.1}x)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"functional\",\n  \"network\": \"{}\",\n  \
+         \"counter_accumulate\": {{\"packed_ns\": {:.2}, \"scalar_ns\": {:.2}, \"speedup\": {:.2}}},\n  \
+         \"conv_pass\": {{\"packed_us\": {:.3}, \"scalar_us\": {:.3}, \"speedup\": {:.2}}},\n  \
+         \"add_columns_us\": {:.3},\n  \"multiply_columns_us\": {:.3},\n  \
+         \"small_cnn_run_ms\": {:.3},\n  \
+         \"serve_functional\": {{\"requests\": {}, \"sequential_s\": {:.4}, \"parallel_s\": {:.4}, \
+         \"workers\": {}, \"speedup\": {:.2}}}\n}}\n",
+        net.name,
+        packed_acc * 1e9,
+        scalar_acc * 1e9,
+        acc_speedup,
+        packed_conv * 1e6,
+        scalar_conv * 1e6,
+        conv_speedup,
+        add_us,
+        mul_us,
+        run_ms,
+        n,
+        serve_seq_s,
+        serve_par_s,
+        workers,
+        serve_speedup
+    );
+    std::fs::write("BENCH_functional.json", &json).expect("write BENCH_functional.json");
+    println!("\n[wrote BENCH_functional.json]");
+    println!("[bench wall time: {:.2} s]", t0.elapsed().as_secs_f64());
+}

@@ -74,7 +74,7 @@ fn main() {
                     "    {{\"engine\": \"{}\", \"batch\": {}, \"chips\": {}, \
                      \"sim_fps\": {:.3}, \"mean_latency_us\": {:.3}, \
                      \"p95_latency_us\": {:.3}, \"mj_per_request\": {:.6}, \
-                     \"weight_hit_rate\": {:.4}}}",
+                     \"weight_hit_rate\": {:.4}, \"wall_s\": {:.4}}}",
                     engine.label(),
                     batch,
                     chips,
@@ -82,7 +82,8 @@ fn main() {
                     mean_us,
                     p95_us,
                     mj_per_req,
-                    hit_rate
+                    hit_rate,
+                    report.wall_seconds
                 ));
             }
         }

@@ -29,6 +29,79 @@ pub struct Network {
 }
 
 impl Network {
+    /// Structural fingerprint of the network: a deterministic 64-bit
+    /// FNV-1a hash over the name, input shape/precision and every
+    /// node's layer kind, parameters and wiring.
+    ///
+    /// Engines key their weight-residency and synthesis caches on this
+    /// instead of the old `(name, nodes.len())` pair, which collided
+    /// for two different networks that happened to share a name and
+    /// node count. Two [`crate::cnn::ref_exec::ModelParams`] sets for
+    /// one architecture still hash alike — a serving pool pairs each
+    /// engine with exactly one parameter set, so that ambiguity never
+    /// reaches an engine.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |v: u64| {
+            for byte in v.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        // Length-prefix the name so its bytes cannot shift into the
+        // numeric fields that follow (domain separation).
+        mix(self.name.len() as u64);
+        for &b in self.name.as_bytes() {
+            mix(b as u64);
+        }
+        let (c, hh, w) = self.input;
+        mix(c as u64);
+        mix(hh as u64);
+        mix(w as u64);
+        mix(self.input_bits as u64);
+        for node in &self.nodes {
+            // Wiring: explicit inputs are offset so `None` (= previous
+            // node) never aliases `Some(0)`.
+            mix(match node.input {
+                None => 0,
+                Some(j) => j as u64 + 1,
+            });
+            match node.layer {
+                Layer::Conv { out_c, kh, kw, stride, pad } => {
+                    mix(1);
+                    mix(out_c as u64);
+                    mix(kh as u64);
+                    mix(kw as u64);
+                    mix(stride as u64);
+                    mix(pad as u64);
+                }
+                Layer::MaxPool { k, stride } => {
+                    mix(2);
+                    mix(k as u64);
+                    mix(stride as u64);
+                }
+                Layer::AvgPool { k, stride } => {
+                    mix(3);
+                    mix(k as u64);
+                    mix(stride as u64);
+                }
+                Layer::BatchNorm => mix(4),
+                Layer::Relu => mix(5),
+                Layer::Quantize { bits } => {
+                    mix(6);
+                    mix(bits as u64);
+                }
+                Layer::Residual { from } => {
+                    mix(7);
+                    mix(from as u64);
+                }
+            }
+        }
+        h
+    }
+
     /// Output shape of every node (index-aligned with `nodes`).
     pub fn shapes(&self) -> Vec<Shape> {
         let mut out = Vec::with_capacity(self.nodes.len());
@@ -294,6 +367,34 @@ pub fn preset(name: &str, bits: u8) -> Option<Network> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fingerprint_distinguishes_same_name_same_length_networks() {
+        // The old `(name, nodes.len())` residency key collided here:
+        // same name, same node count, different structure.
+        let mut a = small_cnn(4);
+        let mut b = small_cnn(4);
+        if let Layer::Conv { stride, .. } = &mut b.nodes[0].layer {
+            *stride += 1;
+        } else {
+            panic!("expected a conv at node 0");
+        }
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.nodes.len(), b.nodes.len());
+        assert_ne!(a.fingerprint(), b.fingerprint(), "structure must be keyed");
+        // Identical networks agree; the hash is deterministic.
+        assert_eq!(small_cnn(4).fingerprint(), small_cnn(4).fingerprint());
+        // Name, precision and wiring all contribute.
+        a.name = "renamed".into();
+        assert_ne!(a.fingerprint(), small_cnn(4).fingerprint());
+        assert_ne!(small_cnn(3).fingerprint(), small_cnn(4).fingerprint());
+        let mut c = small_resnet(4);
+        let base = c.fingerprint();
+        if let Some(node) = c.nodes.iter_mut().find(|n| n.input.is_some()) {
+            node.input = None;
+            assert_ne!(c.fingerprint(), base, "wiring must be keyed");
+        }
+    }
 
     #[test]
     fn alexnet_macs_in_known_range() {

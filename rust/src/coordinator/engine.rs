@@ -197,9 +197,18 @@ impl InferenceEngine for FunctionalEngine {
         input: &QTensor,
     ) -> Execution {
         let params = params.expect("the functional engine needs model parameters");
-        let before = self.stats.clone();
+        // Run against a zero-based stats accumulator and fold the run
+        // into the engine's running total afterwards. A subtraction
+        // delta on the growing f64 accumulator would differ in final
+        // ulps depending on engine history; zero-basing makes each
+        // request's stats a pure function of (config, params, input,
+        // residency state) — the bit-reproducibility the serve pool's
+        // worker split and the hybrid replay rely on.
+        let total = std::mem::take(&mut self.stats);
         let outputs = self.run(net, params, input);
-        Execution { outputs: Some(outputs), stats: self.stats.delta_since(&before) }
+        let run_stats = std::mem::replace(&mut self.stats, total);
+        self.stats.merge_serial(&run_stats);
+        Execution { outputs: Some(outputs), stats: run_stats }
     }
 }
 
@@ -207,9 +216,11 @@ impl InferenceEngine for FunctionalEngine {
 /// evaluation in each residency state, reused for every request.
 #[derive(Debug, Clone)]
 struct NetCache {
-    /// (name, node count) identity of the cached network — the same
-    /// identity heuristic [`FunctionalEngine`] uses for residency.
-    identity: (String, usize),
+    /// Structural fingerprint ([`Network::fingerprint`]) of the cached
+    /// network — the same identity [`FunctionalEngine`] keys residency
+    /// on. (The old `(name, nodes.len())` pair collided for different
+    /// networks sharing a name and node count.)
+    identity: u64,
     /// Weight precision the cache was built for.
     wbits: u8,
     /// Calibration the stats were synthesized with (a knob change
@@ -264,7 +275,7 @@ impl AnalyticEngine {
     /// re-streamed); a pure calibration change re-costs the op streams
     /// but leaves residency intact.
     fn ensure_cache(&mut self, net: &Network, wbits: u8) {
-        let identity = (net.name.clone(), net.nodes.len());
+        let identity = net.fingerprint();
         let (stale, switched) = match &self.cache {
             Some(c) => (
                 c.identity != identity || c.wbits != wbits || c.cal != self.model.cal,
@@ -506,6 +517,29 @@ mod tests {
             "calibration change must re-cost the op streams"
         );
         assert_eq!(after.stats.ops, before.stats.ops, "op mix is calibration-independent");
+    }
+
+    #[test]
+    fn analytic_cache_keys_on_structure_not_name_and_length() {
+        // Same name, same node count, different structure: the old
+        // `(name, nodes.len())` cache key served stale stats here.
+        let a = small_cnn(4);
+        let mut b = small_cnn(4);
+        if let Layer::Conv { stride, .. } = &mut b.nodes[5].layer {
+            *stride = 2;
+        } else {
+            panic!("expected a conv at node 5");
+        }
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.nodes.len(), b.nodes.len());
+        let input = input_for(&a, 8);
+        let mut engine = AnalyticEngine::new(ArchConfig::paper());
+        let ea = engine.execute(&a, None, &input);
+        let eb = engine.execute(&b, None, &input);
+        assert_ne!(
+            ea.stats, eb.stats,
+            "structurally different network must be re-costed, not served stale"
+        );
     }
 
     #[test]

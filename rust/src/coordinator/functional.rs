@@ -20,9 +20,12 @@ use crate::cnn::network::Network;
 use crate::cnn::quantize::{BnParams, QuantParams};
 use crate::cnn::ref_exec::{avg_pool_scale, ModelParams, WideTensor};
 use crate::cnn::tensor::QTensor;
-use crate::subarray::conv::{bitplane_conv_counts, window_sums, BitKernel, ConvGeometry};
+use crate::subarray::conv::{
+    bitplane_conv_counts_tiled, window_sum_planes, BitKernel, ConvGeometry,
+};
 use crate::subarray::primitives::{add_columns, compare_columns, multiply_columns, CompareScratch};
 use crate::subarray::Subarray;
+use crate::util::{pack_columns, unpack_columns};
 
 /// Bits reserved per accumulator operand slot (strip-aligned).
 const ACC_BITS: usize = 24;
@@ -49,16 +52,34 @@ pub struct FunctionalEngine {
     /// Conv layers encountered so far in the current `run` (residency
     /// tag).
     conv_seq: usize,
-    /// Identity (name, node count) of the network whose weights are
-    /// resident; a different network evicts them.
-    resident_net: Option<(String, usize)>,
+    /// Structural fingerprint ([`Network::fingerprint`]) of the network
+    /// whose weights are resident; a different network evicts them.
+    resident_net: Option<u64>,
+    /// Reusable subarray allocations: every layer used to build fresh
+    /// subarrays (one per input bit-plane, per pooling batch, per
+    /// affine-transform call); the pool hands the same allocations back
+    /// out after a cost-free [`Subarray::clear_state`], so steady-state
+    /// serving does no per-layer allocation of row storage.
+    scratch: Vec<Subarray>,
 }
+
+/// Upper bound on pooled scratch subarrays (a conv layer holds
+/// `channels × activation-bits` planes live at once; beyond this the
+/// extras are simply dropped).
+const SCRATCH_POOL_CAP: usize = 256;
 
 impl FunctionalEngine {
     /// New engine for `cfg`.
     pub fn new(cfg: ArchConfig) -> Self {
         cfg.validate().expect("invalid config");
-        Self { cfg, stats: Stats::default(), residency: None, conv_seq: 0, resident_net: None }
+        Self {
+            cfg,
+            stats: Stats::default(),
+            residency: None,
+            conv_seq: 0,
+            resident_net: None,
+            scratch: Vec::new(),
+        }
     }
 
     /// Architecture configuration the engine simulates.
@@ -69,10 +90,11 @@ impl FunctionalEngine {
     /// Switch the engine to the Table 3 serving condition: each conv
     /// layer's weights are streamed over chip I/O once and then stay
     /// resident in the subarray buffers across subsequent inferences of
-    /// the *same network*. Running a different network (by name / node
-    /// count) evicts the resident set and re-streams; note that two
-    /// distinct `ModelParams` for one network are indistinguishable
-    /// here — a serving pool pairs each engine with one parameter set.
+    /// the *same network*. Running a different network (by structural
+    /// fingerprint, [`Network::fingerprint`]) evicts the resident set
+    /// and re-streams; note that two distinct `ModelParams` for one
+    /// architecture are indistinguishable here — a serving pool pairs
+    /// each engine with one parameter set.
     pub fn make_weights_resident(&mut self) {
         if self.residency.is_none() {
             self.residency = Some(WeightResidency::new());
@@ -84,8 +106,27 @@ impl FunctionalEngine {
         self.residency.as_ref()
     }
 
-    fn fresh_subarray(&self) -> Subarray {
-        Subarray::new(self.cfg.rows, self.cfg.cols, self.cfg.buffer_rows.max(16), self.cfg.costs)
+    /// Take a cleared subarray from the scratch pool (or build one).
+    fn take_subarray(&mut self) -> Subarray {
+        match self.scratch.pop() {
+            Some(mut s) => {
+                s.clear_state();
+                s
+            }
+            None => Subarray::new(
+                self.cfg.rows,
+                self.cfg.cols,
+                self.cfg.buffer_rows.max(16),
+                self.cfg.costs,
+            ),
+        }
+    }
+
+    /// Return a subarray to the scratch pool for reuse.
+    fn recycle_subarray(&mut self, sub: Subarray) {
+        if self.scratch.len() < SCRATCH_POOL_CAP {
+            self.scratch.push(sub);
+        }
     }
 
     /// Charge an inter-layer / off-chip transfer.
@@ -106,7 +147,10 @@ impl FunctionalEngine {
     }
 
     /// Store `values` (non-negative, `bits` wide) vertically in `sub` at
-    /// rows `base..base+bits`, one value per column.
+    /// rows `base..base+bits`, one value per column. The
+    /// horizontal→vertical conversion is one packed 128×128 bit-matrix
+    /// transpose ([`pack_columns`]); the charged device ops (one
+    /// strip-rewrite per bit row) are unchanged.
     fn store_vertical(
         &mut self,
         sub: &mut Subarray,
@@ -116,19 +160,14 @@ impl FunctionalEngine {
         phase: Phase,
     ) {
         assert!(values.len() <= sub.cols());
-        for b in 0..bits {
-            let mut word = 0u128;
-            for (col, &v) in values.iter().enumerate() {
-                debug_assert!(v >= 0);
-                if (v >> b) & 1 == 1 {
-                    word |= 1 << col;
-                }
-            }
+        let planes = pack_columns(values);
+        for (b, &word) in planes.iter().enumerate().take(bits) {
             sub.write_row(base + b, word, &mut self.stats, phase);
         }
     }
 
-    /// Read back `cols` vertical values of `bits` bits at `base`.
+    /// Read back `cols` vertical values of `bits` bits at `base` (one
+    /// charged row read per bit, one packed transpose to reassemble).
     fn load_vertical(
         &mut self,
         sub: &Subarray,
@@ -137,14 +176,12 @@ impl FunctionalEngine {
         cols: usize,
         phase: Phase,
     ) -> Vec<i64> {
-        let mut vals = vec![0i64; cols];
+        debug_assert!(bits <= 63, "vertical values must fit i64");
+        let mut rows = Vec::with_capacity(bits);
         for b in 0..bits {
-            let row = sub.read_row(base + b, &mut self.stats, phase);
-            for (col, v) in vals.iter_mut().enumerate() {
-                *v |= (((row >> col) & 1) as i64) << b;
-            }
+            rows.push(sub.read_row(base + b, &mut self.stats, phase));
         }
-        vals
+        unpack_columns(&rows, cols)
     }
 
     /// Run `net` with `params` on `input`, returning all node outputs
@@ -154,8 +191,8 @@ impl FunctionalEngine {
         assert!(input.w <= self.cfg.cols, "feature map wider than subarray");
         self.conv_seq = 0;
         if self.residency.is_some() {
-            let identity = (net.name.clone(), net.nodes.len());
-            if self.resident_net.as_ref() != Some(&identity) {
+            let identity = net.fingerprint();
+            if self.resident_net != Some(identity) {
                 if let Some(r) = self.residency.as_mut() {
                     r.evict_all();
                 }
@@ -173,30 +210,32 @@ impl FunctionalEngine {
         let mut act_bits = net.input_bits as usize;
 
         for (i, node) in net.nodes.iter().enumerate() {
-            let src = match node.input {
-                Some(j) => outs[j].clone(),
-                None if i == 0 => input_wide.clone(),
-                None => outs[i - 1].clone(),
+            // Borrow the source tensor in place — per-node clones of
+            // multi-megabyte feature maps were pure host overhead.
+            let src: &WideTensor = match node.input {
+                Some(j) => &outs[j],
+                None if i == 0 => &input_wide,
+                None => &outs[i - 1],
             };
             let out = match node.layer {
                 Layer::Conv { out_c, kh, kw, stride, pad } => {
-                    let k = params.conv_weights[ci].clone();
+                    let k = &params.conv_weights[ci];
                     ci += 1;
                     let _ = out_c;
-                    let y = self.conv_layer(&src, act_bits, &k, kh, kw, stride, pad, i == 0);
+                    let y = self.conv_layer(src, act_bits, k, kh, kw, stride, pad, i == 0);
                     act_bits = tensor_width(&y);
                     y
                 }
-                Layer::MaxPool { k, stride } => self.maxpool_layer(&src, act_bits, k, stride),
+                Layer::MaxPool { k, stride } => self.maxpool_layer(src, act_bits, k, stride),
                 Layer::AvgPool { k, stride } => {
-                    let y = self.avgpool_layer(&src, act_bits, k, stride);
+                    let y = self.avgpool_layer(src, act_bits, k, stride);
                     act_bits = tensor_width(&y);
                     y
                 }
                 Layer::BatchNorm => {
-                    let p = params.bn[bi].clone();
+                    let p = &params.bn[bi];
                     bi += 1;
-                    let y = self.bn_layer(&src, act_bits, &p);
+                    let y = self.bn_layer(src, act_bits, p);
                     act_bits = tensor_width(&y);
                     y
                 }
@@ -217,12 +256,12 @@ impl FunctionalEngine {
                 Layer::Quantize { bits } => {
                     let p = params.quant[qi];
                     qi += 1;
-                    let y = self.quantize_layer(&src, act_bits, p);
+                    let y = self.quantize_layer(src, act_bits, p);
                     act_bits = bits as usize;
                     y
                 }
                 Layer::Residual { from } => {
-                    let y = self.residual_layer(&src, &outs[from], act_bits);
+                    let y = self.residual_layer(src, &outs[from], act_bits);
                     act_bits = tensor_width(&y);
                     y
                 }
@@ -250,9 +289,11 @@ impl FunctionalEngine {
     ) -> WideTensor {
         // Zero padding is free in NAND-SPIN: padded cells are simply
         // left in the erased (AP = 0) state, so we materialise the
-        // padded bit-planes and store them directly.
+        // padded bit-planes and store them directly. Unpadded layers
+        // borrow the input as-is.
+        let padded;
         let x = if pad == 0 {
-            x.clone()
+            x
         } else {
             let mut p = WideTensor::zeros(x.c, x.h + 2 * pad, x.w + 2 * pad);
             for c in 0..x.c {
@@ -262,9 +303,9 @@ impl FunctionalEngine {
                     }
                 }
             }
-            p
+            padded = p;
+            &padded
         };
-        let x = &x;
         let xq = x.to_q(ibits as u8);
         let geo = ConvGeometry { in_h: x.h, in_w: x.w, stride };
         let oh = geo.out_h(kh);
@@ -278,7 +319,7 @@ impl FunctionalEngine {
             let mut per_bit = Vec::with_capacity(ibits);
             for n in 0..ibits {
                 let rows = xq.bitplane_rows(ic, n as u8);
-                let mut sub = self.fresh_subarray();
+                let mut sub = self.take_subarray();
                 self.charge_transfer((x.h * x.w) as u64, phase);
                 // Whole-strip writes (8 rows at a time).
                 for (strip, chunk) in rows.chunks(8).enumerate() {
@@ -306,27 +347,34 @@ impl FunctionalEngine {
 
         let mut y = WideTensor::zeros(k.oc, oh, ow);
         // One accumulation subarray per output row, reused across filters.
-        let mut acc = ColumnAccumulator::new(self.fresh_subarray(), ow);
+        let mut acc = ColumnAccumulator::new(self.take_subarray(), ow);
 
         let count_bits = width_of((kh * kw) as i64) as u64;
         for oc in 0..k.oc {
             // One bit-plane convolution pass per (weight-plane, channel,
             // input-plane); the per-row partials feed the accumulators.
-            let mut partials: Vec<(usize, Vec<Vec<u32>>)> = Vec::new();
+            // Partials are kept bit-sliced end to end: `sums[or]` is the
+            // packed window-sum planes of output row `or`, programmed
+            // into the accumulator one word per row.
+            let mut partials: Vec<(usize, Vec<Vec<u128>>)> =
+                Vec::with_capacity(mbits * x.c * ibits);
             for m in 0..mbits {
                 for ic in 0..x.c {
                     let kernel = BitKernel::new(kh, kw, k.bitplane(oc, ic, m as u8));
+                    // One tiling per kernel bit-plane, shared across
+                    // every input bit-plane `n`.
+                    let tiling = kernel.tilings(geo.in_w);
                     for n in 0..ibits {
                         let sub = &mut planes[ic][n];
-                        let counts = bitplane_conv_counts(
+                        let counts = bitplane_conv_counts_tiled(
                             sub,
                             0,
                             geo,
-                            &kernel,
+                            &tiling,
                             &mut self.stats,
                             Phase::Convolution,
                         );
-                        let sums = window_sums(&counts, geo, &kernel);
+                        let sums = window_sum_planes(&counts, geo, kh, kw);
                         // In-mat transfer of the drained counts to the
                         // accumulation subarray.
                         self.charge_transfer((oh * ow) as u64 * count_bits, Phase::DataTransfer);
@@ -337,7 +385,7 @@ impl FunctionalEngine {
             for or in 0..oh {
                 acc.reset(&mut self.stats);
                 for (shift, sums) in &partials {
-                    acc.push(&sums[or], *shift, &mut self.stats);
+                    acc.push_planes(&sums[or], *shift, &mut self.stats);
                 }
                 let row_vals = acc.finish(&mut self.stats);
                 for ocx in 0..ow {
@@ -345,6 +393,13 @@ impl FunctionalEngine {
                 }
             }
         }
+        // Hand every subarray back to the scratch pool.
+        for per_bit in planes {
+            for sub in per_bit {
+                self.recycle_subarray(sub);
+            }
+        }
+        self.recycle_subarray(acc.into_subarray());
         y
     }
 
@@ -373,7 +428,7 @@ impl FunctionalEngine {
             let positions: Vec<(usize, usize)> =
                 (0..oh).flat_map(|r| (0..ow).map(move |q| (r, q))).collect();
             for batch in positions.chunks(cols) {
-                let mut sub = self.fresh_subarray();
+                let mut sub = self.take_subarray();
                 // Window element (0,0) seeds the running max.
                 let seed: Vec<i64> = batch
                     .iter()
@@ -419,6 +474,7 @@ impl FunctionalEngine {
                 for (&(r, q), v) in batch.iter().zip(&vals) {
                     *y.at_mut(c, r, q) = *v;
                 }
+                self.recycle_subarray(sub);
             }
         }
         y
@@ -437,7 +493,7 @@ impl FunctionalEngine {
                 (0..oh).flat_map(|r| (0..ow).map(move |q| (r, q))).collect();
             for batch in positions.chunks(cols) {
                 // Sum the k² window elements with one multi-operand add.
-                let mut sub = self.fresh_subarray();
+                let mut sub = self.take_subarray();
                 let mut bases = Vec::with_capacity(k * k);
                 for idx in 0..k * k {
                     let (dy, dx) = (idx / k, idx % k);
@@ -454,6 +510,7 @@ impl FunctionalEngine {
                 let sum_w =
                     add_columns(&mut sub, &bases, b, sum_base, &mut self.stats, Phase::Pooling);
                 let sums = self.load_vertical(&sub, sum_base, sum_w, batch.len(), Phase::Pooling);
+                self.recycle_subarray(sub);
                 // avg = (sum·mul + 2^(shift−1)) >> shift via the in-memory
                 // multiply + rounding-add.
                 let avgs = self.scale_shift(
@@ -488,7 +545,7 @@ impl FunctionalEngine {
         phase: Phase,
     ) -> Vec<i64> {
         assert!(add >= 0, "unsigned datapath");
-        let mut sub = self.fresh_subarray();
+        let mut sub = self.take_subarray();
         let vbits = vbits.max(1);
         self.store_vertical(&mut sub, 0, vbits, values, phase);
         // Multiplier bits into the buffer (shared across columns).
@@ -534,16 +591,17 @@ impl FunctionalEngine {
         };
         // Shift = read from row `shift` upward.
         let hi = res_w.saturating_sub(shift as usize).max(1);
-        self.load_vertical(&sub, res_base + shift as usize, hi, values.len(), phase)
+        let out = self.load_vertical(&sub, res_base + shift as usize, hi, values.len(), phase);
+        self.recycle_subarray(sub);
+        out
     }
 
     fn bn_layer(&mut self, x: &WideTensor, bits: usize, p: &BnParams) -> WideTensor {
         let mut y = WideTensor::zeros(x.c, x.h, x.w);
         let hw = x.h * x.w;
         for c in 0..x.c {
-            let vals: Vec<i64> = x.data[c * hw..(c + 1) * hw].to_vec();
             let mut out = Vec::with_capacity(hw);
-            for batch in vals.chunks(self.cfg.cols) {
+            for batch in x.data[c * hw..(c + 1) * hw].chunks(self.cfg.cols) {
                 out.extend(self.scale_shift(
                     batch,
                     bits,
@@ -586,7 +644,7 @@ impl FunctionalEngine {
             .zip(b.data.chunks(self.cfg.cols))
             .enumerate()
         {
-            let mut sub = self.fresh_subarray();
+            let mut sub = self.take_subarray();
             self.store_vertical(&mut sub, 0, w, ca, Phase::Convolution);
             let b_base = (w.div_ceil(8) + 1) * 8;
             self.store_vertical(&mut sub, b_base, w, cb, Phase::Convolution);
@@ -600,6 +658,7 @@ impl FunctionalEngine {
                 Phase::Convolution,
             );
             let vals = self.load_vertical(&sub, res_base, rw, ca.len(), Phase::Convolution);
+            self.recycle_subarray(sub);
             y.data[i * self.cfg.cols..i * self.cfg.cols + vals.len()].copy_from_slice(&vals);
         }
         y
@@ -631,21 +690,23 @@ impl ColumnAccumulator {
         self.used = 0;
     }
 
-    /// Push one partial-count vector shifted by `shift` rows.
-    fn push(&mut self, counts: &[u32], shift: usize, stats: &mut Stats) {
+    /// Push one partial, already packed as bit planes (`planes[b]` bit
+    /// `col` = bit `b` of column `col`'s value), shifted by `shift`
+    /// rows. Programs exactly the rows the old per-column path did:
+    /// one program step per non-zero plane up to the operand's width.
+    fn push_planes(&mut self, planes: &[u128], shift: usize, stats: &mut Stats) {
         if self.used == self.slots {
             self.fold(stats);
         }
         let base = self.used * ACC_BITS;
-        let cb = 32 - counts.iter().copied().max().unwrap_or(0).leading_zeros() as usize;
+        // Operand width = highest non-zero plane (the per-column max's
+        // bit width — same bound the scalar path derived).
+        let mut cb = planes.len();
+        while cb > 0 && planes[cb - 1] == 0 {
+            cb -= 1;
+        }
         assert!(shift + cb <= ACC_BITS, "operand exceeds slot width");
-        for b in 0..cb {
-            let mut word = 0u128;
-            for (col, &v) in counts.iter().enumerate() {
-                if (v >> b) & 1 == 1 {
-                    word |= 1 << col;
-                }
-            }
+        for (b, &word) in planes[..cb].iter().enumerate() {
             if word != 0 {
                 let row = base + shift + b;
                 self.sub.program_row(row / 8, row % 8, word, stats, Phase::Convolution);
@@ -680,17 +741,27 @@ impl ColumnAccumulator {
         self.used = 1;
     }
 
-    /// Fold and read out the per-column totals.
+    /// Fold and read out the per-column totals (sparse set-bit walk of
+    /// each row word instead of a per-column scan).
     fn finish(&mut self, stats: &mut Stats) -> Vec<u64> {
         self.fold(stats);
         let mut vals = vec![0u64; self.cols];
         for b in 0..ACC_BITS {
-            let row = self.sub.read_row(b, stats, Phase::Convolution);
-            for (col, v) in vals.iter_mut().enumerate() {
-                *v |= (((row >> col) & 1) as u64) << b;
+            let mut word = self.sub.read_row(b, stats, Phase::Convolution);
+            while word != 0 {
+                let col = word.trailing_zeros() as usize;
+                if col < self.cols {
+                    vals[col] |= 1u64 << b;
+                }
+                word &= word - 1;
             }
         }
         vals
+    }
+
+    /// Release the underlying subarray back to the caller's pool.
+    fn into_subarray(self) -> Subarray {
+        self.sub
     }
 }
 
@@ -729,6 +800,47 @@ mod tests {
     #[test]
     fn small_cnn_other_seeds() {
         check_network(&small_cnn(3), 3, 1234);
+    }
+
+    #[test]
+    fn scratch_pool_reuse_is_deterministic() {
+        // Second request reuses pooled subarrays; outputs and the
+        // zero-based per-request stats must be bitwise identical to the
+        // first (cleared state == fresh state, and request stats are a
+        // pure function of the request — not of engine history).
+        use crate::coordinator::engine::InferenceEngine;
+        let net = small_cnn(3);
+        let params = ModelParams::random(&net, 3, 21);
+        let img = QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, 22);
+        let mut eng = FunctionalEngine::new(ArchConfig::paper());
+        let a = eng.execute(&net, Some(&params), &img);
+        let b = eng.execute(&net, Some(&params), &img);
+        assert_eq!(a.outputs, b.outputs, "pooled scratch must not change outputs");
+        assert_eq!(a.stats, b.stats, "per-request stats must not depend on history");
+    }
+
+    #[test]
+    fn same_name_same_length_network_still_evicts() {
+        // Regression for the old `(name, nodes.len())` residency key:
+        // same name, same node count, different structure must evict.
+        let a = micro_cnn(4);
+        let mut b = micro_cnn(4);
+        if let crate::cnn::layer::Layer::Conv { stride, .. } = &mut b.nodes[0].layer {
+            *stride = 2;
+        }
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.nodes.len(), b.nodes.len());
+        let pa = ModelParams::random(&a, 3, 1);
+        let pb = ModelParams::random(&b, 3, 2);
+        let ia = QTensor::random(a.input.0, a.input.1, a.input.2, a.input_bits, 3);
+        let ib = QTensor::random(b.input.0, b.input.1, b.input.2, b.input_bits, 4);
+        let mut eng = FunctionalEngine::new(ArchConfig::paper());
+        eng.make_weights_resident();
+        eng.run(&a, &pa, &ia);
+        eng.run(&b, &pb, &ib);
+        let r = eng.residency().expect("resident mode");
+        assert_eq!(r.hits, 0, "structurally different network must not hit");
+        assert_eq!(r.misses, 2, "both first touches must stream");
     }
 
     #[test]

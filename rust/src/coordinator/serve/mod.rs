@@ -28,9 +28,12 @@
 //! * [`pool`] executes each chip's batches on its own weight-resident
 //!   engine built by an
 //!   [`EngineFactory`](crate::coordinator::engine::EngineFactory)
-//!   (one host thread per chip) and schedules them on the simulated
-//!   clock behind a bounded queue ([`pool::timeline`]), so a saturated
-//!   chip exerts backpressure instead of queueing unboundedly.
+//!   (one host thread per chip; a bit-accurate chip's stream is
+//!   further split across worker threads with a deterministic,
+//!   bit-identical merge — host wall time is the only thing that
+//!   changes) and schedules them on the simulated clock behind a
+//!   bounded queue ([`pool::timeline`]), so a saturated chip exerts
+//!   backpressure instead of queueing unboundedly.
 //! * [`report::ServeReport`] rolls per-request completions up into
 //!   per-chip and aggregate latency/energy accounts and can
 //!   [`verify`](report::ServeReport::verify) that every roll-up equals

@@ -12,18 +12,37 @@
 //! afterwards by the pure [`timeline`] scheduler, which keeps the whole
 //! run deterministic regardless of host-thread interleaving.
 //!
+//! ## Intra-chip worker split (host-time only)
+//!
+//! A *bit-accurate* chip serving a large stream used to be one long
+//! serial host loop — the wall-clock bottleneck of functional serving.
+//! [`execute_with_workers`] additionally splits one chip's request
+//! stream across worker threads, each with its own engine replica.
+//! Simulated semantics are preserved exactly: in sequential serving
+//! only the chip's *first* request pays the weight stream (cold) and
+//! every later request runs warm, so each extra worker first replays
+//! one request on its private engine to reach the warm state
+//! (discarded), then serves its contiguous chunk. Per-request stats and
+//! outputs are deterministic functions of (config, params, input,
+//! cold/warm), so the merged result — chunks re-concatenated in stream
+//! order, residency folded back to the sequential ledger (one miss set,
+//! `n−1` warm hits per conv layer) — is bit-identical to the
+//! single-thread run whatever the worker count. Only host wall time
+//! changes.
+//!
 //! [`timeline`] models each chip as a FIFO single server behind a
 //! bounded batch queue: a batch flushed while the queue is full is held
 //! back (backpressure) until a slot frees, which is how a saturated
 //! chip pushes delay upstream instead of queueing unboundedly.
 
+use std::env;
 use std::thread;
 
 use crate::arch::stats::Stats;
 use crate::cnn::network::Network;
 use crate::cnn::ref_exec::{ModelParams, WideTensor};
 
-use crate::coordinator::engine::{EngineFactory, InferenceEngine};
+use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine};
 
 use super::batcher::FlushCause;
 use super::Request;
@@ -94,10 +113,12 @@ pub struct ChipResult {
 }
 
 /// Execute `planned` batches on `chips` weight-resident engines built
-/// by `factory`, one host thread per chip. Returns per-chip results
-/// ordered by chip index; within a chip, batches keep their flush
-/// order. `params` is required by bit-accurate engines and optional
-/// for synthesized ones.
+/// by `factory`, one host thread per chip (bit-accurate chips
+/// additionally split their stream across an automatic worker budget —
+/// see [`execute_with_workers`]). Returns per-chip results ordered by
+/// chip index; within a chip, batches keep their flush order. `params`
+/// is required by bit-accurate engines and optional for synthesized
+/// ones.
 pub fn execute(
     factory: &EngineFactory,
     net: &Network,
@@ -105,6 +126,25 @@ pub fn execute(
     chips: usize,
     planned: Vec<PlannedBatch>,
 ) -> Vec<ChipResult> {
+    execute_with_workers(factory, net, params, chips, planned, None)
+}
+
+/// [`execute`] with an explicit intra-chip worker count.
+///
+/// `workers_per_chip = None` picks the automatic budget: host
+/// parallelism divided by the chip count (override with the
+/// `NANDSPIN_HOST_WORKERS` environment variable — useful for pinning
+/// benchmarks and CI). The worker split changes host wall time only;
+/// the returned results are bit-identical for every worker count.
+pub fn execute_with_workers(
+    factory: &EngineFactory,
+    net: &Network,
+    params: Option<&ModelParams>,
+    chips: usize,
+    planned: Vec<PlannedBatch>,
+    workers_per_chip: Option<usize>,
+) -> Vec<ChipResult> {
+    let workers = workers_per_chip.unwrap_or_else(|| auto_workers(chips)).max(1);
     let mut per_chip: Vec<Vec<PlannedBatch>> = (0..chips).map(|_| Vec::new()).collect();
     for b in planned {
         assert!(b.chip < chips, "router produced an out-of-range chip");
@@ -116,15 +156,53 @@ pub fn execute(
             .into_iter()
             .enumerate()
             .map(|(chip, batches)| {
-                scope.spawn(move || run_chip(factory, net, params, chip, batches))
+                scope.spawn(move || run_chip(factory, net, params, chip, batches, workers))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("chip worker panicked")).collect()
     })
 }
 
-/// Serve one chip's batches on a fresh weight-resident engine.
+/// Automatic intra-chip worker budget: host cores spread over the
+/// chip threads, overridable via `NANDSPIN_HOST_WORKERS`.
+fn auto_workers(chips: usize) -> usize {
+    if let Ok(v) = env::var("NANDSPIN_HOST_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    let host = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (host / chips.max(1)).max(1)
+}
+
+/// Serve one chip's batches, splitting across up to `workers` threads
+/// when the engine is bit-accurate and there is enough work to pay for
+/// the per-worker warm-up replay (each worker needs a chunk of ≥ 2
+/// requests to amortise its one discarded warm-up run).
 fn run_chip(
+    factory: &EngineFactory,
+    net: &Network,
+    params: Option<&ModelParams>,
+    chip: usize,
+    batches: Vec<PlannedBatch>,
+    workers: usize,
+) -> ChipResult {
+    let n: usize = batches.iter().map(|b| b.requests.len()).sum();
+    let workers = if factory.kind() == EngineKind::Functional {
+        workers.min(n / 2).max(1)
+    } else {
+        // Synthesized engines are closed-form — a split cannot pay.
+        1
+    };
+    if workers <= 1 {
+        run_chip_sequential(factory, net, params, chip, batches)
+    } else {
+        run_chip_parallel(factory, net, params, chip, batches, workers)
+    }
+}
+
+/// Serve one chip's batches on a fresh weight-resident engine.
+fn run_chip_sequential(
     factory: &EngineFactory,
     net: &Network,
     params: Option<&ModelParams>,
@@ -154,6 +232,95 @@ fn run_chip(
         .map(|r| (r.hits, r.misses))
         .unwrap_or((0, 0));
     ChipResult { chip, batches: out, weight_hits: hits, weight_misses: misses }
+}
+
+/// Serve one chip's stream across `workers ≥ 2` engine replicas with a
+/// deterministic merge (see the module docs for why the result is
+/// bit-identical to [`run_chip_sequential`]).
+fn run_chip_parallel(
+    factory: &EngineFactory,
+    net: &Network,
+    params: Option<&ModelParams>,
+    chip: usize,
+    batches: Vec<PlannedBatch>,
+    workers: usize,
+) -> ChipResult {
+    // Flatten the stream, keeping each batch's metadata for reassembly.
+    let mut metas = Vec::with_capacity(batches.len());
+    let mut flat: Vec<Request> = Vec::new();
+    for b in batches {
+        metas.push((b.seq, b.cause, b.flush_ns, b.arrivals_ns, b.requests.len()));
+        flat.extend(b.requests);
+    }
+    let n = flat.len();
+    debug_assert!(workers >= 2 && n >= 2 * workers - 1);
+
+    // Contiguous per-worker chunks (stream order).
+    let bounds: Vec<usize> = (0..=workers).map(|k| k * n / workers).collect();
+    let mut chunks: Vec<Vec<Request>> = Vec::with_capacity(workers);
+    let mut rest = flat;
+    for k in (1..=workers).rev() {
+        chunks.push(rest.split_off(bounds[k - 1]));
+    }
+    chunks.reverse();
+
+    let results: Vec<(Vec<ExecutedRequest>, u64)> = thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(k, chunk)| {
+                scope.spawn(move || {
+                    let mut engine = factory.build();
+                    engine.make_weights_resident();
+                    let mut out = Vec::with_capacity(chunk.len());
+                    for (i, req) in chunk.iter().enumerate() {
+                        if k > 0 && i == 0 {
+                            // Warm-up replay: stream the weights into
+                            // this worker's private engine and discard
+                            // the run, so every request it *reports*
+                            // carries the sequential (warm) cost.
+                            let _ = engine.execute(net, params, &req.image);
+                        }
+                        let exec = engine.execute(net, params, &req.image);
+                        let output =
+                            exec.outputs.map(|mut o| o.pop().expect("non-empty network"));
+                        out.push(ExecutedRequest { id: req.id, output, stats: exec.stats });
+                    }
+                    let misses = engine.residency().map(|r| r.misses).unwrap_or(0);
+                    (out, misses)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("chip worker panicked")).collect()
+    });
+
+    // Deterministic merge: re-concatenate the chunks in stream order and
+    // fold residency back to the sequential ledger — worker 0's misses
+    // are the chip's one cold weight stream (= conv-layer count), and
+    // every other request of the stream is a warm hit on each of those
+    // layers, exactly as one engine serving the stream would record.
+    let streams = results.first().map(|(_, m)| *m).unwrap_or(0);
+    let mut all: Vec<ExecutedRequest> = Vec::with_capacity(n);
+    for (out, _) in results {
+        all.extend(out);
+    }
+    let mut all = all.into_iter();
+    let out_batches: Vec<ExecutedBatch> = metas
+        .into_iter()
+        .map(|(seq, cause, flush_ns, arrivals_ns, len)| ExecutedBatch {
+            seq,
+            cause,
+            flush_ns,
+            arrivals_ns,
+            requests: all.by_ref().take(len).collect(),
+        })
+        .collect();
+    ChipResult {
+        chip,
+        batches: out_batches,
+        weight_hits: streams * (n as u64 - 1),
+        weight_misses: streams,
+    }
 }
 
 /// Dispatch timing of one batch on its chip.

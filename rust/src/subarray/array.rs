@@ -164,6 +164,18 @@ impl Subarray {
         self.rows[row]
     }
 
+    /// Host-side reset to the freshly-built state (all MTJs erased,
+    /// counters and buffer cleared) **without charging any cost** —
+    /// used by the coordinator's scratch pool to reuse one allocation
+    /// across layers instead of building a new subarray per use. The
+    /// simulated device never does this; every modelled erase/program
+    /// still goes through the charged ops above.
+    pub fn clear_state(&mut self) {
+        self.rows.fill(0);
+        self.counters.reset();
+        self.buffer.clear();
+    }
+
     // ----------------------------------------------------------------
     // Compute mode (Fig. 5d)
     // ----------------------------------------------------------------
@@ -321,6 +333,21 @@ mod tests {
                 assert_eq!((row >> col) & 1 == 1, dev.read(pos), "col {col} pos {pos}");
             }
         }
+    }
+
+    #[test]
+    fn clear_state_restores_fresh_state_without_cost() {
+        let mut s = sub();
+        let mut st = Stats::default();
+        s.write_row(9, 0xabcd, &mut st, Phase::LoadData);
+        s.buffer_write(1, 0x77, &mut st, Phase::LoadData);
+        s.count(0b101, &mut st, Phase::Convolution);
+        let before = st.clone();
+        s.clear_state();
+        assert_eq!(st, before, "host reset must charge nothing");
+        assert_eq!(s.peek_row(9), 0);
+        assert_eq!(s.buffer.read(1), 0);
+        assert!(s.counters.is_zero());
     }
 
     #[test]

@@ -17,8 +17,9 @@
 //! word ops instead of a 128-iteration scalar walk — and `lsbs()` /
 //! `shift_right()` become O(1)/O(planes) word moves. This is also
 //! exactly how the hardware lays the counters out across the column
-//! pitch. (Before: 21 ns per accumulate; after: ~2 ns — see
-//! EXPERIMENTS.md §Perf.)
+//! pitch; see ARCHITECTURE.md §"Packed bit-plane host representation"
+//! (the `functional` bench tracks the packed-vs-scalar accumulate
+//! ratio in `BENCH_functional.json`).
 
 /// Counter capacity in bits (values up to 2^16−1 — the primitives bound
 /// counts by the operand-slot count ≤ 30, so 16 bits is ample headroom).

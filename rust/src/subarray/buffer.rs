@@ -39,6 +39,11 @@ impl WeightBuffer {
     pub fn read(&self, row: usize) -> u128 {
         self.rows[row]
     }
+
+    /// Zero every row (host-side scratch-pool reset; no cost charged).
+    pub fn clear(&mut self) {
+        self.rows.fill(0);
+    }
 }
 
 #[cfg(test)]

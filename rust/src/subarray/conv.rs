@@ -13,8 +13,11 @@
 //! the window starting at any column `c ≡ p (mod Kw)`. The horizontal
 //! fold across the `Kw` columns of each window is done by in-memory
 //! addition in the accumulation subarray (cross-writing scheme, Fig. 12);
-//! here we expose the raw per-column counts plus a pure fold helper used
-//! by tests and by the functional coordinator.
+//! here we expose the raw counts as packed bit planes
+//! ([`PeriodCounts`]) plus word-parallel fold helpers
+//! ([`window_sum_planes`], [`window_sums`]) used by tests and by the
+//! functional coordinator. See ARCHITECTURE.md §"Packed bit-plane host
+//! representation" for why none of this changes the device-op stream.
 
 use crate::arch::stats::{Phase, Stats};
 
@@ -58,17 +61,91 @@ impl BitKernel {
         }
         word
     }
+
+    /// Precompute every (period, kernel-row) tiling word for a `cols`
+    /// wide subarray. The conv stepper consults the same tiling once
+    /// per buffer load, so building it bit-by-bit *per call* (the old
+    /// path — once per input bit-plane per output channel) wasted the
+    /// bulk of the host time; a [`KernelTiling`] is built once per
+    /// (kernel bit-plane, width) and shared across all input bit-planes.
+    pub fn tilings(&self, cols: usize) -> KernelTiling {
+        let mut rows = Vec::with_capacity(self.kw * self.kh);
+        for p in 0..self.kw {
+            for kr in 0..self.kh {
+                rows.push(self.tile_row(kr, p, cols));
+            }
+        }
+        KernelTiling { kh: self.kh, kw: self.kw, cols, rows }
+    }
+}
+
+/// Cached per-period tilings of one [`BitKernel`] over a fixed column
+/// width (see [`BitKernel::tilings`]).
+#[derive(Debug, Clone)]
+pub struct KernelTiling {
+    kh: usize,
+    kw: usize,
+    cols: usize,
+    /// `rows[p * kh + kr]` = `tile_row(kr, p, cols)`.
+    rows: Vec<u128>,
+}
+
+impl KernelTiling {
+    /// Kernel height.
+    pub fn kh(&self) -> usize {
+        self.kh
+    }
+
+    /// Kernel width (also the period count).
+    pub fn kw(&self) -> usize {
+        self.kw
+    }
+
+    /// Column width the tiling was built for.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Tiling word of kernel row `kr` at period `p`.
+    #[inline]
+    pub fn row(&self, p: usize, kr: usize) -> u128 {
+        self.rows[p * self.kh + kr]
+    }
 }
 
 /// Raw bit-counter contents after one (output-row, period) pass.
+///
+/// The counts are stored *bit-sliced*, exactly as the hardware drains
+/// them: `planes[b]` holds bit `b` of every column's count packed in
+/// one word (`planes[b]` bit `j` = bit `b` of column `j`'s count).
+/// This keeps the host representation word-parallel end to end — the
+/// drain, the window fold and the accumulator push all operate on
+/// whole row words, never on per-column integers.
 #[derive(Debug, Clone)]
 pub struct PeriodCounts {
     /// Sliding period (column offset of the weight tiling).
     pub period: usize,
     /// Output row index (input row window start / stride).
     pub out_row: usize,
-    /// Per-column counter values.
-    pub counts: Vec<u32>,
+    /// Columns the counts cover (the input width of the pass).
+    pub in_w: usize,
+    /// Bit-sliced per-column counter values (LSB plane first).
+    pub planes: Vec<u128>,
+}
+
+impl PeriodCounts {
+    /// Per-column counter values, reconstructed from the bit planes
+    /// (diagnostic / test path — the hot path stays on `planes`).
+    pub fn counts(&self) -> Vec<u32> {
+        (0..self.in_w)
+            .map(|j| {
+                self.planes
+                    .iter()
+                    .enumerate()
+                    .fold(0u32, |acc, (b, &w)| acc | ((((w >> j) & 1) as u32) << b))
+            })
+            .collect()
+    }
 }
 
 /// Geometry of one bit-plane convolution.
@@ -116,78 +193,169 @@ pub fn bitplane_conv_counts(
     stats: &mut Stats,
     phase: Phase,
 ) -> Vec<PeriodCounts> {
-    assert!(geo.in_w <= sub.cols(), "input width exceeds subarray columns");
-    assert!(base + geo.in_h <= sub.num_rows());
-    assert!(kernel.kh <= sub.buffer.rows(), "kernel taller than weight buffer");
+    let tiling = kernel.tilings(geo.in_w);
+    bitplane_conv_counts_tiled(sub, base, geo, &tiling, stats, phase)
+}
 
-    let out_h = geo.out_h(kernel.kh);
-    let out_w = geo.out_w(kernel.kw);
-    let mut results = Vec::with_capacity(out_h * kernel.kw.min(out_w.max(1)));
+/// [`bitplane_conv_counts`] with the weight tilings precomputed — the
+/// hot-path entry: the functional coordinator builds one
+/// [`KernelTiling`] per kernel bit-plane and reuses it across every
+/// input bit-plane, instead of re-deriving the tiling words bit-by-bit
+/// on each pass. The device-op sequence (and thus [`Stats`]) is
+/// identical to the untiled entry point.
+pub fn bitplane_conv_counts_tiled(
+    sub: &mut Subarray,
+    base: usize,
+    geo: ConvGeometry,
+    tiling: &KernelTiling,
+    stats: &mut Stats,
+    phase: Phase,
+) -> Vec<PeriodCounts> {
+    let (kh, kw) = (tiling.kh(), tiling.kw());
+    assert!(geo.in_w <= sub.cols(), "input width exceeds subarray columns");
+    assert_eq!(tiling.cols(), geo.in_w, "tiling width mismatch");
+    assert!(base + geo.in_h <= sub.num_rows());
+    assert!(kh <= sub.buffer.rows(), "kernel taller than weight buffer");
+
+    let out_h = geo.out_h(kh);
+    let out_w = geo.out_w(kw);
+    let mut results = Vec::with_capacity(out_h * kw.min(out_w.max(1)));
 
     // Periods actually used by some output column.
-    let mut used = vec![false; kernel.kw];
+    let mut used = vec![false; kw];
     for oc in 0..out_w {
-        used[(oc * geo.stride) % kernel.kw] = true;
+        used[(oc * geo.stride) % kw] = true;
     }
+
+    // Count ≤ kh per column, so ⌈log2(kh+1)⌉ drain cycles.
+    let count_bits = 32 - (kh as u32).leading_zeros();
+    let in_mask = if geo.in_w == 128 { u128::MAX } else { (1u128 << geo.in_w) - 1 };
 
     for (p, _) in used.iter().enumerate().filter(|(_, &u)| u) {
         // One buffer load per period, reused for every output row.
-        for kr in 0..kernel.kh {
-            let word = kernel.tile_row(kr, p, geo.in_w);
-            sub.buffer_write(kr, word, stats, phase);
+        for kr in 0..kh {
+            sub.buffer_write(kr, tiling.row(p, kr), stats, phase);
         }
         for or in 0..out_h {
             sub.counters.reset();
             let r0 = base + or * geo.stride;
-            for kr in 0..kernel.kh {
+            for kr in 0..kh {
                 sub.and_count(r0 + kr, kr, stats, phase);
             }
             // Drain the counters bit-serially (LSB + shift), as the
             // hardware does when streaming counts to the accumulation
-            // subarray. Count ≤ kh, so ⌈log2(kh+1)⌉ drain cycles.
-            // §Perf: iterate only the set bits of each drained plane
-            // instead of walking all columns.
-            let count_bits = 32 - (kernel.kh as u32).leading_zeros();
-            let in_mask =
-                if geo.in_w == 128 { u128::MAX } else { (1u128 << geo.in_w) - 1 };
-            let mut counts = vec![0u32; geo.in_w];
-            for bitpos in 0..count_bits {
-                let mut lsbs = sub.counter_lsbs_shift(stats, phase) & in_mask;
-                while lsbs != 0 {
-                    let j = lsbs.trailing_zeros() as usize;
-                    counts[j] |= 1 << bitpos;
-                    lsbs &= lsbs - 1;
-                }
+            // subarray. Each drained word already *is* one bit plane
+            // of all 128 per-column counts — keep it packed.
+            let mut planes = Vec::with_capacity(count_bits as usize);
+            for _ in 0..count_bits {
+                planes.push(sub.counter_lsbs_shift(stats, phase) & in_mask);
             }
-            results.push(PeriodCounts { period: p, out_row: or, counts });
+            results.push(PeriodCounts { period: p, out_row: or, in_w: geo.in_w, planes });
         }
     }
     results
 }
 
-/// Pure fold of [`PeriodCounts`] into window sums:
-/// `out[or][oc] = Σ_kc counts(period = oc·s mod kw)[oc·s + kc]`.
+/// Bit-sliced sum of the `kw` column-shifted copies of `planes`:
+/// result column `c` holds `Σ_{kc<kw} value(c + kc)` (columns past the
+/// input width contribute zero). One ripple-carry pass of word ops per
+/// shift — the word-parallel form of the horizontal window fold.
+fn fold_shifted(planes: &[u128], kw: usize, width: usize) -> Vec<u128> {
+    let mut acc = vec![0u128; width];
+    acc[..planes.len().min(width)].copy_from_slice(&planes[..planes.len().min(width)]);
+    for kc in 1..kw {
+        let mut carry = 0u128;
+        for (b, a) in acc.iter_mut().enumerate() {
+            let y = planes.get(b).map_or(0, |&w| w >> kc);
+            let x = *a;
+            *a = x ^ y ^ carry;
+            carry = (x & y) | (carry & (x ^ y));
+        }
+        debug_assert_eq!(carry, 0, "window fold overflow: width too small");
+    }
+    acc
+}
+
+/// Pure word-parallel fold of [`PeriodCounts`] into per-output-row
+/// window-sum bit planes: in row `or`'s result, bit `oc` of plane `b`
+/// is bit `b` of `Σ_kc counts(period = oc·s mod kw)[oc·s + kc]` —
+/// i.e. the planes are already packed in *output-column* space, ready
+/// to program into the accumulation subarray one word per row.
 ///
 /// In hardware this fold is the in-memory addition in the accumulation
 /// subarray; the functional coordinator charges it there.
+pub fn window_sum_planes(
+    counts: &[PeriodCounts],
+    geo: ConvGeometry,
+    kh: usize,
+    kw: usize,
+) -> Vec<Vec<u128>> {
+    let out_h = geo.out_h(kh);
+    let out_w = geo.out_w(kw);
+    let count_bits = counts.iter().map(|pc| pc.planes.len()).max().unwrap_or(0);
+    // Headroom for the kw-way fold: sums stay below kw · 2^count_bits.
+    let width = count_bits + (usize::BITS - kw.leading_zeros()) as usize;
+    let mut out = vec![vec![0u128; width]; out_h];
+    if out_w == 0 {
+        return out;
+    }
+    for pc in counts {
+        if pc.out_row >= out_h {
+            continue;
+        }
+        let f = fold_shifted(&pc.planes, kw, width);
+        let o = &mut out[pc.out_row];
+        if geo.stride == 1 {
+            // Output column oc reads input column oc; this period's
+            // valid positions are oc ≡ p (mod kw) — a periodic mask.
+            let mut sel = 0u128;
+            let mut oc = pc.period;
+            while oc < out_w {
+                sel |= 1 << oc;
+                oc += kw;
+            }
+            for (b, w) in f.iter().enumerate() {
+                o[b] |= w & sel;
+            }
+        } else {
+            // Strided gather: move the bit at input column oc·s to
+            // output bit oc, for this period's output columns.
+            for oc in 0..out_w {
+                let c0 = oc * geo.stride;
+                if c0 % kw != pc.period {
+                    continue;
+                }
+                for (b, w) in f.iter().enumerate() {
+                    o[b] |= ((w >> c0) & 1) << oc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-column window sums (`out[or][oc]`), reconstructed from
+/// [`window_sum_planes`] — the diagnostic / reference view; the hot
+/// path consumes the packed planes directly.
 pub fn window_sums(
     counts: &[PeriodCounts],
     geo: ConvGeometry,
     kernel: &BitKernel,
 ) -> Vec<Vec<u32>> {
-    let out_h = geo.out_h(kernel.kh);
     let out_w = geo.out_w(kernel.kw);
-    let mut out = vec![vec![0u32; out_w]; out_h];
-    for pc in counts {
-        for oc in 0..out_w {
-            let c0 = oc * geo.stride;
-            if c0 % kernel.kw != pc.period {
-                continue;
-            }
-            out[pc.out_row][oc] = (0..kernel.kw).map(|kc| pc.counts[c0 + kc]).sum();
-        }
-    }
-    out
+    window_sum_planes(counts, geo, kernel.kh, kernel.kw)
+        .into_iter()
+        .map(|planes| {
+            (0..out_w)
+                .map(|oc| {
+                    planes
+                        .iter()
+                        .enumerate()
+                        .fold(0u32, |acc, (b, &w)| acc | ((((w >> oc) & 1) as u32) << b))
+                })
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -288,6 +456,122 @@ mod tests {
     #[test]
     fn matches_reference_11x11_alexnet_like() {
         check(20, 40, 11, 11, 4, 5);
+    }
+
+    #[test]
+    fn tilings_match_tile_row() {
+        let kernel = BitKernel::new(3, 5, pseudo_input(3, 5, 77).concat());
+        for &cols in &[1usize, 5, 37, 127, 128] {
+            let tiling = kernel.tilings(cols);
+            assert_eq!((tiling.kh(), tiling.kw(), tiling.cols()), (3, 5, cols));
+            for p in 0..5 {
+                for kr in 0..3 {
+                    assert_eq!(
+                        tiling.row(p, kr),
+                        kernel.tile_row(kr, p, cols),
+                        "p={p} kr={kr} cols={cols}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_stepper_is_bit_and_stats_identical_to_untiled() {
+        let input = pseudo_input(12, 30, 9);
+        let kernel = BitKernel::new(3, 3, pseudo_input(3, 3, 10).concat());
+        let geo = ConvGeometry { in_h: 12, in_w: 30, stride: 2 };
+        let mut s1 = sub();
+        let mut s2 = sub();
+        store_input(&mut s1, 0, &input);
+        store_input(&mut s2, 0, &input);
+        let mut st1 = Stats::default();
+        let mut st2 = Stats::default();
+        let a = bitplane_conv_counts(&mut s1, 0, geo, &kernel, &mut st1, Phase::Convolution);
+        let tiling = kernel.tilings(geo.in_w);
+        let b = bitplane_conv_counts_tiled(&mut s2, 0, geo, &tiling, &mut st2, Phase::Convolution);
+        assert_eq!(st1, st2, "device-op stream must be identical");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.period, x.out_row, &x.planes), (y.period, y.out_row, &y.planes));
+        }
+    }
+
+    #[test]
+    fn period_counts_planes_reconstruct_per_column_counts() {
+        let input = pseudo_input(9, 21, 31);
+        let kernel = BitKernel::new(4, 3, pseudo_input(4, 3, 32).concat());
+        let mut s = sub();
+        store_input(&mut s, 0, &input);
+        let geo = ConvGeometry { in_h: 9, in_w: 21, stride: 1 };
+        let mut st = Stats::default();
+        let counts = bitplane_conv_counts(&mut s, 0, geo, &kernel, &mut st, Phase::Convolution);
+        for pc in &counts {
+            // Scalar reference: count matches per column directly.
+            let expect: Vec<u32> = (0..21)
+                .map(|j| {
+                    (0..4)
+                        .map(|kr| {
+                            let row = pc.out_row + kr; // stride 1
+                            let kc = (j + 3 - pc.period % 3) % 3;
+                            (input[row][j] && kernel.at(kr, kc)) as u32
+                        })
+                        .sum()
+                })
+                .collect();
+            assert_eq!(pc.counts(), expect, "period {} row {}", pc.period, pc.out_row);
+        }
+    }
+
+    #[test]
+    fn window_sum_planes_match_scalar_fold() {
+        // The packed fold vs the pre-refactor per-column scalar fold.
+        for &(h, w, kh, kw, stride, seed) in &[
+            (8usize, 16usize, 3usize, 3usize, 1usize, 3u64),
+            (10, 128, 3, 5, 1, 4),
+            (12, 31, 5, 3, 2, 5),
+            (9, 24, 2, 2, 3, 6),
+            (11, 127, 4, 7, 2, 7),
+        ] {
+            let input = pseudo_input(h, w, seed);
+            let kernel = BitKernel::new(kh, kw, pseudo_input(kh, kw, seed + 1).concat());
+            let mut s = sub();
+            store_input(&mut s, 0, &input);
+            let geo = ConvGeometry { in_h: h, in_w: w, stride };
+            let mut st = Stats::default();
+            let counts =
+                bitplane_conv_counts(&mut s, 0, geo, &kernel, &mut st, Phase::Convolution);
+            // Scalar reference fold over reconstructed per-column counts.
+            let out_h = geo.out_h(kh);
+            let out_w = geo.out_w(kw);
+            let mut expect = vec![vec![0u32; out_w]; out_h];
+            for pc in &counts {
+                let cols = pc.counts();
+                for oc in 0..out_w {
+                    let c0 = oc * stride;
+                    if c0 % kw != pc.period {
+                        continue;
+                    }
+                    expect[pc.out_row][oc] = (0..kw).map(|kc| cols[c0 + kc]).sum();
+                }
+            }
+            assert_eq!(
+                window_sums(&counts, geo, &kernel),
+                expect,
+                "{h}x{w} k{kh}x{kw} s{stride}"
+            );
+            // And the packed planes carry the same values bit-sliced.
+            let planes = window_sum_planes(&counts, geo, kh, kw);
+            for or in 0..out_h {
+                for oc in 0..out_w {
+                    let v = planes[or]
+                        .iter()
+                        .enumerate()
+                        .fold(0u32, |acc, (b, &wd)| acc | ((((wd >> oc) & 1) as u32) << b));
+                    assert_eq!(v, expect[or][oc], "or={or} oc={oc}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Small self-contained utilities: a deterministic PRNG (the build is
 //! fully offline, so we avoid external crates) used for synthetic
-//! workloads and property-style test sweeps.
+//! workloads and property-style test sweeps, and the packed 128×128
+//! bit-matrix transpose the word-parallel host representation is built
+//! on (vertical-layout pack/unpack without per-element loops).
 
 /// SplitMix64: tiny, fast, well-distributed PRNG. Deterministic per seed;
 /// NOT cryptographic — used only for synthetic data and test-case
@@ -48,6 +50,66 @@ impl Rng {
     }
 }
 
+/// In-place transpose of a 128×128 bit matrix stored row-major: bit `c`
+/// of `m[r]` is element (r, c); afterwards bit `r` of `m[c]` holds the
+/// same element. LSB-first convention throughout (column 0 = bit 0).
+///
+/// This is the recursive block-swap transpose (Hacker's Delight §7-3
+/// adapted to LSB-first indexing): 7 rounds of masked field exchanges,
+/// ~64 word ops per round — no per-bit loops. It is its own inverse.
+///
+/// The simulator uses it to convert between the *horizontal* host
+/// representation (one value per word) and the subarray's *vertical*
+/// layout (one bit-position per row word) in O(1) word ops per matrix
+/// instead of O(bits × cols) single-bit extracts.
+pub fn transpose128(m: &mut [u128; 128]) {
+    let mut j = 64usize;
+    let mut mask: u128 = u128::MAX >> 64; // low half of each 2j block
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 128 {
+            // Exchange the high-column block of row k with the
+            // low-column block of row k+j (LSB-first transpose step).
+            let t = (m[k + j] ^ (m[k] >> j)) & mask;
+            m[k + j] ^= t;
+            m[k] ^= t << j;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        if j != 0 {
+            mask ^= mask << j;
+        }
+    }
+}
+
+/// Pack `values[col]` (non-negative, each < 2^128) into vertical bit
+/// planes: word `b` of the result has bit `col` = bit `b` of
+/// `values[col]`. At most 128 values.
+///
+/// # Panics
+/// If more than 128 values are given (debug: or any value is negative).
+pub fn pack_columns(values: &[i64]) -> [u128; 128] {
+    assert!(values.len() <= 128);
+    let mut m = [0u128; 128];
+    for (col, &v) in values.iter().enumerate() {
+        debug_assert!(v >= 0, "vertical layout is unsigned");
+        m[col] = v as u128;
+    }
+    transpose128(&mut m);
+    m
+}
+
+/// Inverse of [`pack_columns`]: given row words `rows[b]` (bit `col` =
+/// bit `b` of column `col`'s value, `rows.len() <= 128` bit positions),
+/// reconstruct the first `cols` column values.
+pub fn unpack_columns(rows: &[u128], cols: usize) -> Vec<i64> {
+    assert!(rows.len() <= 128 && cols <= 128);
+    let mut m = [0u128; 128];
+    m[..rows.len()].copy_from_slice(rows);
+    transpose128(&mut m);
+    m[..cols].iter().map(|&v| v as i64).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,6 +132,50 @@ mod tests {
             assert!(r.gen_range_inclusive(15) <= 15);
             let v = r.gen_usize(10, 20);
             assert!((10..20).contains(&v));
+        }
+    }
+
+    #[test]
+    fn transpose_matches_scalar_bit_walk() {
+        let mut rng = Rng::seed_from_u64(0x7123);
+        for _ in 0..10 {
+            let mut m = [0u128; 128];
+            for row in m.iter_mut() {
+                *row = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+            }
+            let orig = m;
+            transpose128(&mut m);
+            for r in 0..128 {
+                for c in 0..128 {
+                    assert_eq!(
+                        (m[c] >> r) & 1,
+                        (orig[r] >> c) & 1,
+                        "element ({r},{c})"
+                    );
+                }
+            }
+            // Self-inverse.
+            transpose128(&mut m);
+            assert_eq!(m, orig);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_columns_roundtrip() {
+        let mut rng = Rng::seed_from_u64(0x7124);
+        for &cols in &[1usize, 7, 64, 127, 128] {
+            let values: Vec<i64> =
+                (0..cols).map(|_| (rng.next_u64() >> 1) as i64).collect();
+            let planes = pack_columns(&values);
+            // Scalar cross-check of the plane words.
+            for b in 0..64 {
+                let mut expect = 0u128;
+                for (col, &v) in values.iter().enumerate() {
+                    expect |= ((v as u128 >> b) & 1) << col;
+                }
+                assert_eq!(planes[b], expect, "plane {b} cols {cols}");
+            }
+            assert_eq!(unpack_columns(&planes[..63], cols), values);
         }
     }
 

@@ -1,11 +1,18 @@
 //! Property-style sweeps over the in-memory primitives and coordinator
 //! invariants (hand-rolled generator: the build is offline, so proptest
-//! is replaced by seeded random sweeps with shrink-friendly reporting).
+//! is replaced by seeded random sweeps with shrink-friendly reporting),
+//! plus packed-vs-scalar equivalence properties: the word-parallel host
+//! representation must be bit-identical — outputs *and* [`Stats`] — to
+//! a faithful scalar per-column emulation of the pre-refactor path
+//! issuing the same device-op sequence.
 
 use nandspin::arch::stats::{Phase, Stats};
 use nandspin::device::energy::DeviceCosts;
+use nandspin::subarray::conv::{
+    bitplane_conv_counts, window_sums, BitKernel, ConvGeometry,
+};
 use nandspin::subarray::primitives::{
-    add_columns, compare_columns, multiply_columns, CompareScratch,
+    add_columns, add_result_width, compare_columns, multiply_columns, CompareScratch,
 };
 use nandspin::subarray::Subarray;
 use nandspin::util::Rng;
@@ -122,6 +129,348 @@ fn property_comparison_random_widths() {
                 "case {case} bits={bits} col={col}: a={} b={}",
                 a[col],
                 b[col]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Packed-vs-scalar equivalence: the pre-refactor scalar per-column host
+// path, re-issued op for op, must agree with the packed implementation
+// in outputs AND accumulated Stats.
+// ---------------------------------------------------------------------
+
+/// Faithful scalar emulation of the pre-refactor conv stepper: same
+/// device ops in the same order (buffer loads per period, AND+count per
+/// kernel row, bit-serial drain), but per-column `u32` bookkeeping on
+/// the host. Returns (period, out_row, per-column counts).
+fn scalar_conv_reference(
+    sub: &mut Subarray,
+    base: usize,
+    geo: ConvGeometry,
+    kernel: &BitKernel,
+    stats: &mut Stats,
+) -> Vec<(usize, usize, Vec<u32>)> {
+    let out_h = geo.out_h(kernel.kh);
+    let out_w = geo.out_w(kernel.kw);
+    let mut used = vec![false; kernel.kw];
+    for oc in 0..out_w {
+        used[(oc * geo.stride) % kernel.kw] = true;
+    }
+    let count_bits = 32 - (kernel.kh as u32).leading_zeros();
+    let mut results = Vec::new();
+    for (p, _) in used.iter().enumerate().filter(|(_, &u)| u) {
+        for kr in 0..kernel.kh {
+            sub.buffer_write(kr, kernel.tile_row(kr, p, geo.in_w), stats, Phase::Convolution);
+        }
+        for or in 0..out_h {
+            sub.counters.reset();
+            let r0 = base + or * geo.stride;
+            for kr in 0..kernel.kh {
+                sub.and_count(r0 + kr, kr, stats, Phase::Convolution);
+            }
+            let mut counts = vec![0u32; geo.in_w];
+            for bitpos in 0..count_bits {
+                let lsbs = sub.counter_lsbs_shift(stats, Phase::Convolution);
+                for (j, c) in counts.iter_mut().enumerate() {
+                    *c |= (((lsbs >> j) & 1) as u32) << bitpos;
+                }
+            }
+            results.push((p, or, counts));
+        }
+    }
+    results
+}
+
+#[test]
+fn property_conv_stepper_matches_scalar_reference_bit_and_stats() {
+    let mut rng = Rng::seed_from_u64(0xC077);
+    for case in 0..25 {
+        // Randomized geometry, including the 128-column boundary.
+        let w = [8, 17, 33, 64, 127, 128][rng.gen_usize(0, 6)];
+        let h = rng.gen_usize(3, 24);
+        let kh = rng.gen_usize(1, h.min(8) + 1);
+        let kw = rng.gen_usize(1, w.min(7) + 1);
+        let stride = rng.gen_usize(1, 4);
+        let geo = ConvGeometry { in_h: h, in_w: w, stride };
+        let kernel = BitKernel::new(
+            kh,
+            kw,
+            (0..kh * kw).map(|_| rng.gen_bool()).collect(),
+        );
+        // Two identical subarrays, same stored bit-plane.
+        let mut sa = sub();
+        let mut sb = sub();
+        let mut st_load = Stats::default();
+        for r in 0..h {
+            let word = ((rng.next_u64() as u128) << 64 | rng.next_u64() as u128)
+                & if w == 128 { u128::MAX } else { (1u128 << w) - 1 };
+            sa.write_row(r, word, &mut st_load, Phase::LoadData);
+            sb.write_row(r, word, &mut st_load, Phase::LoadData);
+        }
+        let mut st_packed = Stats::default();
+        let mut st_scalar = Stats::default();
+        let packed =
+            bitplane_conv_counts(&mut sa, 0, geo, &kernel, &mut st_packed, Phase::Convolution);
+        let scalar = scalar_conv_reference(&mut sb, 0, geo, &kernel, &mut st_scalar);
+        assert_eq!(
+            st_packed, st_scalar,
+            "case {case}: device-op stream diverged ({h}x{w} k{kh}x{kw} s{stride})"
+        );
+        assert_eq!(packed.len(), scalar.len(), "case {case}");
+        for (pc, (p, or, counts)) in packed.iter().zip(&scalar) {
+            assert_eq!((pc.period, pc.out_row), (*p, *or), "case {case}");
+            assert_eq!(&pc.counts(), counts, "case {case} p={p} or={or}");
+        }
+        // The window fold agrees with the scalar fold of scalar counts.
+        let out_w = geo.out_w(kw);
+        let out_h = geo.out_h(kh);
+        let mut expect = vec![vec![0u32; out_w]; out_h];
+        for (p, or, counts) in &scalar {
+            for oc in 0..out_w {
+                let c0 = oc * stride;
+                if c0 % kw != *p {
+                    continue;
+                }
+                expect[*or][oc] = (0..kw).map(|kc| counts[c0 + kc]).sum();
+            }
+        }
+        assert_eq!(window_sums(&packed, geo, &kernel), expect, "case {case}");
+    }
+}
+
+/// Scalar emulation of the pre-refactor addition: identical op stream,
+/// per-column `u32` counters on the host, each drained LSB word
+/// cross-checked against the packed counter bank's.
+fn scalar_add_reference(
+    sub: &mut Subarray,
+    operand_bases: &[usize],
+    bits: usize,
+    result_base: usize,
+    cols: usize,
+    stats: &mut Stats,
+) -> usize {
+    sub.counters.reset();
+    assert_eq!(result_base % 8, 0);
+    let width = add_result_width(operand_bases.len(), bits);
+    let first = result_base / 8;
+    for s in first..first + width.div_ceil(8) {
+        sub.erase_strip(s, stats, Phase::Pooling);
+    }
+    let mut scalar = vec![0u32; cols];
+    let mut written = 0;
+    fn drain(sub: &mut Subarray, scalar: &mut [u32], stats: &mut Stats) -> u128 {
+        let mut expect = 0u128;
+        for (col, c) in scalar.iter_mut().enumerate() {
+            expect |= ((*c & 1) as u128) << col;
+            *c >>= 1;
+        }
+        let lsb = sub.counter_lsbs_shift(stats, Phase::Pooling);
+        assert_eq!(lsb, expect, "packed counter bank diverged from scalar counters");
+        lsb
+    }
+    for b in 0..bits {
+        for &base in operand_bases {
+            let row = sub.peek_row(base + b);
+            for (col, c) in scalar.iter_mut().enumerate() {
+                *c += ((row >> col) & 1) as u32;
+            }
+            sub.read_count(base + b, stats, Phase::Pooling);
+        }
+        let lsb = drain(sub, &mut scalar, stats);
+        let row = result_base + written;
+        sub.program_row(row / 8, row % 8, lsb, stats, Phase::Pooling);
+        written += 1;
+    }
+    while scalar.iter().any(|&c| c != 0) {
+        let lsb = drain(sub, &mut scalar, stats);
+        let row = result_base + written;
+        sub.program_row(row / 8, row % 8, lsb, stats, Phase::Pooling);
+        written += 1;
+    }
+    assert!(sub.counters.is_zero(), "bank must drain exactly when scalar drains");
+    written
+}
+
+#[test]
+fn property_addition_matches_scalar_reference_bit_and_stats() {
+    // Randomized widths (incl. the 128-column boundary and narrow
+    // subarrays) and non-strip-aligned operand bases.
+    let mut rng = Rng::seed_from_u64(0xADD2);
+    for case in 0..20 {
+        let cols = [8, 23, 64, 127, 128][rng.gen_usize(0, 5)];
+        let k = rng.gen_usize(2, 7);
+        let bits = rng.gen_usize(1, 8);
+        // Operands packed back to back from a random, possibly
+        // non-strip-aligned starting row.
+        let start = rng.gen_usize(0, 5);
+        let bases: Vec<usize> = (0..k).map(|i| start + i * bits).collect();
+        let result_base = ((start + k * bits).div_ceil(8) + 1) * 8;
+
+        let mut sa = Subarray::new(256, cols, 16, DeviceCosts::default());
+        let mut sb = Subarray::new(256, cols, 16, DeviceCosts::default());
+        let mut st_load = Stats::default();
+        let mut operands: Vec<Vec<u32>> = Vec::new();
+        for &base in &bases {
+            let vals: Vec<u32> =
+                (0..cols).map(|_| rng.gen_range_inclusive((1u32 << bits) - 1)).collect();
+            for b in 0..bits {
+                let mut row = 0u128;
+                for (col, &v) in vals.iter().enumerate() {
+                    row |= (((v >> b) & 1) as u128) << col;
+                }
+                sa.write_row(base + b, row, &mut st_load, Phase::LoadData);
+                sb.write_row(base + b, row, &mut st_load, Phase::LoadData);
+            }
+            operands.push(vals);
+        }
+
+        let mut st_packed = Stats::default();
+        let mut st_scalar = Stats::default();
+        let w_packed =
+            add_columns(&mut sa, &bases, bits, result_base, &mut st_packed, Phase::Pooling);
+        let w_scalar =
+            scalar_add_reference(&mut sb, &bases, bits, result_base, cols, &mut st_scalar);
+        assert_eq!(w_packed, w_scalar, "case {case}");
+        assert_eq!(st_packed, st_scalar, "case {case}: Stats diverged");
+        // Same rows programmed, same sums read back.
+        for b in 0..w_packed {
+            assert_eq!(
+                sa.peek_row(result_base + b),
+                sb.peek_row(result_base + b),
+                "case {case} row {b}"
+            );
+        }
+        let sums = load_vertical(&sa, result_base, w_packed, cols);
+        for col in 0..cols {
+            let expect: u64 = operands.iter().map(|o| o[col] as u64).sum();
+            assert_eq!(sums[col], expect, "case {case} col {col}");
+        }
+    }
+}
+
+/// Scalar emulation of the pre-refactor multiplication inner loop:
+/// identical op stream, per-column scalar counters.
+fn scalar_multiply_reference(
+    sub: &mut Subarray,
+    a_base: usize,
+    a_bits: usize,
+    b_buf_rows: &[usize],
+    result_base: usize,
+    cols: usize,
+    stats: &mut Stats,
+) -> usize {
+    let b_bits = b_buf_rows.len();
+    sub.counters.reset();
+    assert_eq!(result_base % 8, 0);
+    let width = a_bits + b_bits + 1;
+    for s in result_base / 8..result_base / 8 + width.div_ceil(8) {
+        sub.erase_strip(s, stats, Phase::BatchNorm);
+    }
+    let mut scalar = vec![0u32; cols];
+    let mut written = 0;
+    for p in 0..a_bits + b_bits {
+        for i in 0..a_bits {
+            let Some(j) = p.checked_sub(i) else { continue };
+            if j >= b_bits {
+                continue;
+            }
+            let partial = sub.peek_row(a_base + i) & sub.buffer.read(b_buf_rows[j]);
+            for (col, c) in scalar.iter_mut().enumerate() {
+                *c += ((partial >> col) & 1) as u32;
+            }
+            sub.and_count(a_base + i, b_buf_rows[j], stats, Phase::BatchNorm);
+        }
+        let mut expect = 0u128;
+        for (col, c) in scalar.iter_mut().enumerate() {
+            expect |= ((*c & 1) as u128) << col;
+            *c >>= 1;
+        }
+        let lsb = sub.counter_lsbs_shift(stats, Phase::BatchNorm);
+        assert_eq!(lsb, expect, "packed bank diverged in multiply");
+        let row = result_base + written;
+        sub.program_row(row / 8, row % 8, lsb, stats, Phase::BatchNorm);
+        written += 1;
+    }
+    while scalar.iter().any(|&c| c != 0) {
+        let mut expect = 0u128;
+        for (col, c) in scalar.iter_mut().enumerate() {
+            expect |= ((*c & 1) as u128) << col;
+            *c >>= 1;
+        }
+        let lsb = sub.counter_lsbs_shift(stats, Phase::BatchNorm);
+        assert_eq!(lsb, expect);
+        let row = result_base + written;
+        sub.program_row(row / 8, row % 8, lsb, stats, Phase::BatchNorm);
+        written += 1;
+    }
+    assert!(sub.counters.is_zero());
+    written
+}
+
+#[test]
+fn property_multiplication_matches_scalar_reference_bit_and_stats() {
+    let mut rng = Rng::seed_from_u64(0x3012);
+    for case in 0..15 {
+        let cols = [16, 64, 128][rng.gen_usize(0, 3)];
+        let abits = rng.gen_usize(1, 7);
+        let bbits = rng.gen_usize(1, 7);
+        // Non-strip-aligned A operand.
+        let a_base = rng.gen_usize(0, 6);
+        let result_base = ((a_base + abits).div_ceil(8) + 1) * 8;
+        let mut sa = Subarray::new(256, cols, 16, DeviceCosts::default());
+        let mut sb = Subarray::new(256, cols, 16, DeviceCosts::default());
+        let mut st_load = Stats::default();
+        let a: Vec<u32> =
+            (0..cols).map(|_| rng.gen_range_inclusive((1u32 << abits) - 1)).collect();
+        for b in 0..abits {
+            let mut row = 0u128;
+            for (col, &v) in a.iter().enumerate() {
+                row |= (((v >> b) & 1) as u128) << col;
+            }
+            sa.write_row(a_base + b, row, &mut st_load, Phase::LoadData);
+            sb.write_row(a_base + b, row, &mut st_load, Phase::LoadData);
+        }
+        let bvals: Vec<u32> =
+            (0..cols).map(|_| rng.gen_range_inclusive((1u32 << bbits) - 1)).collect();
+        let mut buf_rows = Vec::new();
+        for j in 0..bbits {
+            let mut word = 0u128;
+            for (col, &v) in bvals.iter().enumerate() {
+                word |= (((v >> j) & 1) as u128) << col;
+            }
+            sa.buffer_write(j, word, &mut st_load, Phase::LoadData);
+            sb.buffer_write(j, word, &mut st_load, Phase::LoadData);
+            buf_rows.push(j);
+        }
+        let mut st_packed = Stats::default();
+        let mut st_scalar = Stats::default();
+        let w_packed = multiply_columns(
+            &mut sa,
+            a_base,
+            abits,
+            &buf_rows,
+            result_base,
+            &mut st_packed,
+            Phase::BatchNorm,
+        );
+        let w_scalar = scalar_multiply_reference(
+            &mut sb,
+            a_base,
+            abits,
+            &buf_rows,
+            result_base,
+            cols,
+            &mut st_scalar,
+        );
+        assert_eq!(w_packed, w_scalar, "case {case}");
+        assert_eq!(st_packed, st_scalar, "case {case}: Stats diverged");
+        let prods = load_vertical(&sa, result_base, w_packed, cols);
+        for col in 0..cols {
+            assert_eq!(
+                prods[col],
+                a[col] as u64 * bvals[col] as u64,
+                "case {case} col {col}"
             );
         }
     }

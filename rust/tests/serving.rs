@@ -9,6 +9,8 @@ use nandspin::arch::config::ArchConfig;
 use nandspin::cnn::network::{alexnet, micro_cnn, small_cnn, Network};
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::engine::{EngineFactory, EngineKind};
+use nandspin::coordinator::serve::pool::{execute_with_workers, PlannedBatch};
 use nandspin::coordinator::serve::{serve, EngineMode, FlushCause, Request, ServeConfig};
 
 fn requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
@@ -277,6 +279,96 @@ fn analytic_engine_serves_full_size_alexnet() {
     // AlexNet ⟨8:8⟩ per-request latency is macroscopic (microseconds at
     // the very least) — well beyond the tiny functional nets.
     assert!(report.completions.iter().all(|c| c.stats.total_latency_ms() > 1e-3));
+}
+
+/// Plan a single-chip stream of `reqs` split into `per_batch`-sized
+/// batches, all flushed at t=0 (metadata only — execution is the thing
+/// under test).
+fn plan_single_chip(reqs: Vec<Request>, per_batch: usize) -> Vec<PlannedBatch> {
+    let mut planned = Vec::new();
+    let mut seq = 0usize;
+    let mut reqs = reqs.into_iter().peekable();
+    while reqs.peek().is_some() {
+        let batch: Vec<Request> = reqs.by_ref().take(per_batch).collect();
+        let arrivals = vec![0.0; batch.len()];
+        planned.push(PlannedBatch {
+            seq,
+            chip: 0,
+            cause: FlushCause::Size,
+            flush_ns: 0.0,
+            requests: batch,
+            arrivals_ns: arrivals,
+        });
+        seq += 1;
+    }
+    planned
+}
+
+#[test]
+fn intra_chip_worker_split_is_bit_identical_to_sequential() {
+    // The whole point of the worker split: same simulated results, only
+    // host wall time changes. Compare the full ChipResult contents for
+    // 1 worker (sequential) vs several.
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 77);
+    let factory = EngineFactory::new(ArchConfig::paper(), EngineKind::Functional);
+    let run = |workers: usize| {
+        execute_with_workers(
+            &factory,
+            &net,
+            Some(&params),
+            1,
+            plan_single_chip(requests(&net, 9, 900), 4),
+            Some(workers),
+        )
+    };
+    let sequential = run(1);
+    for &w in &[2usize, 3, 8] {
+        let parallel = run(w);
+        assert_eq!(parallel.len(), sequential.len());
+        for (p, s) in parallel.iter().zip(&sequential) {
+            assert_eq!(p.weight_hits, s.weight_hits, "workers={w}");
+            assert_eq!(p.weight_misses, s.weight_misses, "workers={w}");
+            assert_eq!(p.batches.len(), s.batches.len());
+            for (pb, sb) in p.batches.iter().zip(&s.batches) {
+                assert_eq!(pb.seq, sb.seq);
+                assert_eq!(pb.requests.len(), sb.requests.len());
+                for (pr, sr) in pb.requests.iter().zip(&sb.requests) {
+                    assert_eq!(pr.id, sr.id, "workers={w}");
+                    assert_eq!(pr.stats, sr.stats, "workers={w} request {}", pr.id);
+                    assert_eq!(pr.output, sr.output, "workers={w} request {}", pr.id);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_uses_the_worker_split_transparently() {
+    // End-to-end: the public serve() path (auto worker budget) must
+    // produce the same verified report shape as always — outputs
+    // bit-exact, identities holding — whatever the host parallelism.
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 55);
+    let reqs = requests(&net, 12, 700);
+    let images: Vec<QTensor> = reqs.iter().map(|r| r.image.clone()).collect();
+    let scfg = ServeConfig { chips: 1, max_batch: 12, ..ServeConfig::default() };
+    let report = serve(&ArchConfig::paper(), &scfg, &net, Some(&params), reqs);
+    assert_eq!(report.served(), 12);
+    report.verify().expect("identities under the worker split");
+    for c in &report.completions {
+        let golden = ref_exec::execute(&net, &params, &images[c.id as usize]);
+        assert_eq!(
+            c.output.as_ref().expect("functional outputs"),
+            golden.last().unwrap(),
+            "request {}",
+            c.id
+        );
+    }
+    // Sequential residency ledger: one stream, the rest hits.
+    let convs = report.chips[0].weight_misses;
+    assert!(convs > 0);
+    assert_eq!(report.chips[0].weight_hits, convs * 11);
 }
 
 #[test]
