@@ -9,38 +9,42 @@
 //! stream, so the grid doubles as an engine-agreement check at serving
 //! scale.
 //!
+//! Two networks are swept: `small_cnn`, which fits one subarray per
+//! bit-plane (the untiled functional path), and `wide_cnn`, whose
+//! 200-column feature map forces the multi-tile mapping (§4.2, Fig. 9)
+//! — its functional rows measure the tiled path at serving scale.
+//!
 //! Besides the human table, the bench writes `BENCH_serving.json`
-//! (same grid, machine-readable) so the perf trajectory can be tracked
-//! across PRs.
+//! (same grid, machine-readable, one `network` key per row) so the
+//! perf trajectory can be tracked across PRs.
 
 use std::time::Instant;
 
 use nandspin::arch::config::ArchConfig;
-use nandspin::cnn::network::small_cnn;
+use nandspin::cnn::network::{small_cnn, wide_cnn, Network};
 use nandspin::cnn::ref_exec::ModelParams;
 use nandspin::cnn::tensor::QTensor;
 use nandspin::coordinator::serve::{serve, EngineMode, Request, ServeConfig};
 
-fn main() {
-    let t0 = Instant::now();
-    let net = small_cnn(3);
-    let params = ModelParams::random(&net, 3, 5);
-    let n = 16usize;
+/// Serve `n` requests of `net` for every (engine, batch, chips) cell,
+/// printing the human table rows and appending JSON rows to `rows`.
+fn sweep(
+    net: &Network,
+    n: usize,
+    engines: &[EngineMode],
+    batches: &[usize],
+    chip_counts: &[usize],
+    rows: &mut Vec<String>,
+) {
+    let params = ModelParams::random(net, 3, 5);
     let images: Vec<QTensor> = (0..n)
         .map(|i| {
             QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, 40 + i as u64)
         })
         .collect();
-
-    println!("== serving sweep: {} requests of {} (closed burst) ==", n, net.name);
-    println!(
-        "{:>10} {:>6} {:>6} {:>10} {:>12} {:>12} {:>12} {:>10}",
-        "engine", "batch", "chips", "FPS", "mean (µs)", "p95 (µs)", "mJ/req", "wt hit%"
-    );
-    let mut rows: Vec<String> = Vec::new();
-    for &engine in &[EngineMode::Functional, EngineMode::Analytic] {
-        for &batch in &[1usize, 4, 16] {
-            for &chips in &[1usize, 2, 4] {
+    for &engine in engines {
+        for &batch in batches {
+            for &chips in chip_counts {
                 let scfg = ServeConfig {
                     chips,
                     max_batch: batch,
@@ -48,7 +52,7 @@ fn main() {
                     ..ServeConfig::default()
                 };
                 let requests: Vec<Request> = Request::stream(images.clone());
-                let report = serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests);
+                let report = serve(&ArchConfig::paper(), &scfg, net, Some(&params), requests);
                 report.verify().expect("aggregation identities");
                 assert_eq!(report.served(), n);
                 let (hits, misses) = report
@@ -60,7 +64,8 @@ fn main() {
                 let p95_us = report.p95_latency_ms() * 1e3;
                 let mj_per_req = report.total_energy_mj() / n as f64;
                 println!(
-                    "{:>10} {:>6} {:>6} {:>10.1} {:>12.2} {:>12.2} {:>12.4} {:>9.1}%",
+                    "{:>10} {:>10} {:>6} {:>6} {:>10.1} {:>12.2} {:>12.2} {:>12.4} {:>9.1}%",
+                    net.name,
                     engine.label(),
                     batch,
                     chips,
@@ -71,10 +76,11 @@ fn main() {
                     100.0 * hit_rate
                 );
                 rows.push(format!(
-                    "    {{\"engine\": \"{}\", \"batch\": {}, \"chips\": {}, \
-                     \"sim_fps\": {:.3}, \"mean_latency_us\": {:.3}, \
+                    "    {{\"network\": \"{}\", \"engine\": \"{}\", \"batch\": {}, \
+                     \"chips\": {}, \"sim_fps\": {:.3}, \"mean_latency_us\": {:.3}, \
                      \"p95_latency_us\": {:.3}, \"mj_per_request\": {:.6}, \
                      \"weight_hit_rate\": {:.4}, \"wall_s\": {:.4}}}",
+                    net.name,
                     engine.label(),
                     batch,
                     chips,
@@ -88,6 +94,32 @@ fn main() {
             }
         }
     }
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let net = small_cnn(3);
+    let wide = wide_cnn(3);
+    let n = 16usize;
+
+    println!("== serving sweep: {n} requests per cell (closed burst) ==");
+    println!(
+        "{:>10} {:>10} {:>6} {:>6} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "network", "engine", "batch", "chips", "FPS", "mean (µs)", "p95 (µs)", "mJ/req", "wt hit%"
+    );
+    let mut rows: Vec<String> = Vec::new();
+    sweep(
+        &net,
+        n,
+        &[EngineMode::Functional, EngineMode::Analytic],
+        &[1, 4, 16],
+        &[1, 2, 4],
+        &mut rows,
+    );
+    // The tiled-functional cells: wide_cnn splits into two width tiles
+    // with a 2-column halo on the paper's 256x128 subarray, so these
+    // rows track the multi-tile path's serving cost across PRs.
+    sweep(&wide, n, &[EngineMode::Functional], &[1, 4], &[1, 2], &mut rows);
 
     let json = format!(
         "{{\n  \"bench\": \"serving\",\n  \"network\": \"{}\",\n  \"requests\": {},\n  \

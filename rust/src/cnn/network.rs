@@ -343,10 +343,24 @@ pub fn micro_cnn(bits: u8) -> Network {
     Network { name: "MicroCNN".into(), input: (1, 4, 6), input_bits: bits, nodes: b.nodes }
 }
 
+/// Wide single-conv network whose 200-column feature map exceeds one
+/// 128-column subarray: the cheapest preset that genuinely exercises
+/// the multi-tile mapping (§4.2, Fig. 9) at the real subarray capacity
+/// — two width tiles with a `kw − stride = 2`-column halo. Used by the
+/// serving bench for tiled-functional rows and handy for quick
+/// multi-tile smoke runs.
+pub fn wide_cnn(bits: u8) -> Network {
+    let mut b = Builder::new();
+    b.push(Layer::Conv { out_c: 4, kh: 3, kw: 3, stride: 1, pad: 0 });
+    b.push(Layer::Relu);
+    b.push(Layer::Quantize { bits });
+    Network { name: "WideCNN".into(), input: (1, 16, 200), input_bits: bits, nodes: b.nodes }
+}
+
 /// Names accepted by [`preset`]: the paper's three full-size benchmarks
 /// first, then the small functional-mode networks.
-pub const PRESET_NAMES: [&str; 6] =
-    ["alexnet", "vgg19", "resnet50", "small", "small_resnet", "micro"];
+pub const PRESET_NAMES: [&str; 7] =
+    ["alexnet", "vgg19", "resnet50", "small", "small_resnet", "micro", "wide"];
 
 /// Look up a benchmark / functional-mode network preset by CLI name.
 /// `bits` sets the activation precision (and the default weight
@@ -360,6 +374,7 @@ pub fn preset(name: &str, bits: u8) -> Option<Network> {
         "small" | "small_cnn" => Some(small_cnn(bits)),
         "small_resnet" => Some(small_resnet(bits)),
         "micro" | "micro_cnn" => Some(micro_cnn(bits)),
+        "wide" | "wide_cnn" => Some(wide_cnn(bits)),
         _ => None,
     }
 }
@@ -443,6 +458,16 @@ mod tests {
             assert!(w <= 128, "width {w} exceeds subarray columns");
             assert!(c <= 16);
         }
+    }
+
+    #[test]
+    fn wide_cnn_exceeds_subarray_width() {
+        // The whole point of the preset: its input row is wider than the
+        // paper subarray's 128 columns, forcing the multi-tile mapping.
+        let n = wide_cnn(3);
+        assert!(n.input.2 > 128, "WideCNN must not fit one subarray");
+        let (_, oh, ow) = n.shapes()[1];
+        assert_eq!((oh, ow), (14, 198));
     }
 
     #[test]

@@ -152,7 +152,7 @@ impl AnalyticModel {
         let (_, oh, ow) = out_shape;
         let (n, m) = (ibits as usize, wbits as usize);
         let split = PoolSplit::of(cfg);
-        let map = ConvMapping::plan(cfg, in_shape, out_c, kw, stride, ibits, split.compute);
+        let map = ConvMapping::plan(cfg, in_shape, out_c, kh, kw, stride, ibits, split.compute);
         let mut st = Stats::default();
 
         // ---- channel stacking: multiple input-channel planes share one

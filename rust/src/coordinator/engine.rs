@@ -131,38 +131,111 @@ pub trait InferenceEngine: Send {
     ) -> Execution;
 }
 
-/// Why `net` cannot run on the functional engine, if it cannot: the
-/// bit-accurate path stores each feature-map row in one subarray row,
-/// so every (padded) feature map must fit the subarray width.
+/// Bit width of a non-negative value (engine-local copy of the
+/// functional coordinator's helper).
+fn bit_width(v: i64) -> usize {
+    debug_assert!(v >= 0);
+    (64 - (v as u64).leading_zeros()).max(1) as usize
+}
+
+/// Why `net` cannot run on the functional engine, if it cannot.
+///
+/// Oversized feature maps are no longer a limit — the multi-tile
+/// mapping ([`crate::mapping::TilePlan`]) shards them across subarrays
+/// with halo exchange. What remains are genuine per-window and
+/// per-layout capacity limits: a conv window must fit inside a single
+/// subarray (and its weight buffer), the cross-writing accumulator must
+/// keep at least two operand slots at the layer's worst-case precision,
+/// and pooling's in-array row layout must fit the subarray height.
+///
+/// Unlike the old first-failure string, *every* violating layer is
+/// reported, each naming the node, the layer, and the required vs.
+/// available resource.
 fn functional_limit(cfg: &ArchConfig, net: &Network) -> Option<String> {
-    let (_, _, in_w) = net.input;
-    if in_w > cfg.cols {
-        return Some(format!(
-            "input width {in_w} exceeds the {}-column subarray",
-            cfg.cols
-        ));
-    }
+    let mut problems: Vec<String> = Vec::new();
+    // `FunctionalEngine::take_subarray` floors the weight buffer at 16
+    // rows; keep the two in sync.
+    let buffer_rows = cfg.buffer_rows.max(16);
     let shapes = net.shapes();
+    // Conservative activation-width estimate, tracked through the graph
+    // (weights assumed 8-bit — the widest `ModelParams` precision).
+    let mut bits = net.input_bits as usize;
     for (i, node) in net.nodes.iter().enumerate() {
         let in_shape = match node.input {
             Some(j) => shapes[j],
             None if i == 0 => net.input,
             None => shapes[i - 1],
         };
-        let (_, _, mut w) = in_shape;
-        if let Layer::Conv { pad, .. } = node.layer {
-            w += 2 * pad;
-        }
-        let (_, _, ow) = shapes[i];
-        if w > cfg.cols || ow > cfg.cols {
-            return Some(format!(
-                "node {i} feature map ({} cols) exceeds the {}-column subarray",
-                w.max(ow),
-                cfg.cols
-            ));
+        let (in_c, _, _) = in_shape;
+        let name = node.layer.mnemonic();
+        match node.layer {
+            Layer::Conv { kh, kw, .. } => {
+                if kw > cfg.cols {
+                    problems.push(format!(
+                        "node {i} ({name}): {kh}x{kw} window needs {kw} columns, \
+                         subarray has {}",
+                        cfg.cols
+                    ));
+                }
+                if kh > cfg.rows {
+                    problems.push(format!(
+                        "node {i} ({name}): {kh}x{kw} window needs {kh} rows, \
+                         subarray has {}",
+                        cfg.rows
+                    ));
+                }
+                if kh > buffer_rows {
+                    problems.push(format!(
+                        "node {i} ({name}): {kh}x{kw} window needs {kh} weight-buffer rows, \
+                         buffer has {buffer_rows}"
+                    ));
+                }
+                // Accumulator precision bound at 8-bit weights.
+                let bound = (((1i64 << bits.min(32)) - 1) * 255)
+                    .saturating_mul((in_c * kh * kw) as i64);
+                let acc_bits = bit_width(bound).max(24);
+                if (cfg.rows / acc_bits).saturating_sub(2) < 2 {
+                    problems.push(format!(
+                        "node {i} ({name}): {acc_bits}-bit accumulation needs {} rows \
+                         for 2 operand slots, subarray has {}",
+                        4 * acc_bits,
+                        cfg.rows
+                    ));
+                }
+                bits = acc_bits;
+            }
+            Layer::MaxPool { .. } => {
+                let need = (2 * bits.max(1)).div_ceil(8) * 8 + 2;
+                if need > cfg.rows {
+                    problems.push(format!(
+                        "node {i} ({name}): comparison layout at {bits}-bit activations \
+                         needs {need} rows, subarray has {}",
+                        cfg.rows
+                    ));
+                }
+            }
+            Layer::AvgPool { k, .. } => {
+                let b = bits.max(1);
+                let sum_base = ((k * k * b).div_ceil(8) + 1) * 8;
+                let need = sum_base + b + bit_width((k * k) as i64);
+                if need > cfg.rows {
+                    problems.push(format!(
+                        "node {i} ({name}): {k}x{k} window sum at {b}-bit activations \
+                         needs {need} rows, subarray has {}",
+                        cfg.rows
+                    ));
+                }
+            }
+            Layer::Quantize { bits: qb } => bits = qb as usize,
+            Layer::Residual { .. } => bits += 1,
+            Layer::BatchNorm | Layer::Relu => {}
         }
     }
-    None
+    if problems.is_empty() {
+        None
+    } else {
+        Some(problems.join("; "))
+    }
 }
 
 impl InferenceEngine for FunctionalEngine {
@@ -432,20 +505,55 @@ mod tests {
     }
 
     #[test]
-    fn functional_plan_flags_wide_networks() {
+    fn functional_plan_accepts_full_size_networks_via_tiling() {
         let factory = EngineFactory::new(ArchConfig::paper(), EngineKind::Functional);
         let small = factory.plan(&small_cnn(3));
         assert!(small.supported, "{:?}", small.unsupported_reason);
         assert_eq!(small.fidelity, Fidelity::BitAccurate);
-        let big = factory.plan(&alexnet(8));
-        assert!(!big.supported);
-        assert!(big.unsupported_reason.is_some());
+        // The multi-tile mapping makes the full-size benchmarks
+        // runnable bit-accurately: wide feature maps are sharded, not
+        // rejected.
+        for net in [alexnet(8), crate::cnn::network::vgg19(8)] {
+            let plan = factory.plan(&net);
+            assert!(plan.supported, "{}: {:?}", net.name, plan.unsupported_reason);
+        }
         // The analytic engine takes anything.
         let analytic = EngineFactory::new(ArchConfig::paper(), EngineKind::Analytic);
         let plan = analytic.plan(&alexnet(8));
         assert!(plan.supported);
         assert_eq!(plan.fidelity, Fidelity::Synthesized);
         assert!(plan.total_macs > 0);
+    }
+
+    #[test]
+    fn functional_limit_reports_every_violation_with_resources() {
+        // ResNet50 at 8 bits still cannot run bit-accurately: the 7x7
+        // average-pool's in-array window sum does not fit the subarray
+        // height at 8-bit activations. The report must name the node,
+        // the layer, and required vs. available rows.
+        let factory = EngineFactory::new(ArchConfig::paper(), EngineKind::Functional);
+        let plan = factory.plan(&crate::cnn::network::resnet50(8));
+        assert!(!plan.supported);
+        let reason = plan.unsupported_reason.expect("reason");
+        assert!(reason.contains("avgpool"), "names the layer: {reason}");
+        assert!(reason.contains("rows"), "names the resource: {reason}");
+        // A network with several violations reports all of them, not
+        // just the first: a 20x200 kernel trips both the column limit
+        // and the weight-buffer height at once.
+        let net = Network {
+            name: "giant-kernel".into(),
+            input: (1, 300, 300),
+            input_bits: 3,
+            nodes: vec![crate::cnn::network::Node {
+                layer: Layer::Conv { out_c: 2, kh: 20, kw: 200, stride: 1, pad: 0 },
+                input: None,
+            }],
+        };
+        let plan = factory.plan(&net);
+        let reason = plan.unsupported_reason.expect("reason");
+        assert!(reason.contains("columns"), "{reason}");
+        assert!(reason.contains("weight-buffer"), "{reason}");
+        assert!(reason.matches("node 0").count() >= 2, "all violations listed: {reason}");
     }
 
     #[test]

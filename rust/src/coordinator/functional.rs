@@ -9,8 +9,17 @@
 //! the accumulated [`Stats`] reflect the same op mix the analytic model
 //! counts.
 //!
-//! Scope: feature maps up to the subarray width (≤ 128 columns); the
-//! full-scale networks use the analytic path.
+//! Feature maps wider or taller than one subarray are sharded across
+//! multiple scratch subarrays by the multi-tile mapping of §4.2
+//! ([`TilePlan`]): each tile holds one input slab (its fresh region
+//! plus the halo rows/columns shared with its neighbours, re-sent
+//! through the bank buffer and charged as in-mat transfer), runs the
+//! unchanged bit-plane conv stepper, and the per-tile window sums are
+//! stitched back into full-width partials before accumulation — so the
+//! accumulator op stream, and therefore the outputs, are independent of
+//! the tiling. This is what lets the bit-accurate path run the
+//! full-scale benchmarks (AlexNet, VGG19) instead of only the small
+//! presets.
 
 use crate::arch::config::ArchConfig;
 use crate::arch::stats::{Phase, Stats};
@@ -20,14 +29,17 @@ use crate::cnn::network::Network;
 use crate::cnn::quantize::{BnParams, QuantParams};
 use crate::cnn::ref_exec::{avg_pool_scale, ModelParams, WideTensor};
 use crate::cnn::tensor::QTensor;
+use crate::mapping::{ConvMapping, PoolSplit, TileExtent, TilePlan};
 use crate::subarray::conv::{
-    bitplane_conv_counts_tiled, window_sum_planes, BitKernel, ConvGeometry,
+    bitplane_conv_counts_tiled, window_sum_planes, BitKernel, ConvGeometry, KernelTiling,
 };
 use crate::subarray::primitives::{add_columns, compare_columns, multiply_columns, CompareScratch};
 use crate::subarray::Subarray;
 use crate::util::{pack_columns, unpack_columns};
 
-/// Bits reserved per accumulator operand slot (strip-aligned).
+/// Minimum bits reserved per accumulator operand slot; a conv layer
+/// whose accumulated total needs more precision widens its slots to the
+/// exact bound (see [`FunctionalEngine::conv_layer`]).
 const ACC_BITS: usize = 24;
 
 /// Bit width of a non-negative value.
@@ -39,6 +51,34 @@ fn width_of(v: i64) -> usize {
 /// Largest value in a tensor (≥ 0 datapath).
 fn tensor_width(t: &WideTensor) -> usize {
     width_of(t.data.iter().copied().max().unwrap_or(0))
+}
+
+/// All-ones mask over the low `n` bits (`n ≤ 128`).
+#[inline]
+fn low_mask(n: usize) -> u128 {
+    if n >= 128 {
+        u128::MAX
+    } else {
+        (1u128 << n) - 1
+    }
+}
+
+/// Bit-plane slab of `x`: one `u128` word per slab row, where bit `j`
+/// of word `y` is bit `n` of `x(ic, in_y0 + y, in_x0 + j)` over the
+/// tile's input rectangle. The single-tile case reproduces
+/// [`QTensor::bitplane_rows`] exactly (values are `< 2^ibits` on the
+/// quantized datapath, so selecting bit `n` directly equals quantizing
+/// first).
+fn slab_rows(x: &WideTensor, ic: usize, n: usize, tile: &TileExtent) -> Vec<u128> {
+    let mut rows = Vec::with_capacity(tile.in_h);
+    for y in 0..tile.in_h {
+        let mut word = 0u128;
+        for j in 0..tile.in_w {
+            word |= (((x.at(ic, tile.in_y0 + y, tile.in_x0 + j) >> n) & 1) as u128) << j;
+        }
+        rows.push(word);
+    }
+    rows
 }
 
 /// The functional engine.
@@ -61,6 +101,11 @@ pub struct FunctionalEngine {
     /// out after a cost-free [`Subarray::clear_state`], so steady-state
     /// serving does no per-layer allocation of row storage.
     scratch: Vec<Subarray>,
+    /// Tile-capacity override for conv planning (testing hook): plan
+    /// feature-map tiles as if each scratch subarray had only
+    /// `(rows, cols)` cells. `None` — the default — uses the real
+    /// subarray size.
+    tile_cap: Option<(usize, usize)>,
 }
 
 /// Upper bound on pooled scratch subarrays (a conv layer holds
@@ -79,7 +124,21 @@ impl FunctionalEngine {
             conv_seq: 0,
             resident_net: None,
             scratch: Vec::new(),
+            tile_cap: None,
         }
+    }
+
+    /// Force the conv tile planner to treat each scratch subarray as
+    /// having at most `rows × cols` cells (clamped to the real subarray
+    /// size), so feature maps that would fit one subarray are sharded
+    /// across several tiles anyway. Device ops still execute on
+    /// full-size subarrays and the stitched accumulation is
+    /// tiling-independent, so outputs are bit-identical to the untiled
+    /// run — only the tiling plan (and its documented halo-transfer
+    /// overhead) changes. This is the test hook behind the
+    /// tiled-vs-untiled equivalence properties.
+    pub fn force_tile_capacity(&mut self, rows: usize, cols: usize) {
+        self.tile_cap = Some((rows.clamp(8, self.cfg.rows), cols.clamp(1, self.cfg.cols)));
     }
 
     /// Architecture configuration the engine simulates.
@@ -188,7 +247,6 @@ impl FunctionalEngine {
     /// (identical to [`crate::cnn::ref_exec::execute`]).
     pub fn run(&mut self, net: &Network, params: &ModelParams, input: &QTensor) -> Vec<WideTensor> {
         assert_eq!((input.c, input.h, input.w), net.input);
-        assert!(input.w <= self.cfg.cols, "feature map wider than subarray");
         self.conv_seq = 0;
         if self.residency.is_some() {
             let identity = net.fingerprint();
@@ -306,30 +364,72 @@ impl FunctionalEngine {
             padded = p;
             &padded
         };
-        let xq = x.to_q(ibits as u8);
         let geo = ConvGeometry { in_h: x.h, in_w: x.w, stride };
         let oh = geo.out_h(kh);
         let ow = geo.out_w(kw);
         let mbits = k.bits as usize;
 
-        // --- load every (channel, bit-plane) into its own subarray.
+        // Multi-tile mapping (§4.2, Fig. 9): shard the (padded) feature
+        // map into input slabs of at most one subarray each, with halo
+        // overlap so every output window is computed whole inside one
+        // tile.
+        let (cap_rows, cap_cols) = self.tile_cap.unwrap_or((self.cfg.rows, self.cfg.cols));
+        let plan =
+            TilePlan::new(x.h, x.w, kh, kw, stride, cap_rows, cap_cols).unwrap_or_else(|| {
+                panic!(
+                    "{kh}x{kw} conv window exceeds one {}x{} subarray",
+                    self.cfg.rows, self.cfg.cols
+                )
+            });
+
+        // The analytic model spreads this layer over `active_units()`
+        // subarrays working in parallel; the functional engine executes
+        // the identical op stream serially on a few scratch subarrays.
+        // To keep hybrid spot-checks meaningful, the conv-phase latency
+        // delta of the layer is divided by the mapped parallelism at
+        // the end (energy and op counts are extensive and untouched).
+        let conv_lat_before = self.stats[Phase::Convolution].latency_ns;
+        let split = PoolSplit::of(&self.cfg);
+        let map = ConvMapping::plan(
+            &self.cfg,
+            (x.c, x.h, x.w),
+            k.oc,
+            kh,
+            kw,
+            stride,
+            ibits.min(u8::MAX as usize) as u8,
+            split.compute,
+        );
+
+        // --- load every (tile, channel, bit-plane) slab into its own
+        // subarray: fresh elements arrive over the layer's input path,
+        // halo rows/columns are re-sent through the bank buffer from
+        // slabs already resident (in-mat transfer).
         let phase = if first { Phase::LoadData } else { Phase::DataTransfer };
-        let mut planes: Vec<Vec<Subarray>> = Vec::with_capacity(x.c); // [ic][n]
-        for ic in 0..x.c {
-            let mut per_bit = Vec::with_capacity(ibits);
-            for n in 0..ibits {
-                let rows = xq.bitplane_rows(ic, n as u8);
-                let mut sub = self.take_subarray();
-                self.charge_transfer((x.h * x.w) as u64, phase);
-                // Whole-strip writes (8 rows at a time).
-                for (strip, chunk) in rows.chunks(8).enumerate() {
-                    let mut data = [0u128; 8];
-                    data[..chunk.len()].copy_from_slice(chunk);
-                    sub.write_strip(strip, &data, &mut self.stats, phase);
+        let mut planes: Vec<Vec<Vec<Subarray>>> = Vec::with_capacity(plan.count()); // [t][ic][n]
+        for tile in &plan.tiles {
+            let (fresh, halo) = (tile.fresh_elems() as u64, tile.halo_elems() as u64);
+            let mut per_ch = Vec::with_capacity(x.c);
+            for ic in 0..x.c {
+                let mut per_bit = Vec::with_capacity(ibits);
+                for n in 0..ibits {
+                    let rows = slab_rows(x, ic, n, tile);
+                    let mut sub = self.take_subarray();
+                    self.charge_transfer(fresh, phase);
+                    if halo > 0 {
+                        self.charge_transfer(halo, Phase::DataTransfer);
+                    }
+                    // Whole-strip writes (8 rows at a time).
+                    for (strip, chunk) in rows.chunks(8).enumerate() {
+                        let mut data = [0u128; 8];
+                        data[..chunk.len()].copy_from_slice(chunk);
+                        sub.write_strip(strip, &data, &mut self.stats, phase);
+                    }
+                    per_bit.push(sub);
                 }
-                per_bit.push(sub);
+                per_ch.push(per_bit);
             }
-            planes.push(per_bit);
+            planes.push(per_ch);
         }
 
         // --- weights arrive over the global bus once per layer; a
@@ -346,60 +446,131 @@ impl FunctionalEngine {
         }
 
         let mut y = WideTensor::zeros(k.oc, oh, ow);
-        // One accumulation subarray per output row, reused across filters.
-        let mut acc = ColumnAccumulator::new(self.take_subarray(), ow);
+        // Output columns are accumulated in groups of one subarray
+        // width. Grouping always follows the *real* subarray (never the
+        // tile-capacity override), so the accumulator op stream — and
+        // with it every output — is independent of the tiling plan.
+        let group_w = self.cfg.cols;
+        let groups = ow.div_ceil(group_w).max(1);
+        // Accumulator slot precision: the layer's accumulated total is
+        // bounded by (2^n−1)(2^m−1)·in_c·kh·kw; slots widen beyond the
+        // 24-bit default when a full-size layer needs it (AlexNet's FC6
+        // at 8 bits reaches 30 bits — the fixed-width fold would
+        // silently truncate).
+        let bound = (((1i64 << ibits.min(32)) - 1) * ((1i64 << mbits.min(16)) - 1))
+            .saturating_mul((x.c * kh * kw) as i64);
+        let acc_bits = width_of(bound).max(ACC_BITS);
+        // One accumulation subarray per (output row, column group),
+        // reused across filters.
+        let mut acc = ColumnAccumulator::new(self.take_subarray(), ow.min(group_w), acc_bits);
 
         let count_bits = width_of((kh * kw) as i64) as u64;
+        // Window-sum plane count of every pass: the drain width
+        // ⌈log2(kh+1)⌉ plus fold headroom ⌈log2(kw+1)⌉ (matches
+        // `window_sum_planes`).
+        let drain_bits = (32 - (kh as u32).leading_zeros()) as usize;
+        let nplanes = drain_bits + (usize::BITS - kw.leading_zeros()) as usize;
+        let tile_geos: Vec<ConvGeometry> = plan
+            .tiles
+            .iter()
+            .map(|t| ConvGeometry { in_h: t.in_h, in_w: t.in_w, stride })
+            .collect();
+
         for oc in 0..k.oc {
             // One bit-plane convolution pass per (weight-plane, channel,
-            // input-plane); the per-row partials feed the accumulators.
-            // Partials are kept bit-sliced end to end: `sums[or]` is the
-            // packed window-sum planes of output row `or`, programmed
-            // into the accumulator one word per row.
-            let mut partials: Vec<(usize, Vec<Vec<u128>>)> =
+            // input-plane) per tile; each tile's window sums are
+            // stitched into full-output-width planes, so the partials
+            // pushed into the accumulator are identical to an untiled
+            // run. `stitched[or][g]` is the packed window-sum planes of
+            // output row `or`, column group `g`.
+            let mut partials: Vec<(usize, Vec<Vec<Vec<u128>>>)> =
                 Vec::with_capacity(mbits * x.c * ibits);
             for m in 0..mbits {
                 for ic in 0..x.c {
                     let kernel = BitKernel::new(kh, kw, k.bitplane(oc, ic, m as u8));
-                    // One tiling per kernel bit-plane, shared across
-                    // every input bit-plane `n`.
-                    let tiling = kernel.tilings(geo.in_w);
+                    // One tiling per distinct slab width (grid column),
+                    // shared across every input bit-plane `n` and every
+                    // row of tiles.
+                    let col_tilings: Vec<KernelTiling> = (0..plan.tiles_w)
+                        .map(|tw| kernel.tilings(plan.tiles[tw].in_w))
+                        .collect();
                     for n in 0..ibits {
-                        let sub = &mut planes[ic][n];
-                        let counts = bitplane_conv_counts_tiled(
-                            sub,
-                            0,
-                            geo,
-                            &tiling,
-                            &mut self.stats,
-                            Phase::Convolution,
-                        );
-                        let sums = window_sum_planes(&counts, geo, kh, kw);
-                        // In-mat transfer of the drained counts to the
-                        // accumulation subarray.
-                        self.charge_transfer((oh * ow) as u64 * count_bits, Phase::DataTransfer);
-                        partials.push((n + m, sums));
+                        let mut stitched = vec![vec![vec![0u128; nplanes]; groups]; oh];
+                        for (t, tile) in plan.tiles.iter().enumerate() {
+                            let sub = &mut planes[t][ic][n];
+                            let counts = bitplane_conv_counts_tiled(
+                                sub,
+                                0,
+                                tile_geos[t],
+                                &col_tilings[t % plan.tiles_w],
+                                &mut self.stats,
+                                Phase::Convolution,
+                            );
+                            let sums = window_sum_planes(&counts, tile_geos[t], kh, kw);
+                            // In-mat transfer of the drained counts to
+                            // the accumulation subarray (the tile's
+                            // owned share of the output).
+                            self.charge_transfer(
+                                (tile.out_h * tile.out_w) as u64 * count_bits,
+                                Phase::DataTransfer,
+                            );
+                            // Stitch: keep only the windows this tile
+                            // owns (slab extension computes a few extra
+                            // columns/rows owned by neighbours) and
+                            // place them at their global output column.
+                            let owned = low_mask(tile.out_w);
+                            for ry in 0..tile.out_h {
+                                let dst = &mut stitched[tile.out_y0 + ry];
+                                for (p, &word) in sums[ry].iter().enumerate() {
+                                    let w = word & owned;
+                                    if w == 0 {
+                                        continue;
+                                    }
+                                    let mut j = 0;
+                                    while j < tile.out_w {
+                                        let gc = tile.out_x0 + j;
+                                        let (g, off) = (gc / group_w, gc % group_w);
+                                        let take = (group_w - off).min(tile.out_w - j);
+                                        dst[g][p] |= ((w >> j) & low_mask(take)) << off;
+                                        j += take;
+                                    }
+                                }
+                            }
+                        }
+                        partials.push((n + m, stitched));
                     }
                 }
             }
             for or in 0..oh {
-                acc.reset(&mut self.stats);
-                for (shift, sums) in &partials {
-                    acc.push_planes(&sums[or], *shift, &mut self.stats);
-                }
-                let row_vals = acc.finish(&mut self.stats);
-                for ocx in 0..ow {
-                    *y.at_mut(oc, or, ocx) = row_vals[ocx] as i64;
+                for g in 0..groups {
+                    acc.reset(&mut self.stats);
+                    for (shift, sums) in &partials {
+                        acc.push_planes(&sums[or][g], *shift, &mut self.stats);
+                    }
+                    let row_vals = acc.finish(&mut self.stats);
+                    let gw = group_w.min(ow - g * group_w);
+                    for ocx in 0..gw {
+                        *y.at_mut(oc, or, g * group_w + ocx) = row_vals[ocx] as i64;
+                    }
                 }
             }
         }
         // Hand every subarray back to the scratch pool.
-        for per_bit in planes {
-            for sub in per_bit {
-                self.recycle_subarray(sub);
+        for per_ch in planes {
+            for per_bit in per_ch {
+                for sub in per_bit {
+                    self.recycle_subarray(sub);
+                }
             }
         }
         self.recycle_subarray(acc.into_subarray());
+
+        // Spot-check parity with the analytic mapping (see above):
+        // divide this layer's conv-phase latency by its parallelism.
+        let units = map.active_units().max(1) as f64;
+        let conv_lat_after = self.stats[Phase::Convolution].latency_ns;
+        self.stats[Phase::Convolution].latency_ns =
+            conv_lat_before + (conv_lat_after - conv_lat_before) / units;
         y
     }
 
@@ -674,12 +845,19 @@ struct ColumnAccumulator {
     cols: usize,
     used: usize,
     slots: usize,
+    /// Bits per operand slot (≥ [`ACC_BITS`]; widened per layer so the
+    /// fold never truncates the accumulated total).
+    acc_bits: usize,
 }
 
 impl ColumnAccumulator {
-    fn new(sub: Subarray, cols: usize) -> Self {
-        let slots = sub.num_rows() / ACC_BITS - 2; // leave room for result
-        Self { sub, cols, used: 0, slots }
+    fn new(sub: Subarray, cols: usize, acc_bits: usize) -> Self {
+        let acc_bits = acc_bits.max(ACC_BITS);
+        // Leave room for the fold result; cap the operand count so the
+        // fold's carry headroom (6 bits) is never exceeded.
+        let slots = (sub.num_rows() / acc_bits).saturating_sub(2).min(64);
+        assert!(slots >= 2, "accumulator precision {acc_bits} leaves too few operand slots");
+        Self { sub, cols, used: 0, slots, acc_bits }
     }
 
     fn reset(&mut self, stats: &mut Stats) {
@@ -698,14 +876,14 @@ impl ColumnAccumulator {
         if self.used == self.slots {
             self.fold(stats);
         }
-        let base = self.used * ACC_BITS;
+        let base = self.used * self.acc_bits;
         // Operand width = highest non-zero plane (the per-column max's
         // bit width — same bound the scalar path derived).
         let mut cb = planes.len();
         while cb > 0 && planes[cb - 1] == 0 {
             cb -= 1;
         }
-        assert!(shift + cb <= ACC_BITS, "operand exceeds slot width");
+        assert!(shift + cb <= self.acc_bits, "operand exceeds slot width");
         for (b, &word) in planes[..cb].iter().enumerate() {
             if word != 0 {
                 let row = base + shift + b;
@@ -720,17 +898,18 @@ impl ColumnAccumulator {
         if self.used <= 1 {
             return;
         }
-        let bases: Vec<usize> = (0..self.used).map(|s| s * ACC_BITS).collect();
-        let res_base = self.slots * ACC_BITS;
+        let bases: Vec<usize> = (0..self.used).map(|s| s * self.acc_bits).collect();
+        let res_base = self.slots * self.acc_bits;
         let res_base = res_base.div_ceil(8) * 8;
-        let w = add_columns(&mut self.sub, &bases, ACC_BITS, res_base, stats, Phase::Convolution);
-        assert!(w <= ACC_BITS + 6);
+        let w =
+            add_columns(&mut self.sub, &bases, self.acc_bits, res_base, stats, Phase::Convolution);
+        assert!(w <= self.acc_bits + 6);
         // Read the fold result, clear operands, rewrite into slot 0.
-        let mut rows = Vec::with_capacity(w.min(ACC_BITS));
-        for b in 0..w.min(ACC_BITS) {
+        let mut rows = Vec::with_capacity(w.min(self.acc_bits));
+        for b in 0..w.min(self.acc_bits) {
             rows.push(self.sub.read_row(res_base + b, stats, Phase::Convolution));
         }
-        for s in 0..(self.used * ACC_BITS).div_ceil(8) {
+        for s in 0..(self.used * self.acc_bits).div_ceil(8) {
             self.sub.erase_strip(s, stats, Phase::Convolution);
         }
         for (b, &word) in rows.iter().enumerate() {
@@ -746,7 +925,7 @@ impl ColumnAccumulator {
     fn finish(&mut self, stats: &mut Stats) -> Vec<u64> {
         self.fold(stats);
         let mut vals = vec![0u64; self.cols];
-        for b in 0..ACC_BITS {
+        for b in 0..self.acc_bits {
             let mut word = self.sub.read_row(b, stats, Phase::Convolution);
             while word != 0 {
                 let col = word.trailing_zeros() as usize;

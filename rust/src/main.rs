@@ -24,12 +24,14 @@ use nandspin::arch::area::AreaModel;
 use nandspin::arch::config::ArchConfig;
 use nandspin::arch::stats::Phase;
 use nandspin::baselines::designs::BaselineKind;
+use nandspin::cnn::layer::Layer;
 use nandspin::cnn::network::{preset, resnet50, small_cnn, Network, PRESET_NAMES};
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::cnn::tensor::QTensor;
 use nandspin::coordinator::{Coordinator, EngineKind, EngineMode, Request, ServeConfig};
 use nandspin::device::llg::SwitchingModel;
 use nandspin::device::DeviceCosts;
+use nandspin::mapping::TilePlan;
 use nandspin::nvsim::NvSimModel;
 use nandspin::workload::{ImageBatch, PRECISION_GRID};
 
@@ -46,8 +48,8 @@ fn usage() -> ExitCode {
            verify          [--seed N]\n\
            run             [--batch N] [--seed N] [--chips N]\n\
            serve           [--engine functional|analytic|hybrid]\n\
-                           [--network alexnet|vgg19|resnet50|small|small_resnet|micro]\n\
-                           [--bits N] [--check-every N]\n\
+                           [--network alexnet|vgg19|resnet50|small|small_resnet|micro|wide]\n\
+                           [--bits N] [--check-every N] [--verbose]\n\
                            [--chips N] [--batch N] [--deadline-us F]\n\
                            [--requests N] [--arrival-ns F] [--queue N] [--seed N]"
     );
@@ -345,21 +347,44 @@ fn cmd_run(args: &[String]) {
     );
 }
 
+/// Print the functional engine's multi-tile conv mapping (§4.2, Fig. 9)
+/// for `net` on the paper subarray geometry: one line per conv layer
+/// with its tile grid and the per-bit-plane halo overlap the tiled
+/// execution re-sends through the bank buffer.
+fn print_tiling_plan(net: &Network, bits: u8) {
+    let cfg = ArchConfig::paper();
+    println!(
+        "== tiling plan: {} on {}x{} subarrays ({bits}-bit activations) ==",
+        net.name, cfg.rows, cfg.cols
+    );
+    for (i, node) in net.nodes.iter().enumerate() {
+        let Layer::Conv { out_c, kh, kw, stride, pad } = node.layer else { continue };
+        let (c, h, w) = net.in_shape(i);
+        let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+        match TilePlan::new(ph, pw, kh, kw, stride, cfg.rows, cfg.cols) {
+            Some(p) => println!(
+                "  node {i:>2}: conv {out_c}x{kh}x{kw} s{stride} on {c}x{ph}x{pw} -> \
+                 {}x{} tile grid ({} slabs/bit-plane, halo {} elems/plane)",
+                p.tiles_h,
+                p.tiles_w,
+                p.count(),
+                p.halo_elems()
+            ),
+            None => println!(
+                "  node {i:>2}: conv {out_c}x{kh}x{kw} s{stride} on {c}x{ph}x{pw} -> \
+                 window exceeds one subarray (functional engine rejects)"
+            ),
+        }
+    }
+}
+
 fn cmd_serve(args: &[String]) {
     let get = flags(args);
     let network = get("network", "small");
-    // Small functional-mode presets default to the 4-bit operating
-    // point (the historical serve default); full-size benchmarks to the
-    // paper's ⟨8:8⟩. A malformed --bits falls back to the same default.
-    let default_bits: u8 = if matches!(
+    let small_preset = matches!(
         network.as_str(),
-        "small" | "small_cnn" | "small_resnet" | "micro" | "micro_cnn"
-    ) {
-        4
-    } else {
-        8
-    };
-    let bits: u8 = get("bits", &default_bits.to_string()).parse().unwrap_or(default_bits);
+        "small" | "small_cnn" | "small_resnet" | "micro" | "micro_cnn" | "wide" | "wide_cnn"
+    );
     let check_every: usize = get("check-every", "4").parse().unwrap_or(4);
     let engine = match get("engine", "functional").as_str() {
         "functional" => EngineMode::Functional,
@@ -370,6 +395,25 @@ fn cmd_serve(args: &[String]) {
             std::process::exit(2);
         }
     };
+    // A bit-accurate full-size run is implied for `--engine functional`
+    // and for the hybrid replay.
+    let bit_accurate = engine != EngineMode::Analytic;
+    // Small functional-mode presets default to the 4-bit operating
+    // point (the historical serve default); full-size benchmarks to the
+    // paper's ⟨8:8⟩ — except when they will actually execute on the
+    // bit-accurate engine, where the default drops to ⟨2:2⟩ so a bare
+    // `serve --engine functional --network alexnet` finishes in minutes
+    // (the multi-tile mapping and op stream are identical at any
+    // precision, only narrower). A malformed --bits falls back to the
+    // same default.
+    let default_bits: u8 = if small_preset {
+        4
+    } else if bit_accurate {
+        2
+    } else {
+        8
+    };
+    let bits: u8 = get("bits", &default_bits.to_string()).parse().unwrap_or(default_bits);
     let Some(net) = preset(&network, bits) else {
         eprintln!("unknown network '{network}' (use one of {PRESET_NAMES:?})");
         std::process::exit(2);
@@ -382,8 +426,16 @@ fn cmd_serve(args: &[String]) {
         arrival_interval_ns: get("arrival-ns", "0").parse().unwrap_or(0.0),
         engine,
     });
-    let requests: usize = get("requests", "32").parse().unwrap_or(32);
+    // Bit-accurate full-size serving simulates every device op of a
+    // many-layer network per request; default to a short burst there
+    // (the analytic engine keeps the long-stream default).
+    let default_requests = if bit_accurate && !small_preset { 4 } else { 32 };
+    let requests: usize =
+        get("requests", &default_requests.to_string()).parse().unwrap_or(default_requests);
     let seed: u64 = get("seed", "1").parse().unwrap_or(1);
+    if args.iter().any(|a| a == "--verbose") {
+        print_tiling_plan(&net, bits);
+    }
 
     // Model parameters are only materialised when a functional engine
     // will actually run: always for `--engine functional`, and for the

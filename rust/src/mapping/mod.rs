@@ -5,7 +5,7 @@
 
 pub mod tiling;
 
-pub use tiling::{ConvMapping, Tiling};
+pub use tiling::{ConvMapping, TileExtent, TilePlan, Tiling};
 
 use crate::arch::config::ArchConfig;
 

@@ -1,5 +1,17 @@
 //! Tiling of feature-map bit-planes onto subarrays and the conv-layer
 //! parallelism calculation.
+//!
+//! Two views of the same mapping (§4.2, Fig. 9) live here:
+//!
+//! * [`Tiling`] / [`ConvMapping`] — the *counting* view the analytic
+//!   model uses: how many subarrays one layer occupies and how its
+//!   filters parallelise over the pool.
+//! * [`TilePlan`] / [`TileExtent`] — the *geometric* view the
+//!   functional engine executes: the exact input slab (with halo
+//!   columns/rows) each tile loads, and the exact output rectangle it
+//!   owns. Both are derived from one axis decomposition
+//!   ([`plan_axis`]), so the counts always agree with the enumerated
+//!   plan.
 
 use crate::arch::config::ArchConfig;
 use crate::cnn::layer::Shape;
@@ -13,6 +25,186 @@ fn gcd(a: usize, b: usize) -> usize {
     }
 }
 
+/// One tile of a 1-D convolution axis (height or width): the output
+/// interval it owns and the input slab (fresh region + halo overlap
+/// with the previous tile) it must hold to compute it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxisTile {
+    /// First output index owned by this tile.
+    pub out0: usize,
+    /// Number of output indices owned.
+    pub out_n: usize,
+    /// First input index of the slab (`out0 · stride`; tiles are never
+    /// extended to the left so window arithmetic inside the slab stays
+    /// aligned with the sliding-period schedule).
+    pub in0: usize,
+    /// Slab length in input elements (≤ the subarray capacity).
+    pub in_n: usize,
+    /// Leading slab elements that overlap the previous tile's slab —
+    /// the halo that is re-sent through the bank buffer instead of
+    /// loaded fresh. `0` for the first tile.
+    pub halo: usize,
+}
+
+impl AxisTile {
+    /// Input elements loaded fresh (not part of any earlier slab).
+    pub fn fresh(&self) -> usize {
+        self.in_n - self.halo
+    }
+}
+
+/// Decompose one conv axis of `len` input elements (kernel `k`, stride
+/// `stride`) into tiles of at most `cap` input elements. Returns `None`
+/// when even a single window does not fit (`k > cap` with a non-empty
+/// output).
+///
+/// Invariants (pinned by property tests):
+/// * every output index is owned by exactly one tile, in order;
+/// * each slab starts at `out0 · stride` and is at most `cap` long;
+/// * consecutive slabs overlap by `halo = max(0, k − stride)` for
+///   interior full tiles (and never more than `k − 1`);
+/// * when `stride ≤ k` the fresh regions partition `0..len` exactly.
+pub fn plan_axis(len: usize, k: usize, stride: usize, cap: usize) -> Option<Vec<AxisTile>> {
+    let stride = stride.max(1);
+    let ol = if len >= k { (len - k) / stride + 1 } else { 0 };
+    if ol == 0 {
+        // Degenerate: no output. One slab holding what fits.
+        return Some(vec![AxisTile { out0: 0, out_n: 0, in0: 0, in_n: len.min(cap), halo: 0 }]);
+    }
+    if k > cap {
+        return None;
+    }
+    let to_max = (cap - k) / stride + 1;
+    let nt = ol.div_ceil(to_max);
+    let mut tiles = Vec::with_capacity(nt);
+    for i in 0..nt {
+        let out0 = i * to_max;
+        let out_n = to_max.min(ol - out0);
+        let in0 = out0 * stride;
+        let in_end = (out0 + out_n - 1) * stride + k;
+        tiles.push(AxisTile { out0, out_n, in0, in_n: in_end - in0, halo: 0 });
+    }
+    // Close inter-slab gaps (stride > k) and cover the input tail, as
+    // far as capacity allows, so fresh regions partition the axis.
+    for i in 0..nt {
+        let limit = if i + 1 < nt { tiles[i + 1].in0 } else { len };
+        let in0 = tiles[i].in0;
+        tiles[i].in_n = tiles[i].in_n.max(limit.min(in0 + cap) - in0);
+    }
+    for i in 1..nt {
+        let prev_end = tiles[i - 1].in0 + tiles[i - 1].in_n;
+        tiles[i].halo = prev_end.saturating_sub(tiles[i].in0);
+    }
+    Some(tiles)
+}
+
+/// One 2-D tile of a convolution layer: output rectangle owned and
+/// input slab (with halo) required, in feature-map coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileExtent {
+    /// First output column owned.
+    pub out_x0: usize,
+    /// Output columns owned.
+    pub out_w: usize,
+    /// First output row owned.
+    pub out_y0: usize,
+    /// Output rows owned.
+    pub out_h: usize,
+    /// First input column of the slab.
+    pub in_x0: usize,
+    /// Slab width (≤ subarray columns).
+    pub in_w: usize,
+    /// First input row of the slab.
+    pub in_y0: usize,
+    /// Slab height (≤ subarray rows).
+    pub in_h: usize,
+    /// Leading slab columns shared with the tile to the left.
+    pub halo_w: usize,
+    /// Leading slab rows shared with the tile above.
+    pub halo_h: usize,
+}
+
+impl TileExtent {
+    /// Slab elements that are loaded fresh from the source feature map
+    /// (`(in_w − halo_w) · (in_h − halo_h)`); over a full [`TilePlan`]
+    /// these partition the map when `stride ≤ k` on both axes.
+    pub fn fresh_elems(&self) -> usize {
+        (self.in_w - self.halo_w) * (self.in_h - self.halo_h)
+    }
+
+    /// Slab elements that are halo — re-sent through the bank buffer
+    /// from slabs already resident rather than loaded fresh.
+    pub fn halo_elems(&self) -> usize {
+        self.in_w * self.in_h - self.fresh_elems()
+    }
+}
+
+/// The enumerated multi-tile mapping of one conv layer's feature map
+/// onto `rows × cols` subarray slabs (Fig. 9 executed literally): the
+/// grid product of the two axis decompositions from [`plan_axis`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Tiles in row-major order (`tiles_h × tiles_w`).
+    pub tiles: Vec<TileExtent>,
+    /// Column-axis tile count.
+    pub tiles_w: usize,
+    /// Row-axis tile count.
+    pub tiles_h: usize,
+}
+
+impl TilePlan {
+    /// Plan an `h × w` (already padded) feature map for a `kh × kw`
+    /// kernel at `stride` onto subarrays of `rows × cols` capacity.
+    /// `None` when a single window exceeds one subarray.
+    pub fn new(
+        h: usize,
+        w: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Option<Self> {
+        let ax_h = plan_axis(h, kh, stride, rows)?;
+        let ax_w = plan_axis(w, kw, stride, cols)?;
+        let mut tiles = Vec::with_capacity(ax_h.len() * ax_w.len());
+        for th in &ax_h {
+            for tw in &ax_w {
+                tiles.push(TileExtent {
+                    out_x0: tw.out0,
+                    out_w: tw.out_n,
+                    out_y0: th.out0,
+                    out_h: th.out_n,
+                    in_x0: tw.in0,
+                    in_w: tw.in_n,
+                    in_y0: th.in0,
+                    in_h: th.in_n,
+                    halo_w: tw.halo,
+                    halo_h: th.halo,
+                });
+            }
+        }
+        Some(Self { tiles, tiles_w: ax_w.len(), tiles_h: ax_h.len() })
+    }
+
+    /// Total tiles per bit-plane.
+    pub fn count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// `true` when the plan is the single-tile (untiled) case.
+    pub fn is_single(&self) -> bool {
+        self.tiles.len() == 1
+    }
+
+    /// Total halo elements exchanged per bit-plane load (the documented
+    /// tiling overhead on the local bus: `ic · ibits · halo_elems()`
+    /// extra bits per conv layer).
+    pub fn halo_elems(&self) -> usize {
+        self.tiles.iter().map(TileExtent::halo_elems).sum()
+    }
+}
+
 /// Tiling of one H×W bit-plane over `rows × cols` subarrays.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Tiling {
@@ -23,11 +215,20 @@ pub struct Tiling {
 }
 
 impl Tiling {
-    /// Tile an `h × w` bit-plane. A `kw−1`-column halo is kept per column
-    /// tile so windows never straddle tiles.
-    pub fn of(h: usize, w: usize, kw: usize, cfg: &ArchConfig) -> Self {
-        let usable_w = cfg.cols.saturating_sub(kw.saturating_sub(1)).max(1);
-        Self { tiles_w: w.div_ceil(usable_w.min(w)), tiles_h: h.div_ceil(cfg.rows) }
+    /// Tile an `h × w` bit-plane for a `kh × kw` kernel at `stride`:
+    /// the tile counts of the enumerated [`TilePlan`] (halo-aware on
+    /// both axes). Falls back to the coarse ceiling division when a
+    /// single window exceeds one subarray (the analytic model still
+    /// wants a unit count there even though the functional engine
+    /// rejects the layer).
+    pub fn of(h: usize, w: usize, kh: usize, kw: usize, stride: usize, cfg: &ArchConfig) -> Self {
+        match TilePlan::new(h, w, kh, kw, stride, cfg.rows, cfg.cols) {
+            Some(p) => Self { tiles_w: p.tiles_w, tiles_h: p.tiles_h },
+            None => {
+                let usable_w = cfg.cols.saturating_sub(kw.saturating_sub(1)).max(1);
+                Self { tiles_w: w.div_ceil(usable_w.min(w)), tiles_h: h.div_ceil(cfg.rows) }
+            }
+        }
     }
 
     /// Total tiles (subarrays per bit-plane).
@@ -57,17 +258,19 @@ impl ConvMapping {
     /// Map a conv layer (`in_shape`, kernel `kh×kw`, `stride`) with
     /// `ibits`-bit activations and `out_c` filters onto `avail`
     /// compute subarrays.
+    #[allow(clippy::too_many_arguments)]
     pub fn plan(
         cfg: &ArchConfig,
         in_shape: Shape,
         out_c: usize,
+        kh: usize,
         kw: usize,
         stride: usize,
         ibits: u8,
         avail: usize,
     ) -> Self {
         let (in_c, h, w) = in_shape;
-        let tiling = Tiling::of(h, w, kw, cfg);
+        let tiling = Tiling::of(h, w, kh, kw, stride, cfg);
         let plane_units = (in_c * ibits as usize * tiling.count()).max(1);
         let replication = (avail / plane_units).clamp(1, out_c.max(1));
         let serial_filters = out_c.div_ceil(replication);
@@ -89,23 +292,24 @@ mod tests {
     #[test]
     fn small_plane_fits_one_subarray() {
         let cfg = ArchConfig::paper();
-        let t = Tiling::of(28, 28, 3, &cfg);
+        let t = Tiling::of(28, 28, 3, 3, 1, &cfg);
         assert_eq!(t.count(), 1);
     }
 
     #[test]
     fn wide_plane_tiles_in_width() {
         let cfg = ArchConfig::paper();
-        let t = Tiling::of(224, 224, 3, &cfg);
+        let t = Tiling::of(224, 224, 3, 3, 1, &cfg);
         assert_eq!(t.tiles_h, 1);
-        assert_eq!(t.tiles_w, 2); // 224 / (128−2) → 2
+        assert_eq!(t.tiles_w, 2); // 222 outputs / 126 per tile → 2
     }
 
     #[test]
     fn tall_plane_tiles_in_height() {
         let cfg = ArchConfig::paper();
-        let t = Tiling::of(512, 64, 3, &cfg);
-        assert_eq!(t.tiles_h, 2);
+        // 510 output rows / 254 per 256-row subarray → 3 halo-aware tiles.
+        let t = Tiling::of(512, 64, 3, 3, 1, &cfg);
+        assert_eq!(t.tiles_h, 3);
     }
 
     #[test]
@@ -113,9 +317,9 @@ mod tests {
         let cfg = ArchConfig::paper();
         // stride 1: all kw periods; stride 4 on kw=11 → gcd 1 → 11;
         // stride 2 on kw=2 → 1 period.
-        let m = ConvMapping::plan(&cfg, (3, 224, 224), 64, 11, 4, 8, 1 << 13);
+        let m = ConvMapping::plan(&cfg, (3, 224, 224), 64, 11, 11, 4, 8, 1 << 13);
         assert_eq!(m.periods, 11);
-        let m2 = ConvMapping::plan(&cfg, (3, 224, 224), 64, 2, 2, 8, 1 << 13);
+        let m2 = ConvMapping::plan(&cfg, (3, 224, 224), 64, 2, 2, 2, 8, 1 << 13);
         assert_eq!(m2.periods, 1);
     }
 
@@ -124,13 +328,42 @@ mod tests {
         let cfg = ArchConfig::paper();
         // 3 channels × 8 bits × 2 tiles = 48 plane units; 8192 avail →
         // replication capped by out_c.
-        let m = ConvMapping::plan(&cfg, (3, 224, 224), 64, 3, 1, 8, 8192);
+        let m = ConvMapping::plan(&cfg, (3, 224, 224), 64, 3, 3, 1, 8, 8192);
         assert_eq!(m.plane_units, 48);
         assert_eq!(m.replication, 64, "capped at out_c");
         assert_eq!(m.serial_filters, 1);
         // Scarce pool → replication 1, filters serial.
-        let m2 = ConvMapping::plan(&cfg, (3, 224, 224), 64, 3, 1, 8, 50);
+        let m2 = ConvMapping::plan(&cfg, (3, 224, 224), 64, 3, 3, 1, 8, 50);
         assert_eq!(m2.replication, 1);
         assert_eq!(m2.serial_filters, 64);
+    }
+
+    #[test]
+    fn alexnet_conv1_plan_is_two_width_tiles_with_stride_halo() {
+        // 227-wide input, 11×11 kernel, stride 4 on a 128-col subarray:
+        // 55 output cols, 30 per tile → 2 tiles; the first slab ends at
+        // 29·4 + 11 = 127, the second starts at 30·4 = 120, so they
+        // overlap by kw − stride = 7 cols.
+        let p = TilePlan::new(227, 227, 11, 11, 4, 256, 128).expect("fits");
+        assert_eq!((p.tiles_h, p.tiles_w), (1, 2));
+        let t0 = p.tiles[0];
+        let t1 = p.tiles[1];
+        assert_eq!((t0.out_x0, t0.out_w, t0.in_x0, t0.in_w, t0.halo_w), (0, 30, 0, 127, 0));
+        assert_eq!((t1.out_x0, t1.out_w, t1.in_x0), (30, 25, 120));
+        assert_eq!(t1.in_x0 + t1.in_w, 227, "last slab covers the input tail");
+        assert_eq!(t1.halo_w, 7);
+        // Fresh loads partition the input exactly.
+        let fresh: usize = p.tiles.iter().map(TileExtent::fresh_elems).sum();
+        assert_eq!(fresh, 227 * 227);
+    }
+
+    #[test]
+    fn oversized_window_is_rejected_not_mistiled() {
+        assert!(plan_axis(300, 200, 1, 128).is_none());
+        assert!(TilePlan::new(300, 300, 3, 200, 1, 256, 128).is_none());
+        // ...but a degenerate no-output axis still yields one slab.
+        let t = plan_axis(5, 9, 1, 128).expect("degenerate");
+        assert_eq!(t.len(), 1);
+        assert_eq!((t[0].out_n, t[0].in_n), (0, 5));
     }
 }

@@ -21,10 +21,13 @@
 
 use nandspin::arch::config::ArchConfig;
 use nandspin::arch::stats::{Phase, Stats};
-use nandspin::cnn::network::{micro_cnn, small_cnn, small_resnet, Network};
+use nandspin::cnn::network::{alexnet, micro_cnn, small_cnn, small_resnet, Network};
 use nandspin::cnn::ref_exec::ModelParams;
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::{AnalyticModel, Calibration, FunctionalEngine};
+use nandspin::coordinator::{
+    serve, AnalyticModel, Calibration, EngineMode, FunctionalEngine, Request, ServeConfig,
+    SpotCheck,
+};
 
 const AND_TOL: f64 = 8.0;
 const MICRO_AND_TOL: f64 = 4.0;
@@ -167,4 +170,44 @@ fn per_layer_conv_counts_match_on_the_single_conv_micro_net() {
     // functional path adds the per-drain counter-shift steps, so the
     // band is wider than the AND band).
     assert!(in_band(ratio(a.ops.bitcounts, f.ops.bitcounts), 8.0));
+}
+
+#[test]
+fn hybrid_alexnet_replays_through_the_tiled_functional_path() {
+    // Full-size hybrid fidelity (the PR 4 acceptance condition): serve
+    // AlexNet analytically and replay a sampled request bit-accurately
+    // through the multi-tile functional path. The 1-bit operating point
+    // keeps the replay inside the test time budget; the mapping and op
+    // stream are the same as at ⟨8:8⟩, only narrower.
+    let net = alexnet(1);
+    let params = ModelParams::random(&net, 1, 7);
+    let images: Vec<QTensor> = (0..2)
+        .map(|i| QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, 70 + i))
+        .collect();
+    let scfg = ServeConfig {
+        chips: 1,
+        max_batch: 2,
+        engine: EngineMode::Hybrid { check_every: 2 },
+        ..ServeConfig::default()
+    };
+    let report = serve(&ArchConfig::paper(), &scfg, &net, Some(&params), Request::stream(images));
+    assert_eq!(report.served(), 2);
+    report.verify().expect("hybrid identities incl. spot-check band");
+    let sc = report
+        .spot_check
+        .expect("multi-tile mapping makes the full-size functional replay possible");
+    assert_eq!(sc.checked, 1, "stream position 0 replayed");
+    assert!(
+        sc.passed(),
+        "latency {:?} energy {:?} outside {:?}",
+        sc.latency_ratio,
+        sc.energy_ratio,
+        SpotCheck::TOLERANCE
+    );
+    let (lo, hi) = SpotCheck::TOLERANCE;
+    for (a, b) in [sc.latency_ratio, sc.energy_ratio] {
+        assert!(a >= lo && b <= hi && a <= b, "ratio band {a}..{b} inside {lo}..{hi}");
+    }
+    // Hybrid serves analytically: completions carry no outputs.
+    assert!(report.completions.iter().all(|c| c.output.is_none()));
 }

@@ -6,8 +6,16 @@
 //! a faithful scalar per-column emulation of the pre-refactor path
 //! issuing the same device-op sequence.
 
+use nandspin::arch::config::ArchConfig;
 use nandspin::arch::stats::{Phase, Stats};
+use nandspin::cnn::layer::Layer;
+use nandspin::cnn::network::{small_cnn, Network, Node};
+use nandspin::cnn::ref_exec::{self, ModelParams, WideTensor};
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::FunctionalEngine;
 use nandspin::device::energy::DeviceCosts;
+use nandspin::mapping::tiling::{plan_axis, AxisTile};
+use nandspin::mapping::{ConvMapping, TilePlan, Tiling};
 use nandspin::subarray::conv::{
     bitplane_conv_counts, window_sums, BitKernel, ConvGeometry,
 };
@@ -529,4 +537,246 @@ fn property_stats_are_monotone_nonnegative() {
         last_e = e;
         last_t = t;
     }
+}
+
+// ====================================================================
+// Multi-tile mapping (§4.2, Fig. 9): axis/plan geometry and
+// tiled-vs-untiled bit-identity with the documented halo overhead.
+// ====================================================================
+
+#[test]
+fn property_tile_plan_axis_geometry() {
+    // Random (len, k, stride, cap) axis decompositions: every invariant
+    // `plan_axis` documents, checked by enumeration.
+    let mut rng = Rng::seed_from_u64(0x7117);
+    for case in 0..500 {
+        let len = rng.gen_usize(1, 300);
+        let k = rng.gen_usize(1, 14);
+        let stride = rng.gen_usize(1, 7);
+        let cap = rng.gen_usize(4, 160);
+        let ol = if len >= k { (len - k) / stride + 1 } else { 0 };
+        let Some(tiles) = plan_axis(len, k, stride, cap) else {
+            assert!(ol > 0 && k > cap, "case {case}: None only for an oversized window");
+            continue;
+        };
+        let mut next_out = 0usize;
+        for (i, t) in tiles.iter().enumerate() {
+            assert_eq!(t.out0, next_out, "case {case} tile {i}: outputs owned in order");
+            next_out += t.out_n;
+            assert_eq!(t.in0, t.out0 * stride, "case {case} tile {i}: slab origin");
+            assert!(t.in_n <= cap, "case {case} tile {i}: slab exceeds capacity");
+            assert!(t.in0 + t.in_n <= len, "case {case} tile {i}: slab exceeds input");
+            assert!(t.halo <= t.in_n, "case {case} tile {i}: halo exceeds slab");
+            if t.out_n > 0 {
+                assert!(
+                    (t.out0 + t.out_n - 1) * stride + k <= t.in0 + t.in_n,
+                    "case {case} tile {i}: last owned window must fit inside the slab"
+                );
+            }
+            if i == 0 {
+                assert_eq!(t.halo, 0, "case {case}: first tile has no halo");
+            } else {
+                // The predecessor is always a full tile, so the overlap
+                // is exactly the window carry-over.
+                assert_eq!(
+                    t.halo,
+                    k.saturating_sub(stride),
+                    "case {case} tile {i}: halo must be max(0, k − stride)"
+                );
+                let prev = &tiles[i - 1];
+                assert_eq!(
+                    (prev.in0 + prev.in_n).saturating_sub(t.in0),
+                    t.halo,
+                    "case {case} tile {i}: halo is the overlap with the previous slab"
+                );
+            }
+        }
+        assert_eq!(next_out, ol, "case {case}: every output owned exactly once");
+        // Fresh loads count exactly the union of the slabs; when the
+        // windows tile the axis (stride ≤ k, no tail remainder) that
+        // union is the whole axis — the tiled run then loads exactly
+        // the same fresh traffic as an untiled one.
+        let fresh: usize = tiles.iter().map(AxisTile::fresh).sum();
+        let mut union = 0usize;
+        let mut covered_to = 0usize;
+        for t in &tiles {
+            let end = t.in0 + t.in_n;
+            union += end.saturating_sub(t.in0.max(covered_to));
+            covered_to = covered_to.max(end);
+        }
+        assert_eq!(fresh, union, "case {case}: fresh elements must partition the covered input");
+        if ol > 0 && stride <= k && (len - k) % stride == 0 {
+            assert_eq!(fresh, len, "case {case}: fresh loads must cover the axis exactly");
+        }
+    }
+}
+
+#[test]
+fn property_tile_plan_counts_agree_with_analytic_mapping() {
+    // The enumerated TilePlan (what the functional engine executes) and
+    // the counting view (Tiling / ConvMapping, what the analytic model
+    // charges) must agree for any geometry and subarray size.
+    let mut rng = Rng::seed_from_u64(0x2D71);
+    for case in 0..300 {
+        let mut cfg = ArchConfig::paper();
+        cfg.rows = 8 * rng.gen_usize(4, 33); // 32..=256
+        cfg.cols = rng.gen_usize(16, 129); // 16..=128
+        let h = rng.gen_usize(1, 300);
+        let w = rng.gen_usize(1, 300);
+        let kh = rng.gen_usize(1, 8);
+        let kw = rng.gen_usize(1, 8);
+        let stride = rng.gen_usize(1, 5);
+        let t = Tiling::of(h, w, kh, kw, stride, &cfg);
+        let p = TilePlan::new(h, w, kh, kw, stride, cfg.rows, cfg.cols)
+            .expect("window fits the subarray for these ranges");
+        assert_eq!((t.tiles_h, t.tiles_w), (p.tiles_h, p.tiles_w), "case {case}: tile counts");
+        assert_eq!(t.count(), p.count(), "case {case}");
+        assert_eq!(p.count(), p.tiles_h * p.tiles_w, "case {case}: full grid enumerated");
+        // Output rectangles partition the output exactly once.
+        let oh = if h >= kh { (h - kh) / stride + 1 } else { 0 };
+        let ow = if w >= kw { (w - kw) / stride + 1 } else { 0 };
+        let owned: usize = p.tiles.iter().map(|e| e.out_w * e.out_h).sum();
+        assert_eq!(owned, oh * ow, "case {case}: outputs owned exactly once");
+        // halo_elems is consistent with the per-tile extents.
+        let halo: usize = p
+            .tiles
+            .iter()
+            .map(|e| e.in_w * e.in_h - (e.in_w - e.halo_w) * (e.in_h - e.halo_h))
+            .sum();
+        assert_eq!(halo, p.halo_elems(), "case {case}: plan-level halo roll-up");
+        // The analytic conv mapping counts the same tiles.
+        let in_c = rng.gen_usize(1, 5);
+        let ibits = rng.gen_usize(1, 9) as u8;
+        let out_c = rng.gen_usize(1, 65);
+        let avail = rng.gen_usize(1, 4097);
+        let m = ConvMapping::plan(&cfg, (in_c, h, w), out_c, kh, kw, stride, ibits, avail);
+        assert_eq!(
+            m.plane_units,
+            (in_c * ibits as usize * t.count()).max(1),
+            "case {case}: plane units follow the enumerated tiling"
+        );
+        assert_eq!(m.active_units(), m.plane_units * m.replication, "case {case}");
+        assert!(m.replication >= 1 && m.replication <= out_c.max(1), "case {case}");
+        assert!(m.serial_filters * m.replication >= out_c, "case {case}");
+    }
+}
+
+/// Run `net` on a fresh paper-config engine, optionally forcing the
+/// conv tile planner down to `tile_cap = (rows, cols)`.
+fn engine_run(
+    net: &Network,
+    params: &ModelParams,
+    input: &QTensor,
+    tile_cap: Option<(usize, usize)>,
+) -> (Vec<WideTensor>, Stats) {
+    let mut eng = FunctionalEngine::new(ArchConfig::paper());
+    if let Some((r, c)) = tile_cap {
+        eng.force_tile_capacity(r, c);
+    }
+    let outs = eng.run(net, params, input);
+    (outs, eng.stats)
+}
+
+#[test]
+fn property_tiled_conv_bit_identical_with_documented_overhead() {
+    // Random single-conv networks whose shapes straddle a forced tile
+    // boundary. Shapes are constrained so the fresh regions of any
+    // tiling partition the input exactly ((len − k) divisible by the
+    // stride, stride ≤ k, on both axes): the tiled run then moves the
+    // same fresh/weight/output traffic as the untiled one, and the only
+    // bus-level difference is the documented halo re-send of
+    // in_c · ibits · halo_elems() local-bus bits per conv layer.
+    let mut rng = Rng::seed_from_u64(0x7145);
+    for case in 0..10u64 {
+        let stride = rng.gen_usize(1, 3);
+        let kh = stride + rng.gen_usize(0, 3);
+        let kw = stride + rng.gen_usize(0, 3);
+        let oh = rng.gen_usize(2, 7);
+        let ow = rng.gen_usize(3, 10);
+        let (h, w) = (kh + (oh - 1) * stride, kw + (ow - 1) * stride);
+        let c = rng.gen_usize(1, 3);
+        let out_c = rng.gen_usize(1, 4);
+        let ibits = rng.gen_usize(1, 4) as u8;
+        let wbits = rng.gen_usize(1, 4) as u8;
+        // Capacities stay inside the force_tile_capacity clamp range and
+        // always force ≥ 2 width tiles (cols_cap admits at most two
+        // output columns per tile; ow ≥ 3).
+        let rows_cap = (kh + stride * rng.gen_usize(0, 6)).max(8);
+        let cols_cap = kw + stride * rng.gen_usize(0, 2);
+        let net = Network {
+            name: format!("TiledProp{case}"),
+            input: (c, h, w),
+            input_bits: ibits,
+            nodes: vec![Node {
+                layer: Layer::Conv { out_c, kh, kw, stride, pad: 0 },
+                input: None,
+            }],
+        };
+        let params = ModelParams::random(&net, wbits, 0xBEEF + case);
+        let input = QTensor::random(c, h, w, ibits, 0xF00D + case);
+        let golden = ref_exec::execute(&net, &params, &input);
+
+        let (u_out, u_st) = engine_run(&net, &params, &input, None);
+        let (t_out, t_st) = engine_run(&net, &params, &input, Some((rows_cap, cols_cap)));
+        let plan = TilePlan::new(h, w, kh, kw, stride, rows_cap, cols_cap).expect("window fits");
+        assert!(plan.count() >= 2, "case {case}: capacity override must force tiling");
+
+        let ctx = format!(
+            "case {case}: c={c} {h}x{w} k={kh}x{kw} s={stride} oc={out_c} \
+             i{ibits} w{wbits} cap={rows_cap}x{cols_cap} tiles={}",
+            plan.count()
+        );
+        assert_eq!(u_out, golden, "{ctx}: untiled vs golden");
+        assert_eq!(t_out, golden, "{ctx}: tiled output must be bit-identical");
+
+        // Documented overhead accounting (ARCHITECTURE.md): global
+        // traffic (fresh loads + weight stream) is unchanged, local
+        // traffic grows by exactly the halo re-send, the accumulator
+        // read stream is tiling-independent, and the extra device work
+        // is fused AND+count pairs plus slab (re)writes.
+        let (uo, to) = (&u_st.ops, &t_st.ops);
+        assert_eq!(to.global_bus_bits, uo.global_bus_bits, "{ctx}: global traffic");
+        let halo_bits = (c * ibits as usize * plan.halo_elems()) as u64;
+        assert_eq!(to.local_bus_bits, uo.local_bus_bits + halo_bits, "{ctx}: halo re-send");
+        assert_eq!(to.reads, uo.reads, "{ctx}: accumulator stream tiling-independent");
+        let d_ands = to.ands.checked_sub(uo.ands).expect("tiled AND stream is a superset");
+        let d_counts =
+            to.bitcounts.checked_sub(uo.bitcounts).expect("tiled count stream is a superset");
+        assert_eq!(d_ands, d_counts, "{ctx}: extra conv steps are fused AND+count pairs");
+        assert!(to.erases >= uo.erases, "{ctx}: slab erases");
+        assert!(to.program_steps >= uo.program_steps, "{ctx}: slab programs");
+        assert!(to.buffer_accesses >= uo.buffer_accesses, "{ctx}: weight broadcasts");
+        assert!(t_st.total_energy_fj() >= u_st.total_energy_fj(), "{ctx}: energy");
+        assert!(t_st.total_latency_ns() >= u_st.total_latency_ns(), "{ctx}: latency");
+    }
+}
+
+#[test]
+fn property_multilayer_tiled_network_matches_untiled() {
+    // Whole-network version of the equivalence property: every layer of
+    // small_cnn behind forcibly tiled convs still produces bit-identical
+    // node outputs, and the bus overhead is exactly the per-conv halo
+    // formula (conv1: 2ch × 3b over 14×22; conv2: 4ch × 3b over 6×10 —
+    // both stride 1, pad 0, so fresh loads are tiling-invariant).
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 0x5EED);
+    let input = QTensor::random(2, 14, 22, 3, 0x5EED + 1);
+    let golden = ref_exec::execute(&net, &params, &input);
+
+    let (u_out, u_st) = engine_run(&net, &params, &input, None);
+    let (t_out, t_st) = engine_run(&net, &params, &input, Some((8, 7)));
+    for (i, (a, b)) in u_out.iter().zip(&golden).enumerate() {
+        assert_eq!(a, b, "untiled node {i} vs golden");
+    }
+    for (i, (a, b)) in t_out.iter().zip(&golden).enumerate() {
+        assert_eq!(a, b, "tiled node {i} must be bit-identical");
+    }
+
+    let p1 = TilePlan::new(14, 22, 3, 3, 1, 8, 7).expect("conv1 plan");
+    let p2 = TilePlan::new(6, 10, 3, 3, 1, 8, 7).expect("conv2 plan");
+    assert!(p1.count() > 1 && p2.count() > 1, "both convs must actually tile");
+    let halo_bits = (2 * 3 * p1.halo_elems() + 4 * 3 * p2.halo_elems()) as u64;
+    assert_eq!(t_st.ops.global_bus_bits, u_st.ops.global_bus_bits);
+    assert_eq!(t_st.ops.local_bus_bits, u_st.ops.local_bus_bits + halo_bits);
+    assert_eq!(t_st.ops.reads, u_st.ops.reads);
 }

@@ -394,9 +394,10 @@ fn hybrid_mode_spot_checks_small_presets() {
 
 #[test]
 fn hybrid_mode_degrades_to_analytic_on_full_size_networks() {
-    // AlexNet cannot replay on the functional engine (feature maps wider
-    // than a subarray) and no params are supplied — the serve must still
-    // complete, with the spot-check skipped.
+    // The multi-tile mapping makes AlexNet replayable on the functional
+    // engine, but no params are supplied here — the serve must still
+    // complete, with the spot-check skipped (hybrid fidelity with params
+    // is covered in tests/engines.rs).
     let net = alexnet(8);
     let scfg = ServeConfig {
         chips: 2,
