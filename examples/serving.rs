@@ -41,6 +41,7 @@ fn main() {
         queue_depth: 2,
         arrival_interval_ns: 20_000.0,
         engine: EngineMode::Functional,
+        ..ServeConfig::default()
     };
     println!(
         "serving {n} requests of {} on {} chips (batch ≤ {}, deadline {} µs)\n",
@@ -82,10 +83,10 @@ fn main() {
     // one-request run on a cold chip.
     let cold = serve(
         &ArchConfig::paper(),
-        &ServeConfig { chips: 1, max_batch: 1, ..scfg },
+        &ServeConfig { chips: 1, max_batch: 1, ..scfg.clone() },
         &net,
         Some(&params),
-        vec![Request { id: 0, image: images[0].clone() }],
+        vec![Request { id: 0, net: 0, image: images[0].clone() }],
     );
     let cold_mj = cold.total_energy_mj();
     let warm_mj = report.total_energy_mj() / report.served() as f64;
@@ -101,7 +102,7 @@ fn main() {
     // the path that serves the paper's full-size networks.
     let analytic = serve(
         &ArchConfig::paper(),
-        &ServeConfig { engine: EngineMode::Analytic, ..scfg },
+        &ServeConfig { engine: EngineMode::Analytic, ..scfg.clone() },
         &net,
         None,
         Request::stream(images.clone()),

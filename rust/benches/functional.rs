@@ -201,6 +201,7 @@ fn main() {
         vec![PlannedBatch {
             seq: 0,
             chip: 0,
+            net: 0,
             cause: FlushCause::Size,
             flush_ns: 0.0,
             requests,

@@ -12,7 +12,10 @@
 //! Two networks are swept: `small_cnn`, which fits one subarray per
 //! bit-plane (the untiled functional path), and `wide_cnn`, whose
 //! 200-column feature map forces the multi-tile mapping (§4.2, Fig. 9)
-//! — its functional rows measure the tiled path at serving scale.
+//! — its functional rows measure the tiled path at serving scale. A
+//! third, mixed sweep serves `alexnet` + `small_cnn` together over a
+//! heterogeneous two-chip pool with per-network SLO lanes, tracking
+//! per-network tail latency and deadline violations.
 //!
 //! Besides the human table, the bench writes `BENCH_serving.json`
 //! (same grid, machine-readable, one `network` key per row) so the
@@ -21,10 +24,13 @@
 use std::time::Instant;
 
 use nandspin::arch::config::ArchConfig;
-use nandspin::cnn::network::{small_cnn, wide_cnn, Network};
+use nandspin::cnn::network::{alexnet, small_cnn, wide_cnn, Network};
 use nandspin::cnn::ref_exec::ModelParams;
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::serve::{serve, EngineMode, Request, ServeConfig};
+use nandspin::coordinator::engine::{EngineKind, PoolSpec};
+use nandspin::coordinator::serve::{
+    serve, serve_pool, EngineMode, Request, ServeConfig, ServedNetwork, SloPolicy,
+};
 
 /// Serve `n` requests of `net` for every (engine, batch, chips) cell,
 /// printing the human table rows and appending JSON rows to `rows`.
@@ -96,6 +102,87 @@ fn sweep(
     }
 }
 
+/// Mixed-network SLO rows: an `alexnet` + `small_cnn` stream over a
+/// heterogeneous two-chip pool (paper point vs a narrow 32-bit bus),
+/// analytic engine, open arrivals. Each network batches in its own SLO
+/// lane (alexnet relaxed, small_cnn tight) and the cost-aware router
+/// schedules on each chip's own closed-form batching law — these rows
+/// track the per-network tail latency and violation count across PRs.
+fn sweep_mixed(batches: &[usize], n: usize, rows: &mut Vec<String>) {
+    let big = alexnet(8);
+    let small = small_cnn(3);
+    let mut narrow = ArchConfig::paper();
+    narrow.bus_width_bits = 32;
+    let pool = PoolSpec::heterogeneous(vec![ArchConfig::paper(), narrow], EngineKind::Analytic);
+    let nets = [
+        ServedNetwork { net: &big, params: None },
+        ServedNetwork { net: &small, params: None },
+    ];
+    let streams = |seed: u64| -> Vec<Request> {
+        Request::interleave(vec![
+            (0..n)
+                .map(|i| {
+                    QTensor::random(big.input.0, big.input.1, big.input.2, 8, seed + i as u64)
+                })
+                .collect(),
+            (0..n)
+                .map(|i| {
+                    QTensor::random(
+                        small.input.0,
+                        small.input.1,
+                        small.input.2,
+                        small.input_bits,
+                        seed + 1000 + i as u64,
+                    )
+                })
+                .collect(),
+        ])
+    };
+    for &batch in batches {
+        let scfg = ServeConfig {
+            chips: pool.chips(),
+            max_batch: batch,
+            engine: EngineMode::Analytic,
+            arrival_interval_ns: 20_000.0,
+            slo: SloPolicy::global().with_deadline_us(0, 500.0).with_deadline_us(1, 50.0),
+            ..ServeConfig::default()
+        };
+        let report = serve_pool(&pool, &scfg, &nets, streams(70));
+        report.verify().expect("aggregation identities");
+        assert_eq!(report.served(), 2 * n);
+        let violations: u64 = report.networks.iter().map(|nr| nr.deadline_violations).sum();
+        for nr in &report.networks {
+            let label = format!("mix:{}", nr.name);
+            println!(
+                "{:>14} {:>10} {:>6} {:>6} {:>10.1} {:>12.2} {:>12.2} {:>12.4} {:>9}",
+                label,
+                "analytic",
+                batch,
+                pool.chips(),
+                report.sim_fps(),
+                nr.mean_latency_ms() * 1e3,
+                nr.p95_latency_ns * 1e-3,
+                nr.stats.total_energy_mj() / nr.served.max(1) as f64,
+                nr.deadline_violations,
+            );
+        }
+        rows.push(format!(
+            "    {{\"network\": \"mixed(alexnet+small_cnn)\", \"engine\": \"analytic\", \
+             \"batch\": {}, \"chips\": {}, \"sim_fps\": {:.3}, \
+             \"mean_latency_us\": {:.3}, \"p95_latency_us\": {:.3}, \
+             \"mj_per_request\": {:.6}, \"slo_violations\": {}, \"wall_s\": {:.4}}}",
+            batch,
+            pool.chips(),
+            report.sim_fps(),
+            report.mean_latency_ms() * 1e3,
+            report.p95_latency_ms() * 1e3,
+            report.total_energy_mj() / (2 * n) as f64,
+            violations,
+            report.wall_seconds
+        ));
+    }
+}
+
 fn main() {
     let t0 = Instant::now();
     let net = small_cnn(3);
@@ -120,6 +207,13 @@ fn main() {
     // with a 2-column halo on the paper's 256x128 subarray, so these
     // rows track the multi-tile path's serving cost across PRs.
     sweep(&wide, n, &[EngineMode::Functional], &[1, 4], &[1, 2], &mut rows);
+
+    println!("\n== mixed-network SLO sweep: alexnet+small_cnn, heterogeneous 2-chip pool ==");
+    println!(
+        "{:>14} {:>10} {:>6} {:>6} {:>10} {:>12} {:>12} {:>12} {:>9}",
+        "network", "engine", "batch", "chips", "FPS", "mean (µs)", "p95 (µs)", "mJ/req", "SLO viol"
+    );
+    sweep_mixed(&[1, 4, 16], n, &mut rows);
 
     let json = format!(
         "{{\n  \"bench\": \"serving\",\n  \"network\": \"{}\",\n  \"requests\": {},\n  \

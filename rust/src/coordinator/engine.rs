@@ -483,6 +483,66 @@ impl EngineFactory {
     }
 }
 
+/// A pool of simulated PIM chips: one [`EngineFactory`] per chip, so
+/// every chip can simulate its own operating point (capacity, bus
+/// width, …) while the pool stays engine-generic. All factories build
+/// the same [`EngineKind`] — fidelity is a property of the serve, not
+/// of an individual chip.
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    factories: Vec<EngineFactory>,
+}
+
+impl PoolSpec {
+    /// Pool of `chips` identical chips at operating point `cfg`.
+    ///
+    /// # Panics
+    /// If `chips` is 0.
+    pub fn homogeneous(cfg: ArchConfig, kind: EngineKind, chips: usize) -> Self {
+        assert!(chips >= 1, "need at least one chip");
+        Self { factories: (0..chips).map(|_| EngineFactory::new(cfg.clone(), kind)).collect() }
+    }
+
+    /// Heterogeneous pool: one chip per `ArchConfig`, in order.
+    ///
+    /// # Panics
+    /// If `cfgs` is empty.
+    pub fn heterogeneous(cfgs: Vec<ArchConfig>, kind: EngineKind) -> Self {
+        assert!(!cfgs.is_empty(), "need at least one chip");
+        Self { factories: cfgs.into_iter().map(|cfg| EngineFactory::new(cfg, kind)).collect() }
+    }
+
+    /// Pool of `chips` chips sharing an existing factory's operating
+    /// point and kind.
+    ///
+    /// # Panics
+    /// If `chips` is 0.
+    pub fn replicate(factory: EngineFactory, chips: usize) -> Self {
+        assert!(chips >= 1, "need at least one chip");
+        Self { factories: vec![factory; chips] }
+    }
+
+    /// Number of chips in the pool.
+    pub fn chips(&self) -> usize {
+        self.factories.len()
+    }
+
+    /// The factory (operating point) of chip `chip`.
+    pub fn factory(&self, chip: usize) -> &EngineFactory {
+        &self.factories[chip]
+    }
+
+    /// All per-chip factories, in chip order.
+    pub fn factories(&self) -> &[EngineFactory] {
+        &self.factories
+    }
+
+    /// Engine kind every chip in the pool builds.
+    pub fn kind(&self) -> EngineKind {
+        self.factories[0].kind()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -648,6 +708,27 @@ mod tests {
             ea.stats, eb.stats,
             "structurally different network must be re-costed, not served stale"
         );
+    }
+
+    #[test]
+    fn pool_spec_carries_one_operating_point_per_chip() {
+        let mut fat = ArchConfig::paper();
+        fat.capacity_mb = 64;
+        let mut thin = ArchConfig::paper();
+        thin.capacity_mb = 16;
+        thin.bus_width_bits = 32;
+        let pool = PoolSpec::heterogeneous(vec![fat, thin], EngineKind::Analytic);
+        assert_eq!(pool.chips(), 2);
+        assert_eq!(pool.kind(), EngineKind::Analytic);
+        assert_eq!(pool.factory(0).cfg().capacity_mb, 64);
+        assert_eq!(pool.factory(1).cfg().capacity_mb, 16);
+        assert_eq!(pool.factory(1).cfg().bus_width_bits, 32);
+        let homo = PoolSpec::homogeneous(ArchConfig::paper(), EngineKind::Functional, 3);
+        assert_eq!(homo.chips(), 3);
+        assert!(homo.factories().iter().all(|f| f.kind() == EngineKind::Functional));
+        let rep = PoolSpec::replicate(homo.factory(0).clone(), 2);
+        assert_eq!(rep.chips(), 2);
+        assert_eq!(rep.kind(), EngineKind::Functional);
     }
 
     #[test]

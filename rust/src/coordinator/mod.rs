@@ -16,11 +16,12 @@
 //!   generate the paper's figures.
 //!
 //! On top sits the [`serve`](mod@serve) subsystem: the batched
-//! multi-chip serving runtime (dynamic batcher → shard router →
-//! weight-resident engine pools built by an [`engine::EngineFactory`])
-//! that models the Table 3 steady-state deployment for either engine,
-//! plus a hybrid mode that serves analytically and spot-checks against
-//! functional replays.
+//! multi-chip serving runtime (per-network SLO batching lanes →
+//! cost-aware shard router scheduling on closed-form batching laws →
+//! weight-resident engine pools built by an [`engine::EngineFactory`],
+//! one `ArchConfig` per chip) that models the Table 3 steady-state
+//! deployment for either engine, plus a hybrid mode that serves
+//! analytically and spot-checks against functional replays.
 
 pub mod analytic;
 pub mod engine;
@@ -30,11 +31,14 @@ pub mod serve;
 pub use analytic::{AnalyticModel, Calibration};
 pub use engine::{
     AnalyticEngine, EngineFactory, EngineKind, Execution, ExecutionPlan, Fidelity,
-    InferenceEngine,
+    InferenceEngine, PoolSpec,
 };
 pub use functional::FunctionalEngine;
-pub use serve::serve;
-pub use serve::{Completion, EngineMode, Request, ServeConfig, ServeReport, SpotCheck};
+pub use serve::{serve, serve_pool};
+pub use serve::{
+    BatchLaw, Completion, CostTable, EngineMode, NetworkReport, Request, ServeConfig,
+    ServeReport, ServedNetwork, SloPolicy, SpotCheck,
+};
 
 use crate::arch::area::AreaModel;
 use crate::arch::config::ArchConfig;

@@ -85,6 +85,11 @@ impl DynamicBatcher {
         self.pending.len()
     }
 
+    /// The batching deadline this batcher flushes on (ns).
+    pub fn deadline_ns(&self) -> f64 {
+        self.deadline_ns
+    }
+
     /// Arrival time of the oldest pending request, if any (ns).
     pub fn oldest_arrival_ns(&self) -> Option<f64> {
         self.pending.first().map(|&(_, t)| t)
@@ -139,13 +144,125 @@ impl DynamicBatcher {
     }
 }
 
+/// Per-network SLO flush lanes: one [`DynamicBatcher`] per served
+/// network, each with its own batching deadline, sharing one size
+/// target. Requests land on the lane their [`Request::net`] tag names,
+/// so an AlexNet stream batching under a relaxed deadline never delays
+/// a latency-critical small-preset stream sharing the pool — the
+/// per-network SLO is enforced *by construction*: callers poll every
+/// lane before each push (and before the drain), so no request can sit
+/// in the batcher past its own lane's deadline on the simulated clock.
+///
+/// Like the single batcher it wraps, the lane set is a pure state
+/// machine over simulated nanoseconds, fully deterministic: due lanes
+/// flush in expiry order (ties by lane index) so downstream routing
+/// sees one reproducible batch sequence.
+#[derive(Debug)]
+pub struct SloBatcher {
+    lanes: Vec<DynamicBatcher>,
+}
+
+impl SloBatcher {
+    /// One lane per entry of `lane_deadlines_ns`, all sharing the
+    /// `max_batch` size target.
+    ///
+    /// # Panics
+    /// If there are no lanes, `max_batch` is 0, or any deadline is
+    /// negative/NaN.
+    pub fn new(lane_deadlines_ns: &[f64], max_batch: usize) -> Self {
+        assert!(!lane_deadlines_ns.is_empty(), "need at least one network lane");
+        Self {
+            lanes: lane_deadlines_ns.iter().map(|&d| DynamicBatcher::new(max_batch, d)).collect(),
+        }
+    }
+
+    /// Number of network lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Requests currently waiting across all lanes.
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(DynamicBatcher::pending).sum()
+    }
+
+    /// Batching deadline of lane `net` (ns).
+    pub fn lane_deadline_ns(&self, net: usize) -> f64 {
+        self.lanes[net].deadline_ns()
+    }
+
+    /// Accept a request arriving at `now_ns` on its network's lane.
+    /// Returns `(net, flush)` when the arrival fills that lane to the
+    /// size target. Call [`poll`](Self::poll) first, as with the single
+    /// batcher.
+    ///
+    /// # Panics
+    /// If the request's `net` tag names no lane.
+    pub fn push(&mut self, req: Request, now_ns: f64) -> Option<(usize, Flush)> {
+        let net = req.net;
+        assert!(net < self.lanes.len(), "request {} tagged with unknown network {net}", req.id);
+        self.lanes[net].push(req, now_ns).map(|f| (net, f))
+    }
+
+    /// Fire every lane's deadline timer at `now_ns`: all lanes whose
+    /// oldest request is due flush, each stamped at its own exact
+    /// expiry, emitted in expiry order (ties by lane index).
+    pub fn poll(&mut self, now_ns: f64) -> Vec<(usize, Flush)> {
+        let mut due: Vec<(f64, usize)> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, lane)| {
+                lane.oldest_arrival_ns().map(|t| (t + lane.deadline_ns(), i))
+            })
+            .filter(|&(expiry, _)| expiry <= now_ns)
+            .collect();
+        due.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        due.into_iter()
+            .map(|(_, i)| (i, self.lanes[i].poll(now_ns).expect("due lane flushes")))
+            .collect()
+    }
+
+    /// End-of-stream: flush every lane's remainder at `now_ns`, in lane
+    /// order.
+    pub fn drain(&mut self, now_ns: f64) -> Vec<(usize, Flush)> {
+        self.lanes
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, lane)| lane.drain(now_ns).map(|f| (i, f)))
+            .collect()
+    }
+
+    /// Fold of the per-lane queue counters: counts sum; the high-water
+    /// marks (`max_queue_depth`, `max_batch`) are per-lane maxima.
+    pub fn counters(&self) -> QueueCounters {
+        let mut total = QueueCounters::default();
+        for lane in &self.lanes {
+            let c = &lane.counters;
+            total.enqueued += c.enqueued;
+            total.batches += c.batches;
+            total.size_flushes += c.size_flushes;
+            total.deadline_flushes += c.deadline_flushes;
+            total.drain_flushes += c.drain_flushes;
+            total.stalled_batches += c.stalled_batches;
+            total.max_queue_depth = total.max_queue_depth.max(c.max_queue_depth);
+            total.max_batch = total.max_batch.max(c.max_batch);
+        }
+        total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cnn::tensor::QTensor;
 
     fn req(id: u64) -> Request {
-        Request { id, image: QTensor::random(1, 4, 6, 2, id) }
+        Request { id, net: 0, image: QTensor::random(1, 4, 6, 2, id) }
+    }
+
+    fn req_for(id: u64, net: usize) -> Request {
+        Request { id, net, image: QTensor::random(1, 4, 6, 2, id) }
     }
 
     #[test]
@@ -205,5 +322,77 @@ mod tests {
         b.push(req(4), 4.0);
         assert_eq!(b.counters.max_queue_depth, 4);
         assert_eq!(b.counters.enqueued, 5);
+    }
+
+    #[test]
+    fn slo_lanes_flush_on_their_own_deadlines() {
+        // Lane 0 tolerates 1 ms, lane 1 only 100 ns: a request on each
+        // lane at t=0, and by t=500 only lane 1's deadline has expired.
+        let mut b = SloBatcher::new(&[1e6, 100.0], 8);
+        assert!(b.push(req_for(0, 0), 0.0).is_none());
+        assert!(b.push(req_for(1, 1), 0.0).is_none());
+        assert_eq!(b.pending(), 2);
+        let flushed = b.poll(500.0);
+        assert_eq!(flushed.len(), 1);
+        let (net, f) = &flushed[0];
+        assert_eq!(*net, 1, "only the tight lane is due");
+        assert_eq!(f.cause, FlushCause::Deadline);
+        assert_eq!(f.at_ns, 100.0, "stamped at the lane's exact expiry");
+        assert_eq!(b.pending(), 1, "lane 0 still holds its request");
+        // The drain empties the relaxed lane.
+        let drained = b.drain(600.0);
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].0, 0);
+        assert_eq!(drained[0].1.cause, FlushCause::Drain);
+    }
+
+    #[test]
+    fn slo_lanes_fill_independently() {
+        // Size target 2, interleaved arrivals: each lane fills from its
+        // own requests only.
+        let mut b = SloBatcher::new(&[1e6, 1e6], 2);
+        assert!(b.push(req_for(0, 0), 0.0).is_none());
+        assert!(b.push(req_for(1, 1), 1.0).is_none());
+        let (net, f) = b.push(req_for(2, 0), 2.0).expect("lane 0 fills");
+        assert_eq!(net, 0);
+        assert_eq!(f.cause, FlushCause::Size);
+        assert_eq!(f.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        let (net, f) = b.push(req_for(3, 1), 3.0).expect("lane 1 fills");
+        assert_eq!(net, 1);
+        assert_eq!(f.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn slo_poll_emits_due_lanes_in_expiry_order() {
+        // Lane 1 (50 ns from t=0) expires before lane 0 (100 ns from
+        // t=0); polled late, both flush, earliest expiry first.
+        let mut b = SloBatcher::new(&[100.0, 50.0], 8);
+        b.push(req_for(0, 0), 0.0);
+        b.push(req_for(1, 1), 0.0);
+        let flushed = b.poll(1e6);
+        let order: Vec<(usize, f64)> = flushed.iter().map(|(n, f)| (*n, f.at_ns)).collect();
+        assert_eq!(order, vec![(1, 50.0), (0, 100.0)]);
+    }
+
+    #[test]
+    fn slo_counters_fold_across_lanes() {
+        let mut b = SloBatcher::new(&[1e6, 1e6], 2);
+        b.push(req_for(0, 0), 0.0);
+        b.push(req_for(1, 0), 1.0);
+        b.push(req_for(2, 1), 2.0);
+        b.drain(10.0);
+        let c = b.counters();
+        assert_eq!(c.enqueued, 3);
+        assert_eq!(c.batches, 2);
+        assert_eq!(c.size_flushes, 1);
+        assert_eq!(c.drain_flushes, 1);
+        assert_eq!(c.max_batch, 2, "per-lane maximum, not a sum");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown network")]
+    fn slo_rejects_requests_for_unknown_lanes() {
+        let mut b = SloBatcher::new(&[1e6], 8);
+        b.push(req_for(0, 1), 0.0);
     }
 }

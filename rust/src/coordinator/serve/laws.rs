@@ -1,0 +1,138 @@
+//! Closed-form batching laws, derived from the analytic op streams.
+//!
+//! Serving a batch of `n` requests on one weight-resident chip costs
+//! exactly one *cold* inference (weights streamed over chip I/O — the
+//! paper's latency condition) plus `n − 1` *warm* inferences (weights
+//! resident — Table 3's steady-state throughput condition):
+//!
+//! ```text
+//!   latency(n) = cold + (n − 1) · warm          (energy analogous)
+//!   energy/request(n) = cold_e/n + (1 − 1/n) · warm_e  →  warm_e
+//! ```
+//!
+//! [`BatchLaw`] evaluates both curves from two
+//! [`AnalyticModel`](crate::coordinator::analytic::AnalyticModel)
+//! evaluations (`weights_resident` off and on) — the same closed forms
+//! [`AnalyticEngine`](crate::coordinator::engine::AnalyticEngine)
+//! synthesizes per-request stats from, so an analytic serve reproduces
+//! the law *exactly* (up to floating-point summation order) and the
+//! scheduler can be verified against the cost model it schedules by:
+//! the serve runtime builds its routing
+//! [`CostTable`](super::router::CostTable) from these laws, and the
+//! batching-law tests assert the simulated aggregates land back on the
+//! curves.
+
+use crate::arch::config::ArchConfig;
+use crate::cnn::network::Network;
+use crate::cnn::ref_exec::ModelParams;
+use crate::coordinator::analytic::AnalyticModel;
+
+/// Weight precision a serve synthesizes `net` at: the widest supplied
+/// conv-kernel precision, falling back to the network's input
+/// precision — the identical rule
+/// [`AnalyticEngine`](crate::coordinator::engine::AnalyticEngine)
+/// applies per request, so laws derived here match the engine's cache.
+pub fn serving_wbits(net: &Network, params: Option<&ModelParams>) -> u8 {
+    params
+        .and_then(|p| p.conv_weights.iter().map(|k| k.bits).max())
+        .unwrap_or(net.input_bits)
+}
+
+/// The closed-form batch-latency / energy-amortisation law of one
+/// network on one chip operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchLaw {
+    /// Latency of one inference with the weight stream charged (ns).
+    pub cold_latency_ns: f64,
+    /// Latency of one inference with weights resident (ns).
+    pub warm_latency_ns: f64,
+    /// Energy of one inference with the weight stream charged (fJ).
+    pub cold_energy_fj: f64,
+    /// Energy of one inference with weights resident (fJ).
+    pub warm_energy_fj: f64,
+}
+
+impl BatchLaw {
+    /// Derive the law for `net` at weight precision `wbits` on the
+    /// `cfg` operating point: two closed-form evaluations, one per
+    /// residency state, default calibration (the state the serve
+    /// pool's engines run in).
+    pub fn derive(cfg: &ArchConfig, net: &Network, wbits: u8) -> Self {
+        let mut cold_model = AnalyticModel::new(cfg.clone());
+        cold_model.cal.weights_resident = false;
+        let mut warm_model = AnalyticModel::new(cfg.clone());
+        warm_model.cal.weights_resident = true;
+        let cold = cold_model.network_stats(net, wbits);
+        let warm = warm_model.network_stats(net, wbits);
+        Self {
+            cold_latency_ns: cold.total_latency_ns(),
+            warm_latency_ns: warm.total_latency_ns(),
+            cold_energy_fj: cold.total_energy_fj(),
+            warm_energy_fj: warm.total_energy_fj(),
+        }
+    }
+
+    /// Serial latency of a batch of `n` on one chip: one cold inference
+    /// then `n − 1` warm ones (0 for an empty batch).
+    pub fn batch_latency_ns(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.cold_latency_ns + (n as f64 - 1.0) * self.warm_latency_ns
+        }
+    }
+
+    /// Energy of a batch of `n` on one chip (fJ; 0 for an empty batch).
+    pub fn batch_energy_fj(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.cold_energy_fj + (n as f64 - 1.0) * self.warm_energy_fj
+        }
+    }
+
+    /// Amortised energy per request at batch size `n` (fJ): decreases
+    /// monotonically toward the warm floor as the one-time weight
+    /// stream spreads across the batch.
+    pub fn energy_per_request_fj(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.batch_energy_fj(n) / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::network::small_cnn;
+
+    #[test]
+    fn law_is_anchored_at_cold_and_amortises_toward_warm() {
+        let net = small_cnn(3);
+        let law = BatchLaw::derive(&ArchConfig::paper(), &net, 3);
+        assert!(law.warm_latency_ns < law.cold_latency_ns, "resident weights skip the stream");
+        assert!(law.warm_energy_fj < law.cold_energy_fj);
+        assert_eq!(law.batch_latency_ns(1), law.cold_latency_ns);
+        assert_eq!(law.batch_latency_ns(0), 0.0);
+        let l4 = law.batch_latency_ns(4);
+        assert!((l4 - (law.cold_latency_ns + 3.0 * law.warm_latency_ns)).abs() < 1e-9 * l4);
+        // Per-request energy decreases monotonically and stays above
+        // the warm floor.
+        let e1 = law.energy_per_request_fj(1);
+        let e4 = law.energy_per_request_fj(4);
+        let e16 = law.energy_per_request_fj(16);
+        assert!(e1 > e4 && e4 > e16, "{e1} {e4} {e16}");
+        assert!(e16 > law.warm_energy_fj);
+    }
+
+    #[test]
+    fn serving_wbits_prefers_supplied_weights() {
+        use crate::cnn::ref_exec::ModelParams;
+        let net = small_cnn(3);
+        assert_eq!(serving_wbits(&net, None), net.input_bits);
+        let params = ModelParams::random(&net, 5, 9);
+        assert_eq!(serving_wbits(&net, Some(&params)), 5);
+    }
+}

@@ -9,33 +9,44 @@
 //! trait:
 //!
 //! ```text
-//!  requests ──▶ DynamicBatcher ──▶ ShardRouter ──▶ per-chip queues
-//!               (size/deadline       (deterministic   (bounded; FIFO;
-//!                flush)               least-loaded)    backpressure)
-//!                                                        │
-//!                                      weight-resident   ▼
-//!                         ServeReport ◀── engine pool (1 chip = 1
-//!                                          engine from EngineFactory:
-//!                                          functional or analytic,
-//!                                          weights streamed once)
+//!  requests ──▶ SloBatcher ─────▶ ShardRouter ──▶ per-chip queues
+//!  (tagged      (one flush lane     (cost-aware      (bounded; FIFO;
+//!   with a       per network:        earliest-        backpressure)
+//!   network)     size / per-lane     finish, from        │
+//!                SLO deadline)       BatchLaw costs)     ▼
+//!                                      weight-resident engine pool
+//!                         ServeReport ◀── (PoolSpec: one EngineFactory
+//!                          (per-net         per chip — chips may be
+//!                           SLO accounts)   heterogeneous; weights
+//!                                           streamed once per switch)
 //! ```
 //!
-//! * [`batcher::DynamicBatcher`] groups requests until a batch fills
-//!   (size flush) or the oldest request hits the deadline (deadline
-//!   flush) — the throughput/tail-latency dial.
+//! * [`batcher::SloBatcher`] keeps one [`batcher::DynamicBatcher`]
+//!   flush lane per served network: a lane flushes when it fills (size
+//!   flush) or when its oldest request hits *that network's* SLO
+//!   deadline ([`SloPolicy`]) — a latency-critical network no longer
+//!   waits behind a throughput-oriented one.
 //! * [`router::ShardRouter`] maps each batch onto one of N simulated
-//!   chips, deterministically (least routed work, lowest index ties).
+//!   chips deterministically, picking the earliest estimated finish
+//!   from a [`router::CostTable`] of per-(chip, network) cold/warm
+//!   service times synthesized by [`laws::BatchLaw`] — so a fast chip
+//!   absorbs more work and networks stick to chips already holding
+//!   their weights. Identical chips degrade to the legacy least-loaded
+//!   round-robin.
 //! * [`pool`] executes each chip's batches on its own weight-resident
-//!   engine built by an
-//!   [`EngineFactory`](crate::coordinator::engine::EngineFactory)
-//!   (one host thread per chip; a bit-accurate chip's stream is
-//!   further split across worker threads with a deterministic,
+//!   engine built from that chip's own factory in the
+//!   [`PoolSpec`](crate::coordinator::engine::PoolSpec) — chips may
+//!   model different operating points (capacity, bus width, …). One
+//!   host thread per chip; a single-network bit-accurate chip's stream
+//!   is further split across worker threads
+//!   ([`ServeConfig::host_workers`]) with a deterministic,
 //!   bit-identical merge — host wall time is the only thing that
-//!   changes) and schedules them on the simulated clock behind a
+//!   changes. Batches are scheduled on the simulated clock behind a
 //!   bounded queue ([`pool::timeline`]), so a saturated chip exerts
 //!   backpressure instead of queueing unboundedly.
 //! * [`report::ServeReport`] rolls per-request completions up into
-//!   per-chip and aggregate latency/energy accounts and can
+//!   per-chip, per-network (SLO deadline violations, lane waits) and
+//!   aggregate latency/energy accounts and can
 //!   [`verify`](report::ServeReport::verify) that every roll-up equals
 //!   the fold of its parts.
 //!
@@ -51,46 +62,86 @@
 //! host threads only parallelise the simulation work itself.
 
 pub mod batcher;
+pub mod laws;
 pub mod pool;
 pub mod report;
 pub mod router;
 
-pub use batcher::{DynamicBatcher, Flush, FlushCause};
+pub use batcher::{DynamicBatcher, Flush, FlushCause, SloBatcher};
+pub use laws::{serving_wbits, BatchLaw};
 pub use pool::{BatchTiming, PlannedBatch};
-pub use report::{ChipReport, Completion, ServeReport, SpotCheck};
-pub use router::ShardRouter;
+pub use report::{ChipReport, Completion, NetworkReport, ServeReport, SpotCheck};
+pub use router::{CostTable, ShardRouter};
 
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use crate::arch::config::ArchConfig;
 use crate::cnn::network::Network;
 use crate::cnn::ref_exec::ModelParams;
 use crate::cnn::tensor::QTensor;
-use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine};
+use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine, PoolSpec};
+
+use report::NetworkMeta;
 
 /// One inference request.
 #[derive(Debug)]
 pub struct Request {
-    /// Caller-assigned id.
+    /// Caller-assigned id — unique across the stream (the hybrid
+    /// spot-check looks completions up by id).
     pub id: u64,
+    /// Network this request targets: an index into the serve's network
+    /// slice, and the SLO lane it queues in.
+    pub net: usize,
     /// Input image.
     pub image: QTensor,
 }
 
 impl Request {
-    /// Work weight of the request for routing: its input volume in bits.
+    /// Work weight of the request: its input volume in bits.
     pub fn work_bits(&self) -> u64 {
         (self.image.c * self.image.h * self.image.w * self.image.bits as usize) as u64
     }
 
-    /// Number `images` into a request stream: ids `0..n` in order.
+    /// Number `images` into a single-network request stream: ids
+    /// `0..n` in order, all targeting network 0.
     pub fn stream(images: Vec<QTensor>) -> Vec<Request> {
         images
             .into_iter()
             .enumerate()
-            .map(|(i, image)| Request { id: i as u64, image })
+            .map(|(i, image)| Request { id: i as u64, net: 0, image })
             .collect()
     }
+
+    /// Interleave one image stream per network into a single arrival
+    /// stream with globally unique ids: network 0's first image, then
+    /// network 1's first, …, then every second image, and so on until
+    /// all streams drain (streams may differ in length).
+    pub fn interleave(streams: Vec<Vec<QTensor>>) -> Vec<Request> {
+        let mut queues: Vec<VecDeque<QTensor>> = streams.into_iter().map(Into::into).collect();
+        let mut out = Vec::new();
+        let mut id = 0u64;
+        while queues.iter().any(|q| !q.is_empty()) {
+            for (net, q) in queues.iter_mut().enumerate() {
+                if let Some(image) = q.pop_front() {
+                    out.push(Request { id, net, image });
+                    id += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One network a pool serve targets: the network plus its optional
+/// model parameters (required by bit-accurate engines; synthesized
+/// engines use them only for the weight precision).
+#[derive(Debug, Clone, Copy)]
+pub struct ServedNetwork<'a> {
+    /// The network.
+    pub net: &'a Network,
+    /// Its model parameters, when available.
+    pub params: Option<&'a ModelParams>,
 }
 
 /// Which engine the serving pool executes requests on.
@@ -138,18 +189,68 @@ impl EngineMode {
     }
 }
 
+/// Per-network service-level objectives: an optional batching deadline
+/// per network, falling back to the serve's global
+/// [`deadline_us`](ServeConfig::deadline_us). Each network's deadline
+/// bounds how long any of its requests may sit in its own
+/// [`SloBatcher`] flush lane.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SloPolicy {
+    /// `deadlines_us[net]` overrides the global batching deadline for
+    /// that network (simulated µs); `None` — or a missing trailing
+    /// entry — inherits the global one.
+    pub deadlines_us: Vec<Option<f64>>,
+}
+
+impl SloPolicy {
+    /// Every network inherits the global deadline.
+    pub fn global() -> Self {
+        Self::default()
+    }
+
+    /// Builder: pin network `net`'s lane deadline to `us` simulated µs.
+    pub fn with_deadline_us(mut self, net: usize, us: f64) -> Self {
+        if self.deadlines_us.len() <= net {
+            self.deadlines_us.resize(net + 1, None);
+        }
+        self.deadlines_us[net] = Some(us);
+        self
+    }
+
+    /// Effective lane deadline of network `net` (µs), given the
+    /// serve's global deadline.
+    pub fn deadline_us(&self, net: usize, global_us: f64) -> f64 {
+        self.deadlines_us.get(net).copied().flatten().unwrap_or(global_us)
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        for d in self.deadlines_us.iter().flatten() {
+            if d.is_nan() || *d < 0.0 {
+                return Err("per-network deadline must be a non-negative time".into());
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Configuration of the serving runtime.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Simulated PIM chips (each a full weight replica with its own
-    /// engine).
+    /// engine). [`serve`] builds a homogeneous pool of this size;
+    /// [`serve_pool`] takes its chip count from the supplied
+    /// [`PoolSpec`] instead and ignores this field.
     pub chips: usize,
     /// Batch size target: a batch flushes as soon as it holds this many
     /// requests.
     pub max_batch: usize,
-    /// Batching deadline in simulated microseconds: no request waits
-    /// longer than this in the batcher.
+    /// Global batching deadline in simulated microseconds: no request
+    /// waits longer than this in its flush lane, unless its network
+    /// overrides it via [`slo`](Self::slo).
     pub deadline_us: f64,
+    /// Per-network deadline overrides (SLO lanes).
+    pub slo: SloPolicy,
     /// Per-chip queue capacity in batches (waiting + in service). A
     /// flush into a full queue stalls — backpressure.
     pub queue_depth: usize,
@@ -158,6 +259,11 @@ pub struct ServeConfig {
     pub arrival_interval_ns: f64,
     /// Which engine the pool serves on.
     pub engine: EngineMode,
+    /// Host worker threads per chip for bit-accurate serving (`None`
+    /// picks the automatic budget: host cores / chips, overridable via
+    /// the `NANDSPIN_HOST_WORKERS` environment variable). Changes host
+    /// wall time only — results are bit-identical for every count.
+    pub host_workers: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -166,9 +272,11 @@ impl Default for ServeConfig {
             chips: 4,
             max_batch: 8,
             deadline_us: 50.0,
+            slo: SloPolicy::global(),
             queue_depth: 2,
             arrival_interval_ns: 0.0,
             engine: EngineMode::Functional,
+            host_workers: None,
         }
     }
 }
@@ -185,11 +293,15 @@ impl ServeConfig {
         if self.deadline_us.is_nan() || self.deadline_us < 0.0 {
             return Err("deadline must be a non-negative time".into());
         }
+        self.slo.validate()?;
         if self.queue_depth == 0 {
             return Err("queue depth must be >= 1".into());
         }
         if self.arrival_interval_ns.is_nan() || self.arrival_interval_ns < 0.0 {
             return Err("arrival interval must be a non-negative time".into());
+        }
+        if self.host_workers == Some(0) {
+            return Err("host worker budget must be >= 1 (or None for automatic)".into());
         }
         if let EngineMode::Hybrid { check_every } = self.engine {
             if check_every == 0 {
@@ -200,7 +312,10 @@ impl ServeConfig {
     }
 }
 
-/// Serve `requests` through the batched multi-chip runtime.
+/// Serve a single-network request stream through the batched
+/// multi-chip runtime on a homogeneous pool of `scfg.chips` chips at
+/// operating point `cfg` — the classic entry point, now a thin wrapper
+/// over [`serve_pool`].
 ///
 /// Requests arrive on the simulated clock at `scfg.arrival_interval_ns`
 /// spacing (in the given order); the stream drains at the last arrival.
@@ -224,62 +339,136 @@ pub fn serve(
     requests: Vec<Request>,
 ) -> ServeReport {
     scfg.validate().expect("invalid serve config");
-    let factory = EngineFactory::new(cfg.clone(), scfg.engine.serving_kind());
-    let eplan = factory.plan(net);
-    assert!(
-        eplan.supported,
-        "{} engine cannot serve {}: {}",
-        factory.kind().label(),
-        net.name,
-        eplan.unsupported_reason.as_deref().unwrap_or("unsupported network"),
-    );
-    if scfg.engine.bit_accurate() {
-        assert!(params.is_some(), "functional serving needs model parameters");
+    let pool = PoolSpec::homogeneous(cfg.clone(), scfg.engine.serving_kind(), scfg.chips);
+    serve_pool(&pool, scfg, &[ServedNetwork { net, params }], requests)
+}
+
+/// Serve a multi-network request stream across a (possibly
+/// heterogeneous) chip pool, with one SLO flush lane per network.
+///
+/// `nets[i]` is the network requests tagged `net == i` target; each
+/// network batches in its own [`SloBatcher`] lane under its own
+/// deadline ([`ServeConfig::slo`], falling back to the global one).
+/// Batches route to chips by earliest estimated finish, where the
+/// estimates are the closed-form [`BatchLaw`] cold/warm service times
+/// of each network on each chip's own operating point — so routing is
+/// engine-agnostic and a serve's schedule is pinned to the analytic
+/// model it is verified against. The pool's chip count overrides
+/// `scfg.chips`.
+///
+/// # Panics
+/// If `scfg` is invalid, `nets` is empty, a request targets an unknown
+/// network, any chip's engine cannot run any of the networks, or a
+/// bit-accurate mode is missing a network's parameters.
+pub fn serve_pool(
+    pool: &PoolSpec,
+    scfg: &ServeConfig,
+    nets: &[ServedNetwork<'_>],
+    requests: Vec<Request>,
+) -> ServeReport {
+    scfg.validate().expect("invalid serve config");
+    assert!(!nets.is_empty(), "need at least one network to serve");
+    for sn in nets {
+        for chip in 0..pool.chips() {
+            let eplan = pool.factory(chip).plan(sn.net);
+            assert!(
+                eplan.supported,
+                "chip {chip}'s {} engine cannot serve {}: {}",
+                pool.factory(chip).kind().label(),
+                sn.net.name,
+                eplan.unsupported_reason.as_deref().unwrap_or("unsupported network"),
+            );
+        }
+        if scfg.engine.bit_accurate() {
+            assert!(
+                sn.params.is_some(),
+                "functional serving needs model parameters for {}",
+                sn.net.name
+            );
+        }
+    }
+    for r in &requests {
+        assert!(
+            r.net < nets.len(),
+            "request {} targets network {} but only {} are being served",
+            r.id,
+            r.net,
+            nets.len()
+        );
     }
     let started = Instant::now();
 
+    // Routing costs: the closed-form batching law of every network on
+    // every chip's own operating point. Derived for every engine mode,
+    // so functional, analytic and hybrid serves of one stream share
+    // the same schedule.
+    let costs = CostTable::new(
+        (0..pool.chips())
+            .map(|chip| {
+                nets.iter()
+                    .map(|sn| {
+                        let wbits = serving_wbits(sn.net, sn.params);
+                        let law = BatchLaw::derive(pool.factory(chip).cfg(), sn.net, wbits);
+                        (law.cold_latency_ns, law.warm_latency_ns)
+                    })
+                    .collect()
+            })
+            .collect(),
+    );
+
     // Hybrid: sample every K-th request (by stream position) for the
     // functional replay, before the planner consumes the stream — but
-    // only when the replay is actually possible (params supplied and
-    // the network fits the bit-accurate path); otherwise skip the
-    // clones and degrade to pure analytic.
-    let replay_possible = matches!(scfg.engine, EngineMode::Hybrid { .. })
-        && params.is_some()
-        && EngineFactory::new(cfg.clone(), EngineKind::Functional).plan(net).supported;
-    let samples: Vec<(u64, QTensor)> = match scfg.engine {
-        EngineMode::Hybrid { check_every } if replay_possible => requests
+    // only for networks where the replay is actually possible (params
+    // supplied and the network fits some chip's bit-accurate path);
+    // otherwise skip the clones and degrade to pure analytic.
+    let replayable: Vec<bool> = nets
+        .iter()
+        .map(|sn| {
+            sn.params.is_some()
+                && pool.factories().iter().any(|f| {
+                    EngineFactory::new(f.cfg().clone(), EngineKind::Functional)
+                        .plan(sn.net)
+                        .supported
+                })
+        })
+        .collect();
+    let samples: Vec<(u64, usize, QTensor)> = match scfg.engine {
+        EngineMode::Hybrid { check_every } => requests
             .iter()
             .enumerate()
-            .filter(|(i, _)| i % check_every == 0)
-            .map(|(_, r)| (r.id, r.image.clone()))
+            .filter(|(i, r)| i % check_every == 0 && replayable[r.net])
+            .map(|(_, r)| (r.id, r.net, r.image.clone()))
             .collect(),
         _ => Vec::new(),
     };
 
-    // Plan: walk the arrival stream through batcher + router on the
-    // simulated clock. Deterministic — no execution yet.
-    let mut batcher = DynamicBatcher::new(scfg.max_batch, scfg.deadline_us * 1e3);
-    let mut router = ShardRouter::new(scfg.chips);
+    // Plan: walk the arrival stream through the SLO lanes + router on
+    // the simulated clock. Deterministic — no execution yet.
+    let lane_deadlines_ns: Vec<f64> = (0..nets.len())
+        .map(|i| scfg.slo.deadline_us(i, scfg.deadline_us) * 1e3)
+        .collect();
+    let mut batcher = SloBatcher::new(&lane_deadlines_ns, scfg.max_batch);
+    let mut router = ShardRouter::new(costs);
     let mut planned: Vec<PlannedBatch> = Vec::new();
     let mut seq = 0usize;
     let mut last_arrival_ns = 0.0f64;
     for (i, req) in requests.into_iter().enumerate() {
         let t = i as f64 * scfg.arrival_interval_ns;
         last_arrival_ns = t;
-        if let Some(f) = batcher.poll(t) {
-            planned.push(plan(f, &mut router, &mut seq));
+        for (lane, f) in batcher.poll(t) {
+            planned.push(plan(lane, f, &mut router, &mut seq));
         }
-        if let Some(f) = batcher.push(req, t) {
-            planned.push(plan(f, &mut router, &mut seq));
+        if let Some((lane, f)) = batcher.push(req, t) {
+            planned.push(plan(lane, f, &mut router, &mut seq));
         }
     }
-    if let Some(f) = batcher.drain(last_arrival_ns) {
-        planned.push(plan(f, &mut router, &mut seq));
+    for (lane, f) in batcher.drain(last_arrival_ns) {
+        planned.push(plan(lane, f, &mut router, &mut seq));
     }
-    let counters = batcher.counters;
+    let counters = batcher.counters();
 
     // Execute: one host thread per chip, weight-resident engines.
-    let results = pool::execute(&factory, net, params, scfg.chips, planned);
+    let results = pool::execute_pool(pool, nets, planned, scfg.host_workers);
 
     // Account: schedule each chip's batches behind its bounded queue.
     let timings: Vec<Vec<BatchTiming>> = results
@@ -290,28 +479,34 @@ pub fn serve(
             pool::timeline(&flushes, &services, scfg.queue_depth)
         })
         .collect();
+    let nets_meta: Vec<NetworkMeta> = nets
+        .iter()
+        .zip(&lane_deadlines_ns)
+        .map(|(sn, &deadline_ns)| NetworkMeta { name: sn.net.name.clone(), deadline_ns })
+        .collect();
     let mut report = ServeReport::assemble(
         scfg.engine,
+        nets_meta,
         results,
         timings,
         counters,
         started.elapsed().as_secs_f64(),
     );
-    if let (true, Some(params)) = (replay_possible, params) {
-        let sc = spot_check(cfg, net, params, &samples, &report);
-        report.spot_check = sc;
+    if !samples.is_empty() {
+        report.spot_check = spot_check(pool, nets, &samples, &report);
         report.wall_seconds = started.elapsed().as_secs_f64();
     }
     report
 }
 
-/// Route one flushed batch and stamp it with its sequence number.
-fn plan(flush: Flush, router: &mut ShardRouter, seq: &mut usize) -> PlannedBatch {
-    let work: u64 = flush.requests.iter().map(Request::work_bits).sum();
-    let chip = router.route(work);
+/// Route one flushed batch of network `net` and stamp it with its
+/// sequence number.
+fn plan(net: usize, flush: Flush, router: &mut ShardRouter, seq: &mut usize) -> PlannedBatch {
+    let chip = router.route(net, flush.requests.len());
     let b = PlannedBatch {
         seq: *seq,
         chip,
+        net,
         cause: flush.cause,
         flush_ns: flush.at_ns,
         requests: flush.requests,
@@ -321,38 +516,58 @@ fn plan(flush: Flush, router: &mut ShardRouter, seq: &mut usize) -> PlannedBatch
     b
 }
 
-/// Replay the sampled requests on a bit-accurate functional engine and
-/// fold each replay's functional/analytic stat ratios into a
-/// [`SpotCheck`]. The caller has already established that the replay
-/// is possible (params supplied, network fits the functional path);
-/// returns `None` only for an empty sample.
+/// Lazily-built bit-accurate replay engines of the hybrid spot-check,
+/// one per (serving chip, network); `None` marks a pair whose chip
+/// operating point cannot run the network functionally.
+type ReplayEngines = HashMap<(usize, usize), Option<Box<dyn InferenceEngine>>>;
+
+/// Replay the sampled requests on bit-accurate engines at the
+/// operating point of the chip that served each sample, and fold each
+/// replay's functional/analytic stat ratios into a [`SpotCheck`].
+/// Samples whose serving chip cannot run their network functionally
+/// are skipped; returns `None` when nothing could be replayed.
 fn spot_check(
-    cfg: &ArchConfig,
-    net: &Network,
-    params: &ModelParams,
-    samples: &[(u64, QTensor)],
+    pool: &PoolSpec,
+    nets: &[ServedNetwork<'_>],
+    samples: &[(u64, usize, QTensor)],
     report: &ServeReport,
 ) -> Option<SpotCheck> {
-    if samples.is_empty() {
-        return None;
-    }
-    let mut engine = EngineFactory::new(cfg.clone(), EngineKind::Functional).build();
-    engine.make_weights_resident();
+    let mut engines: ReplayEngines = HashMap::new();
     let mut check = SpotCheck::new();
-    for (id, image) in samples {
-        let replay = engine.execute(net, Some(params), image);
-        let analytic = &report
+    for (id, net_idx, image) in samples {
+        let sn = &nets[*net_idx];
+        let Some(params) = sn.params else { continue };
+        let completion = report
             .completions
             .iter()
             .find(|c| c.id == *id)
-            .expect("sampled request completed")
-            .stats;
+            .expect("sampled request completed");
+        let entry = engines.entry((completion.chip, *net_idx)).or_insert_with(|| {
+            let factory = EngineFactory::new(
+                pool.factory(completion.chip).cfg().clone(),
+                EngineKind::Functional,
+            );
+            if factory.plan(sn.net).supported {
+                let mut engine = factory.build();
+                engine.make_weights_resident();
+                Some(engine)
+            } else {
+                None
+            }
+        });
+        let Some(engine) = entry.as_mut() else { continue };
+        let replay = engine.execute(sn.net, Some(params), image);
+        let analytic = &completion.stats;
         check.observe(
             replay.stats.total_latency_ns() / analytic.total_latency_ns().max(f64::MIN_POSITIVE),
             replay.stats.total_energy_fj() / analytic.total_energy_fj().max(f64::MIN_POSITIVE),
         );
     }
-    Some(check)
+    if check.checked == 0 {
+        None
+    } else {
+        Some(check)
+    }
 }
 
 #[cfg(test)]
@@ -465,6 +680,64 @@ mod tests {
     }
 
     #[test]
+    fn mixed_networks_serve_bit_exactly_in_their_own_lanes() {
+        // Two networks interleaved through one functional pool: every
+        // completion must be bit-exact against its *own* network's
+        // golden executor, and each network gets its own SLO account.
+        let net_a = small_cnn(3);
+        let net_b = crate::cnn::network::micro_cnn(3);
+        let params_a = ModelParams::random(&net_a, 3, 11);
+        let params_b = ModelParams::random(&net_b, 3, 12);
+        let images = |net: &Network, n: usize, seed: u64| -> Vec<QTensor> {
+            (0..n)
+                .map(|i| {
+                    QTensor::random(
+                        net.input.0,
+                        net.input.1,
+                        net.input.2,
+                        net.input_bits,
+                        seed + i as u64,
+                    )
+                })
+                .collect()
+        };
+        let reqs =
+            Request::interleave(vec![images(&net_a, 4, 200), images(&net_b, 4, 300)]);
+        let keyed: Vec<(usize, QTensor)> =
+            reqs.iter().map(|r| (r.net, r.image.clone())).collect();
+        let scfg = ServeConfig {
+            chips: 2,
+            max_batch: 2,
+            slo: SloPolicy::global().with_deadline_us(1, 5.0),
+            ..ServeConfig::default()
+        };
+        let pool =
+            PoolSpec::homogeneous(ArchConfig::paper(), EngineKind::Functional, scfg.chips);
+        let nets =
+            [ServedNetwork { net: &net_a, params: Some(&params_a) }, ServedNetwork {
+                net: &net_b,
+                params: Some(&params_b),
+            }];
+        let report = serve_pool(&pool, &scfg, &nets, reqs);
+        report.verify().expect("mixed-network identities");
+        assert_eq!(report.served(), 8);
+        assert_eq!(report.networks.len(), 2);
+        assert_eq!(report.networks[0].served, 4);
+        assert_eq!(report.networks[1].served, 4);
+        assert!((report.networks[1].deadline_ns - 5_000.0).abs() < 1e-9, "lane 1 SLO");
+        assert!(report.networks.iter().all(|n| n.deadline_violations == 0));
+        for c in &report.completions {
+            let (net_idx, image) = &keyed[c.id as usize];
+            assert_eq!(c.net, *net_idx, "completion keeps its network tag");
+            let (net, params) =
+                if c.net == 0 { (&net_a, &params_a) } else { (&net_b, &params_b) };
+            let golden = ref_exec::execute(net, params, image);
+            let output = c.output.as_ref().expect("functional mode carries outputs");
+            assert_eq!(output, golden.last().unwrap(), "request {}", c.id);
+        }
+    }
+
+    #[test]
     fn invalid_configs_are_rejected() {
         assert!(ServeConfig { chips: 0, ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { max_batch: 0, ..ServeConfig::default() }.validate().is_err());
@@ -472,6 +745,15 @@ mod tests {
         assert!(
             ServeConfig { deadline_us: f64::NAN, ..ServeConfig::default() }.validate().is_err()
         );
+        assert!(ServeConfig { host_workers: Some(0), ..ServeConfig::default() }
+            .validate()
+            .is_err());
+        assert!(ServeConfig {
+            slo: SloPolicy::global().with_deadline_us(0, f64::NAN),
+            ..ServeConfig::default()
+        }
+        .validate()
+        .is_err());
         assert!(ServeConfig {
             engine: EngineMode::Hybrid { check_every: 0 },
             ..ServeConfig::default()
@@ -485,5 +767,14 @@ mod tests {
         }
         .validate()
         .is_ok());
+    }
+
+    #[test]
+    fn slo_policy_overrides_fall_back_to_the_global_deadline() {
+        let slo = SloPolicy::global().with_deadline_us(2, 7.5);
+        assert_eq!(slo.deadline_us(0, 50.0), 50.0, "unset lane inherits");
+        assert_eq!(slo.deadline_us(2, 50.0), 7.5, "pinned lane overrides");
+        assert_eq!(slo.deadline_us(9, 50.0), 50.0, "past the vec inherits");
+        assert!(slo.validate().is_ok());
     }
 }

@@ -1,9 +1,10 @@
 //! Weight-resident engine pool and the per-chip queue timeline.
 //!
 //! Execution model: one [`InferenceEngine`] per simulated PIM chip,
-//! built by the run's [`EngineFactory`] (functional or analytic — the
-//! pool is generic over the trait) and switched into the Table 3
-//! serving condition
+//! built by that chip's own [`EngineFactory`] from the run's
+//! [`PoolSpec`] (chips may be heterogeneous — different capacities or
+//! bus widths — and the pool is generic over the engine trait) and
+//! switched into the Table 3 serving condition
 //! ([`InferenceEngine::make_weights_resident`]) so the network's
 //! weights cross chip I/O once per chip and are then reused by every
 //! request the chip serves. Chips are independent (full weight
@@ -42,10 +43,10 @@ use crate::arch::stats::Stats;
 use crate::cnn::network::Network;
 use crate::cnn::ref_exec::{ModelParams, WideTensor};
 
-use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine};
+use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine, PoolSpec};
 
 use super::batcher::FlushCause;
-use super::Request;
+use super::{Request, ServedNetwork};
 
 /// A batch after planning: flushed, routed, awaiting execution.
 #[derive(Debug)]
@@ -54,6 +55,10 @@ pub struct PlannedBatch {
     pub seq: usize,
     /// Chip the router assigned.
     pub chip: usize,
+    /// Network the batch's requests target (index into the serve's
+    /// network slice; batches are single-network by construction — one
+    /// SLO lane per network).
+    pub net: usize,
     /// Why the batcher flushed it.
     pub cause: FlushCause,
     /// Simulated flush time (ns).
@@ -82,6 +87,8 @@ pub struct ExecutedRequest {
 pub struct ExecutedBatch {
     /// Global flush sequence number.
     pub seq: usize,
+    /// Network the batch's requests target.
+    pub net: usize,
     /// Why the batcher flushed it.
     pub cause: FlushCause,
     /// Simulated flush time (ns).
@@ -112,13 +119,13 @@ pub struct ChipResult {
     pub weight_misses: u64,
 }
 
-/// Execute `planned` batches on `chips` weight-resident engines built
-/// by `factory`, one host thread per chip (bit-accurate chips
-/// additionally split their stream across an automatic worker budget —
-/// see [`execute_with_workers`]). Returns per-chip results ordered by
-/// chip index; within a chip, batches keep their flush order. `params`
-/// is required by bit-accurate engines and optional for synthesized
-/// ones.
+/// Execute `planned` batches on `chips` identical weight-resident
+/// engines built by `factory`, one host thread per chip (bit-accurate
+/// chips additionally split their stream across an automatic worker
+/// budget — see [`execute_with_workers`]). Returns per-chip results
+/// ordered by chip index; within a chip, batches keep their flush
+/// order. `params` is required by bit-accurate engines and optional
+/// for synthesized ones.
 pub fn execute(
     factory: &EngineFactory,
     net: &Network,
@@ -132,10 +139,11 @@ pub fn execute(
 /// [`execute`] with an explicit intra-chip worker count.
 ///
 /// `workers_per_chip = None` picks the automatic budget: host
-/// parallelism divided by the chip count (override with the
-/// `NANDSPIN_HOST_WORKERS` environment variable — useful for pinning
-/// benchmarks and CI). The worker split changes host wall time only;
-/// the returned results are bit-identical for every worker count.
+/// parallelism divided by the chip count (override with
+/// [`ServeConfig::host_workers`](super::ServeConfig::host_workers) or
+/// the `NANDSPIN_HOST_WORKERS` environment variable — useful for
+/// pinning benchmarks and CI). The worker split changes host wall time
+/// only; the returned results are bit-identical for every worker count.
 pub fn execute_with_workers(
     factory: &EngineFactory,
     net: &Network,
@@ -144,10 +152,32 @@ pub fn execute_with_workers(
     planned: Vec<PlannedBatch>,
     workers_per_chip: Option<usize>,
 ) -> Vec<ChipResult> {
+    let pool = PoolSpec::replicate(factory.clone(), chips.max(1));
+    execute_pool(&pool, &[ServedNetwork { net, params }], planned, workers_per_chip)
+}
+
+/// Execute `planned` batches across a (possibly heterogeneous)
+/// [`PoolSpec`]: each chip builds its engine from its own factory and
+/// serves its batches in flush order, looking each batch's network up
+/// in `nets` by the batch's `net` tag. One host thread per chip;
+/// single-network bit-accurate chips additionally split their stream
+/// across the worker budget (mixed-network chips serve sequentially —
+/// the residency ledger across network switches is inherently serial).
+///
+/// # Panics
+/// If a batch names an out-of-range chip or network.
+pub fn execute_pool(
+    pool: &PoolSpec,
+    nets: &[ServedNetwork<'_>],
+    planned: Vec<PlannedBatch>,
+    workers_per_chip: Option<usize>,
+) -> Vec<ChipResult> {
+    let chips = pool.chips();
     let workers = workers_per_chip.unwrap_or_else(|| auto_workers(chips)).max(1);
     let mut per_chip: Vec<Vec<PlannedBatch>> = (0..chips).map(|_| Vec::new()).collect();
     for b in planned {
         assert!(b.chip < chips, "router produced an out-of-range chip");
+        assert!(b.net < nets.len(), "batch names an out-of-range network");
         per_chip[b.chip].push(b);
     }
 
@@ -156,7 +186,8 @@ pub fn execute_with_workers(
             .into_iter()
             .enumerate()
             .map(|(chip, batches)| {
-                scope.spawn(move || run_chip(factory, net, params, chip, batches, workers))
+                let factory = pool.factory(chip);
+                scope.spawn(move || run_chip(factory, nets, chip, batches, workers))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("chip worker panicked")).collect()
@@ -176,36 +207,39 @@ fn auto_workers(chips: usize) -> usize {
 }
 
 /// Serve one chip's batches, splitting across up to `workers` threads
-/// when the engine is bit-accurate and there is enough work to pay for
-/// the per-worker warm-up replay (each worker needs a chunk of ≥ 2
-/// requests to amortise its one discarded warm-up run).
+/// when the engine is bit-accurate, the chip serves a single network,
+/// and there is enough work to pay for the per-worker warm-up replay
+/// (each worker needs a chunk of ≥ 2 requests to amortise its one
+/// discarded warm-up run). A chip serving several networks runs
+/// sequentially: its residency ledger depends on the exact network
+/// switch order, which a chunk split would not preserve.
 fn run_chip(
     factory: &EngineFactory,
-    net: &Network,
-    params: Option<&ModelParams>,
+    nets: &[ServedNetwork<'_>],
     chip: usize,
     batches: Vec<PlannedBatch>,
     workers: usize,
 ) -> ChipResult {
     let n: usize = batches.iter().map(|b| b.requests.len()).sum();
-    let workers = if factory.kind() == EngineKind::Functional {
+    let single_net = batches.windows(2).all(|w| w[0].net == w[1].net);
+    let workers = if factory.kind() == EngineKind::Functional && single_net {
         workers.min(n / 2).max(1)
     } else {
-        // Synthesized engines are closed-form — a split cannot pay.
+        // Synthesized engines are closed-form — a split cannot pay —
+        // and mixed-network streams are inherently serial.
         1
     };
     if workers <= 1 {
-        run_chip_sequential(factory, net, params, chip, batches)
+        run_chip_sequential(factory, nets, chip, batches)
     } else {
-        run_chip_parallel(factory, net, params, chip, batches, workers)
+        run_chip_parallel(factory, nets, chip, batches, workers)
     }
 }
 
 /// Serve one chip's batches on a fresh weight-resident engine.
 fn run_chip_sequential(
     factory: &EngineFactory,
-    net: &Network,
-    params: Option<&ModelParams>,
+    nets: &[ServedNetwork<'_>],
     chip: usize,
     batches: Vec<PlannedBatch>,
 ) -> ChipResult {
@@ -213,14 +247,16 @@ fn run_chip_sequential(
     engine.make_weights_resident();
     let mut out = Vec::with_capacity(batches.len());
     for b in batches {
+        let sn = &nets[b.net];
         let mut executed = Vec::with_capacity(b.requests.len());
         for req in b.requests {
-            let exec = engine.execute(net, params, &req.image);
+            let exec = engine.execute(sn.net, sn.params, &req.image);
             let output = exec.outputs.map(|mut outs| outs.pop().expect("non-empty network"));
             executed.push(ExecutedRequest { id: req.id, output, stats: exec.stats });
         }
         out.push(ExecutedBatch {
             seq: b.seq,
+            net: b.net,
             cause: b.cause,
             flush_ns: b.flush_ns,
             arrivals_ns: b.arrivals_ns,
@@ -234,22 +270,24 @@ fn run_chip_sequential(
     ChipResult { chip, batches: out, weight_hits: hits, weight_misses: misses }
 }
 
-/// Serve one chip's stream across `workers ≥ 2` engine replicas with a
-/// deterministic merge (see the module docs for why the result is
-/// bit-identical to [`run_chip_sequential`]).
+/// Serve one chip's single-network stream across `workers ≥ 2` engine
+/// replicas with a deterministic merge (see the module docs for why
+/// the result is bit-identical to [`run_chip_sequential`]).
 fn run_chip_parallel(
     factory: &EngineFactory,
-    net: &Network,
-    params: Option<&ModelParams>,
+    nets: &[ServedNetwork<'_>],
     chip: usize,
     batches: Vec<PlannedBatch>,
     workers: usize,
 ) -> ChipResult {
+    // Guarded by `run_chip`: every batch targets the same network.
+    let sn = &nets[batches[0].net];
+    let (net, params) = (sn.net, sn.params);
     // Flatten the stream, keeping each batch's metadata for reassembly.
     let mut metas = Vec::with_capacity(batches.len());
     let mut flat: Vec<Request> = Vec::new();
     for b in batches {
-        metas.push((b.seq, b.cause, b.flush_ns, b.arrivals_ns, b.requests.len()));
+        metas.push((b.seq, b.net, b.cause, b.flush_ns, b.arrivals_ns, b.requests.len()));
         flat.extend(b.requests);
     }
     let n = flat.len();
@@ -307,8 +345,9 @@ fn run_chip_parallel(
     let mut all = all.into_iter();
     let out_batches: Vec<ExecutedBatch> = metas
         .into_iter()
-        .map(|(seq, cause, flush_ns, arrivals_ns, len)| ExecutedBatch {
+        .map(|(seq, net, cause, flush_ns, arrivals_ns, len)| ExecutedBatch {
             seq,
+            net,
             cause,
             flush_ns,
             arrivals_ns,

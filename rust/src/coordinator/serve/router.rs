@@ -1,60 +1,161 @@
-//! Shard router: deterministic batch → chip assignment.
+//! Shard router: deterministic, cost-aware batch → chip assignment.
 //!
 //! Each simulated PIM chip holds a full weight replica (data
 //! parallelism — the mapping *within* a chip is the paper's Fig. 5
 //! scheme and is unchanged here), so any chip can serve any batch and
-//! routing is purely a load-balancing decision. The router assigns each
-//! batch to the chip with the least total routed work so far, breaking
-//! ties on the lowest chip index. Given the same batch sequence the
-//! assignment is identical on every run — no hashing, no randomness —
-//! which keeps the whole serving schedule reproducible. Like the
-//! batcher, the router is engine-agnostic: it routes on request work
-//! bits alone, so functional, analytic and hybrid serves of the same
-//! stream produce the same chip assignment.
+//! routing is purely a scheduling decision. Chips are no longer assumed
+//! identical: a [`CostTable`] carries a per-chip, per-network service
+//! estimate in simulated nanoseconds — in practice the analytic
+//! engine's cold (weights streamed) and warm (weights resident)
+//! per-request latencies, synthesized by
+//! [`BatchLaw`](super::laws::BatchLaw) for each chip's own
+//! `ArchConfig`. The router tracks each chip's estimated busy horizon
+//! and which network its weights currently hold, and assigns every
+//! batch to the chip that would *finish it earliest*: a chip already
+//! holding the batch's network serves the first request warm, any other
+//! chip pays the cold re-stream. Ties break on the lowest chip index.
+//!
+//! Given the same batch sequence the assignment is identical on every
+//! run — no hashing, no randomness — which keeps the whole serving
+//! schedule reproducible. Like the batcher, the router is
+//! engine-agnostic: estimates come from the closed-form model whatever
+//! engine ultimately executes, so functional, analytic and hybrid
+//! serves of the same stream produce the same chip assignment. When
+//! every chip has the same uniform cost the earliest-finish rule
+//! degenerates to the classic deterministic least-loaded policy.
 
-/// Deterministic least-loaded router over `chips` identical chips.
+/// Per-chip, per-network service-time estimates (simulated ns per
+/// request): `(cold, warm)` — the first request after a network switch
+/// pays `cold` (weights streamed over chip I/O), every further request
+/// of the same network pays `warm` (weights resident).
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    /// `[chip][net] -> (cold_ns, warm_ns)`.
+    cold_warm_ns: Vec<Vec<(f64, f64)>>,
+}
+
+impl CostTable {
+    /// Table from explicit `[chip][net] -> (cold_ns, warm_ns)` rows.
+    ///
+    /// # Panics
+    /// If there are no chips, no networks, the rows are ragged, or any
+    /// estimate is negative/non-finite.
+    pub fn new(cold_warm_ns: Vec<Vec<(f64, f64)>>) -> Self {
+        assert!(!cold_warm_ns.is_empty(), "need at least one chip");
+        let nets = cold_warm_ns[0].len();
+        assert!(nets >= 1, "need at least one network");
+        for row in &cold_warm_ns {
+            assert_eq!(row.len(), nets, "every chip must cost every network");
+            for &(cold, warm) in row {
+                assert!(
+                    cold.is_finite() && warm.is_finite() && cold >= 0.0 && warm >= 0.0,
+                    "service estimates must be finite and non-negative"
+                );
+            }
+        }
+        Self { cold_warm_ns }
+    }
+
+    /// Identical-chip table: every (chip, net) costs `(1, 1)` ns, which
+    /// reduces the router to deterministic least-loaded round-robin.
+    pub fn uniform(chips: usize, nets: usize) -> Self {
+        Self::new(vec![vec![(1.0, 1.0); nets]; chips])
+    }
+
+    /// Number of chips costed.
+    pub fn chips(&self) -> usize {
+        self.cold_warm_ns.len()
+    }
+
+    /// Number of networks costed.
+    pub fn nets(&self) -> usize {
+        self.cold_warm_ns[0].len()
+    }
+
+    /// `(cold_ns, warm_ns)` estimate for one request of `net` on `chip`.
+    pub fn cost_ns(&self, chip: usize, net: usize) -> (f64, f64) {
+        self.cold_warm_ns[chip][net]
+    }
+}
+
+/// Deterministic earliest-finish router over a (possibly
+/// heterogeneous) chip pool.
 #[derive(Debug, Clone)]
 pub struct ShardRouter {
-    /// Total work (weight units) routed to each chip so far.
-    routed_work: Vec<u64>,
+    costs: CostTable,
+    /// Estimated busy horizon per chip (ns of routed service).
+    est_busy_ns: Vec<f64>,
+    /// Network whose weights each chip is estimated to hold.
+    resident_net: Vec<Option<usize>>,
     /// Batches routed to each chip so far.
     routed_batches: Vec<u64>,
 }
 
 impl ShardRouter {
-    /// Router over `chips` chips.
+    /// Router scheduling by `costs`.
+    pub fn new(costs: CostTable) -> Self {
+        let chips = costs.chips();
+        Self {
+            costs,
+            est_busy_ns: vec![0.0; chips],
+            resident_net: vec![None; chips],
+            routed_batches: vec![0; chips],
+        }
+    }
+
+    /// Router over `chips` identical single-network chips — the legacy
+    /// least-loaded behaviour.
     ///
     /// # Panics
     /// If `chips` is 0.
-    pub fn new(chips: usize) -> Self {
-        assert!(chips >= 1, "need at least one chip");
-        Self { routed_work: vec![0; chips], routed_batches: vec![0; chips] }
+    pub fn identical(chips: usize) -> Self {
+        Self::new(CostTable::uniform(chips, 1))
     }
 
     /// Number of chips.
     pub fn chips(&self) -> usize {
-        self.routed_work.len()
+        self.est_busy_ns.len()
     }
 
-    /// Route one batch of `work` units (e.g. total input bits): returns
-    /// the chip index with the least routed work, lowest index winning
-    /// ties, and charges the work to it.
-    pub fn route(&mut self, work: u64) -> usize {
-        let chip = self
-            .routed_work
-            .iter()
-            .enumerate()
-            .min_by_key(|&(i, &w)| (w, i))
-            .map(|(i, _)| i)
+    /// Estimated service time of a batch of `requests` requests of
+    /// `net` on `chip`, given the chip's current estimated residency:
+    /// the first request pays warm iff the chip already holds `net`,
+    /// every further request is warm.
+    pub fn batch_cost_ns(&self, chip: usize, net: usize, requests: usize) -> f64 {
+        if requests == 0 {
+            return 0.0;
+        }
+        let (cold, warm) = self.costs.cost_ns(chip, net);
+        let first = if self.resident_net[chip] == Some(net) { warm } else { cold };
+        first + (requests as f64 - 1.0) * warm
+    }
+
+    /// Route one batch of `requests` requests of network `net`: returns
+    /// the chip that would finish it earliest (estimated busy horizon +
+    /// batch cost, residency-aware), lowest index winning ties, then
+    /// charges the batch to that chip and marks `net` resident there.
+    /// Zero-cost batches still advance the horizon by 1 ns so they
+    /// cannot pile onto one chip.
+    ///
+    /// # Panics
+    /// If `net` is outside the cost table.
+    pub fn route(&mut self, net: usize, requests: usize) -> usize {
+        assert!(net < self.costs.nets(), "network {net} is not in the cost table");
+        let chip = (0..self.chips())
+            .map(|c| (c, self.est_busy_ns[c] + self.batch_cost_ns(c, net, requests)))
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+            .map(|(c, _)| c)
             .expect("at least one chip");
-        self.routed_work[chip] += work.max(1);
+        let cost = self.batch_cost_ns(chip, net, requests);
+        self.est_busy_ns[chip] += cost.max(1.0);
+        self.resident_net[chip] = Some(net);
         self.routed_batches[chip] += 1;
         chip
     }
 
-    /// Total work routed to `chip` so far.
-    pub fn routed_work(&self, chip: usize) -> u64 {
-        self.routed_work[chip]
+    /// Estimated busy horizon of `chip` (ns of routed service).
+    pub fn est_busy_ns(&self, chip: usize) -> f64 {
+        self.est_busy_ns[chip]
     }
 
     /// Batches routed to `chip` so far.
@@ -68,43 +169,84 @@ mod tests {
     use super::*;
 
     #[test]
-    fn equal_work_round_robins_by_index() {
-        let mut r = ShardRouter::new(3);
-        let chips: Vec<usize> = (0..6).map(|_| r.route(10)).collect();
+    fn uniform_costs_round_robin_by_index() {
+        let mut r = ShardRouter::identical(3);
+        let chips: Vec<usize> = (0..6).map(|_| r.route(0, 1)).collect();
         assert_eq!(chips, vec![0, 1, 2, 0, 1, 2]);
         for c in 0..3 {
-            assert_eq!(r.routed_work(c), 20);
             assert_eq!(r.routed_batches(c), 2);
         }
     }
 
     #[test]
-    fn unequal_work_balances_toward_lightest_chip() {
-        let mut r = ShardRouter::new(2);
-        assert_eq!(r.route(100), 0);
-        // Chip 1 is lightest until it has absorbed 100 units.
-        assert_eq!(r.route(30), 1);
-        assert_eq!(r.route(30), 1);
-        assert_eq!(r.route(30), 1);
-        // Now 100 vs 90 → chip 1 again, then chip 0.
-        assert_eq!(r.route(30), 1);
-        assert_eq!(r.route(1), 0);
+    fn cheaper_chip_absorbs_more_batches() {
+        // Chip 0 serves a request in 1 ns, chip 1 in 10 ns: earliest
+        // finish keeps feeding chip 0 until its backlog exceeds one
+        // batch on chip 1.
+        let mut r = ShardRouter::new(CostTable::new(vec![vec![(1.0, 1.0)], vec![(10.0, 10.0)]]));
+        for _ in 0..22 {
+            r.route(0, 1);
+        }
+        assert!(
+            r.routed_batches(0) > r.routed_batches(1),
+            "fast chip must absorb more: {} vs {}",
+            r.routed_batches(0),
+            r.routed_batches(1)
+        );
+        assert!(r.routed_batches(1) >= 1, "slow chip still participates");
+        assert_eq!(r.routed_batches(0) + r.routed_batches(1), 22);
+    }
+
+    #[test]
+    fn network_switch_pays_the_cold_restream() {
+        // One chip, two networks: the first batch of a network is cold,
+        // a repeat is warm, and switching away evicts.
+        let mut r = ShardRouter::new(CostTable::new(vec![vec![(100.0, 10.0), (80.0, 8.0)]]));
+        assert_eq!(r.batch_cost_ns(0, 0, 1), 100.0, "cold before first route");
+        r.route(0, 1);
+        assert_eq!(r.batch_cost_ns(0, 0, 1), 10.0, "warm repeat");
+        assert_eq!(r.batch_cost_ns(0, 0, 4), 40.0, "whole batch warm");
+        r.route(1, 1);
+        assert_eq!(r.batch_cost_ns(0, 0, 1), 100.0, "switch evicted net 0");
+        assert_eq!(r.batch_cost_ns(0, 1, 2), 16.0, "net 1 now resident");
+    }
+
+    #[test]
+    fn residency_awareness_keeps_networks_sticky() {
+        // Two identical chips, two networks with a heavy cold
+        // re-stream: alternating nets should settle one net per chip
+        // instead of thrashing both residencies.
+        let table = CostTable::new(vec![vec![(1000.0, 10.0); 2]; 2]);
+        let mut r = ShardRouter::new(table);
+        let routes: Vec<usize> = (0..8).map(|i| r.route(i % 2, 1)).collect();
+        assert_eq!(routes[0], 0, "net 0 lands on chip 0");
+        assert_eq!(routes[1], 1, "net 1 avoids chip 0's re-stream");
+        for (i, &chip) in routes.iter().enumerate() {
+            assert_eq!(chip, i % 2, "route {i} thrashes residency: {routes:?}");
+        }
     }
 
     #[test]
     fn assignment_is_deterministic() {
-        let works = [7u64, 3, 3, 9, 1, 1, 4, 8, 2, 6];
+        let table = || {
+            CostTable::new(vec![
+                vec![(700.0, 70.0), (300.0, 30.0)],
+                vec![(900.0, 90.0), (100.0, 10.0)],
+                vec![(400.0, 40.0), (400.0, 40.0)],
+            ])
+        };
+        let stream = [(0usize, 3usize), (1, 1), (0, 2), (1, 8), (0, 1), (1, 2), (0, 4)];
         let run = || {
-            let mut r = ShardRouter::new(4);
-            works.iter().map(|&w| r.route(w)).collect::<Vec<_>>()
+            let mut r = ShardRouter::new(table());
+            stream.iter().map(|&(net, n)| r.route(net, n)).collect::<Vec<_>>()
         };
         assert_eq!(run(), run(), "same inputs, same assignment");
     }
 
     #[test]
-    fn zero_work_batches_still_advance_the_router() {
-        let mut r = ShardRouter::new(2);
-        assert_eq!(r.route(0), 0);
-        assert_eq!(r.route(0), 1, "zero-work batches must not pile on one chip");
+    fn zero_cost_batches_still_advance_the_router() {
+        let mut r = ShardRouter::new(CostTable::new(vec![vec![(0.0, 0.0)]; 2]));
+        assert_eq!(r.route(0, 1), 0);
+        assert_eq!(r.route(0, 1), 1, "zero-cost batches must not pile on one chip");
     }
 }

@@ -43,14 +43,20 @@
 //! ## Serving
 //!
 //! On top of the engine trait, [`coordinator::serve`](mod@coordinator::serve)
-//! is the deployment topology: a dynamic batcher (size- and
-//! deadline-triggered) feeds a
-//! deterministic shard router across N simulated PIM chips, each chip
-//! serving its bounded queue on a weight-resident engine — the Table 3
-//! steady-state condition, with per-request, per-chip and aggregate
-//! latency/energy accounting in
-//! [`ServeReport`](coordinator::serve::ServeReport). The pool builds
-//! functional or analytic engines via
+//! is the deployment topology: several networks share one serve, each
+//! batching in its own SLO lane
+//! ([`SloPolicy`](coordinator::serve::SloPolicy): size- and
+//! per-network-deadline-triggered flushes), and a cost-aware shard
+//! router assigns every batch to the earliest-finish chip of a
+//! possibly heterogeneous pool
+//! ([`PoolSpec`](coordinator::PoolSpec): one `ArchConfig` per chip),
+//! using each network's closed-form batching law
+//! ([`BatchLaw`](coordinator::serve::BatchLaw)) on each chip's own
+//! operating point. Each chip serves its bounded queue on a
+//! weight-resident engine — the Table 3 steady-state condition — with
+//! per-request, per-chip, per-network and aggregate latency/energy/SLO
+//! accounting in [`ServeReport`](coordinator::serve::ServeReport). The
+//! pool builds functional or analytic engines via
 //! [`EngineFactory`](coordinator::EngineFactory), so the paper's
 //! full-size benchmarks (AlexNet/VGG19/ResNet50) serve at closed-form
 //! speed, and a hybrid mode spot-checks analytic stats against

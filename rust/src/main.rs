@@ -10,9 +10,10 @@
 //! * `inspect-device` — §5.1 device/circuit numbers
 //! * `verify`         — bit-exact functional run vs golden executor
 //! * `run`            — batched synthetic inference with FPS report
-//! * `serve`          — batched multi-chip serving runtime (dynamic
-//!   batcher → shard router → weight-resident engine pools) with
-//!   per-chip and aggregate latency/energy accounting
+//! * `serve`          — batched multi-chip serving runtime (per-network
+//!   SLO batching lanes → cost-aware shard router → weight-resident
+//!   engine pools over a possibly heterogeneous chip pool) with
+//!   per-chip, per-network and aggregate latency/energy accounting
 //!
 //! Argument parsing is hand-rolled (the build is offline; see
 //! Cargo.toml).
@@ -28,7 +29,10 @@ use nandspin::cnn::layer::Layer;
 use nandspin::cnn::network::{preset, resnet50, small_cnn, Network, PRESET_NAMES};
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::{Coordinator, EngineKind, EngineMode, Request, ServeConfig};
+use nandspin::coordinator::{
+    serve_pool, Coordinator, EngineKind, EngineMode, PoolSpec, Request, ServeConfig,
+    ServedNetwork, SloPolicy,
+};
 use nandspin::device::llg::SwitchingModel;
 use nandspin::device::DeviceCosts;
 use nandspin::mapping::TilePlan;
@@ -46,12 +50,15 @@ fn usage() -> ExitCode {
            area\n\
            inspect-device\n\
            verify          [--seed N]\n\
-           run             [--batch N] [--seed N] [--chips N]\n\
+           run             [--batch N] [--seed N] [--chips N] [--workers N]\n\
            serve           [--engine functional|analytic|hybrid]\n\
-                           [--network alexnet|vgg19|resnet50|small|small_resnet|micro|wide]\n\
+                           [--network alexnet|vgg19|resnet50|small|small_resnet|micro|wide,\n\
+                            '+'-separated for a mixed stream, e.g. alexnet+small]\n\
                            [--bits N] [--check-every N] [--verbose]\n\
-                           [--chips N] [--batch N] [--deadline-us F]\n\
-                           [--requests N] [--arrival-ns F] [--queue N] [--seed N]"
+                           [--chips N | --chip-config CAP[:BUS],CAP[:BUS],...]\n\
+                           [--batch N] [--deadline-us F] [--slo-us NAME=F,... or F,...]\n\
+                           [--requests N (per network)] [--arrival-ns F] [--queue N]\n\
+                           [--workers N] [--seed N]"
     );
     ExitCode::FAILURE
 }
@@ -302,15 +309,27 @@ fn checked(scfg: ServeConfig) -> ServeConfig {
     scfg
 }
 
-fn cmd_run(args: &[String]) {
-    if args.iter().any(|a| a == "--workers") {
-        eprintln!("--workers was replaced by --chips (one engine = one simulated PIM chip)");
-        std::process::exit(2);
+/// Parse an optional `--workers N` host budget (`None` = automatic).
+fn host_workers_flag(get: &impl Fn(&str, &str) -> String) -> Option<usize> {
+    let arg = get("workers", "");
+    if arg.is_empty() {
+        return None;
     }
+    match arg.parse::<usize>() {
+        Ok(n) => Some(n),
+        Err(_) => {
+            eprintln!("invalid --workers '{arg}' (expected a thread count)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &[String]) {
     let get = flags(args);
     let batch: usize = get("batch", "8").parse().unwrap_or(8);
     let seed: u64 = get("seed", "1").parse().unwrap_or(1);
     let chips: usize = get("chips", "4").parse().unwrap_or(4);
+    let host_workers = host_workers_flag(&get);
     if batch == 0 {
         eprintln!("invalid serve configuration: need at least one request (--batch)");
         std::process::exit(2);
@@ -321,6 +340,7 @@ fn cmd_run(args: &[String]) {
     let scfg = checked(ServeConfig {
         chips,
         max_batch: batch.div_ceil(chips.max(1)).max(1),
+        host_workers,
         ..ServeConfig::default()
     });
     let report = nandspin::coordinator::serve(
@@ -378,13 +398,79 @@ fn print_tiling_plan(net: &Network, bits: u8) {
     }
 }
 
+/// Parse a `--chip-config CAP[:BUS],CAP[:BUS],...` heterogeneous pool
+/// description into one `ArchConfig` per chip (base: the paper point).
+fn parse_chip_configs(spec: &str) -> Vec<ArchConfig> {
+    spec.split(',')
+        .map(|chip| {
+            let chip = chip.trim();
+            let mut cfg = ArchConfig::paper();
+            let (cap, bus) = match chip.split_once(':') {
+                Some((c, b)) => (c, Some(b)),
+                None => (chip, None),
+            };
+            cfg.capacity_mb = cap.trim().parse().unwrap_or_else(|_| {
+                eprintln!("invalid --chip-config capacity '{cap}' (expected MB, e.g. 64)");
+                std::process::exit(2);
+            });
+            if let Some(bus) = bus {
+                cfg.bus_width_bits = bus.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("invalid --chip-config bus width '{bus}' (expected bits, e.g. 128)");
+                    std::process::exit(2);
+                });
+            }
+            cfg
+        })
+        .collect()
+}
+
+/// Parse `--slo-us` per-network deadlines: either positional
+/// (`500,50` — network order) or named against the `--network` tokens
+/// (`alexnet=500,small=50`).
+fn parse_slo(spec: &str, net_tokens: &[&str]) -> SloPolicy {
+    let mut slo = SloPolicy::global();
+    for (pos, tok) in spec.split(',').enumerate() {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let (idx, val) = match tok.split_once('=') {
+            Some((name, v)) => {
+                let Some(idx) = net_tokens.iter().position(|t| *t == name.trim()) else {
+                    eprintln!("--slo-us names unknown network '{name}' (serving {net_tokens:?})");
+                    std::process::exit(2);
+                };
+                (idx, v)
+            }
+            None => (pos, tok),
+        };
+        if idx >= net_tokens.len() {
+            eprintln!("--slo-us has more deadlines than --network entries");
+            std::process::exit(2);
+        }
+        let us: f64 = val.trim().parse().unwrap_or_else(|_| {
+            eprintln!("invalid --slo-us deadline '{val}' (expected µs)");
+            std::process::exit(2);
+        });
+        slo = slo.with_deadline_us(idx, us);
+    }
+    slo
+}
+
 fn cmd_serve(args: &[String]) {
     let get = flags(args);
     let network = get("network", "small");
-    let small_preset = matches!(
-        network.as_str(),
-        "small" | "small_cnn" | "small_resnet" | "micro" | "micro_cnn" | "wide" | "wide_cnn"
-    );
+    let net_tokens: Vec<&str> = network.split('+').map(str::trim).filter(|t| !t.is_empty()).collect();
+    if net_tokens.is_empty() {
+        eprintln!("--network needs at least one preset (use one of {PRESET_NAMES:?})");
+        std::process::exit(2);
+    }
+    let small_preset = net_tokens.iter().all(|t| {
+        matches!(
+            *t,
+            "small" | "small_cnn" | "small_resnet" | "micro" | "micro_cnn" | "wide" | "wide_cnn"
+        )
+    });
     let check_every: usize = get("check-every", "4").parse().unwrap_or(4);
     let engine = match get("engine", "functional").as_str() {
         "functional" => EngineMode::Functional,
@@ -414,17 +500,35 @@ fn cmd_serve(args: &[String]) {
         8
     };
     let bits: u8 = get("bits", &default_bits.to_string()).parse().unwrap_or(default_bits);
-    let Some(net) = preset(&network, bits) else {
-        eprintln!("unknown network '{network}' (use one of {PRESET_NAMES:?})");
-        std::process::exit(2);
+    let nets: Vec<Network> = net_tokens
+        .iter()
+        .map(|t| {
+            preset(t, bits).unwrap_or_else(|| {
+                eprintln!("unknown network '{t}' (use one of {PRESET_NAMES:?})");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+
+    // Chip pool: homogeneous `--chips N` at the paper point, or a
+    // heterogeneous `--chip-config` list (one operating point per chip).
+    let chip_spec = get("chip-config", "");
+    let chip_cfgs: Vec<ArchConfig> = if chip_spec.is_empty() {
+        let chips: usize = get("chips", "4").parse().unwrap_or(4);
+        vec![ArchConfig::paper(); chips.max(1)]
+    } else {
+        parse_chip_configs(&chip_spec)
     };
+
     let scfg = checked(ServeConfig {
-        chips: get("chips", "4").parse().unwrap_or(4),
+        chips: chip_cfgs.len(),
         max_batch: get("batch", "8").parse().unwrap_or(8),
         deadline_us: get("deadline-us", "50").parse().unwrap_or(50.0),
+        slo: parse_slo(&get("slo-us", ""), &net_tokens),
         queue_depth: get("queue", "2").parse().unwrap_or(2),
         arrival_interval_ns: get("arrival-ns", "0").parse().unwrap_or(0.0),
         engine,
+        host_workers: host_workers_flag(&get),
     });
     // Bit-accurate full-size serving simulates every device op of a
     // many-layer network per request; default to a short burst there
@@ -434,46 +538,69 @@ fn cmd_serve(args: &[String]) {
         get("requests", &default_requests.to_string()).parse().unwrap_or(default_requests);
     let seed: u64 = get("seed", "1").parse().unwrap_or(1);
     if args.iter().any(|a| a == "--verbose") {
-        print_tiling_plan(&net, bits);
+        for net in &nets {
+            print_tiling_plan(net, bits);
+        }
     }
 
-    // Model parameters are only materialised when a functional engine
-    // will actually run: always for `--engine functional`, and for the
-    // hybrid replay when the network fits the bit-accurate path.
-    // (Randomising full-size weights for an analytic-only serve would
-    // cost hundreds of MB for nothing.)
-    let functional_plan = Coordinator::paper()
-        .engine_factory(EngineKind::Functional)
-        .plan(&net);
-    if engine == EngineMode::Functional && !functional_plan.supported {
-        eprintln!(
-            "network '{}' cannot run on the functional engine ({}); use --engine analytic or hybrid",
-            net.name,
-            functional_plan.unsupported_reason.as_deref().unwrap_or("unsupported"),
-        );
-        std::process::exit(2);
-    }
-    let needs_params = engine == EngineMode::Functional
-        || (matches!(engine, EngineMode::Hybrid { .. }) && functional_plan.supported);
-    let params = if needs_params { Some(ModelParams::random(&net, bits, seed)) } else { None };
+    // Model parameters are only materialised for networks a functional
+    // engine will actually run: all of them for `--engine functional`,
+    // and for the hybrid replay those that fit some chip's bit-accurate
+    // path. (Randomising full-size weights for an analytic-only serve
+    // would cost hundreds of MB for nothing.)
+    let params: Vec<Option<ModelParams>> = nets
+        .iter()
+        .enumerate()
+        .map(|(i, net)| {
+            let supported = chip_cfgs.iter().any(|cfg| {
+                Coordinator::new(cfg.clone()).engine_factory(EngineKind::Functional).plan(net).supported
+            });
+            if engine == EngineMode::Functional && !supported {
+                eprintln!(
+                    "network '{}' cannot run on the functional engine; \
+                     use --engine analytic or hybrid",
+                    net.name,
+                );
+                std::process::exit(2);
+            }
+            let needs_params = engine == EngineMode::Functional
+                || (matches!(engine, EngineMode::Hybrid { .. }) && supported);
+            if needs_params {
+                Some(ModelParams::random(net, bits, seed + i as u64))
+            } else {
+                None
+            }
+        })
+        .collect();
 
+    let lanes: Vec<String> = nets
+        .iter()
+        .enumerate()
+        .map(|(i, net)| {
+            format!("{} (SLO {} µs)", net.name, scfg.slo.deadline_us(i, scfg.deadline_us))
+        })
+        .collect();
     println!(
-        "== serving {} requests of {} on {} chips (engine {}, batch {}, deadline {} µs, queue {}) ==",
+        "== serving {} requests each of [{}] on {} chips (engine {}, batch {}, queue {}) ==",
         requests,
-        net.name,
+        lanes.join(", "),
         scfg.chips,
         scfg.engine.label(),
         scfg.max_batch,
-        scfg.deadline_us,
         scfg.queue_depth
     );
-    let report = nandspin::coordinator::serve(
-        &ArchConfig::paper(),
-        &scfg,
-        &net,
-        params.as_ref(),
-        synthetic_requests(&net, requests, seed),
-    );
+    let streams: Vec<Vec<QTensor>> = nets
+        .iter()
+        .enumerate()
+        .map(|(i, net)| ImageBatch::synthetic(net, requests, seed + i as u64).images)
+        .collect();
+    let pool = PoolSpec::heterogeneous(chip_cfgs, scfg.engine.serving_kind());
+    let served: Vec<ServedNetwork> = nets
+        .iter()
+        .zip(&params)
+        .map(|(net, p)| ServedNetwork { net, params: p.as_ref() })
+        .collect();
+    let report = serve_pool(&pool, &scfg, &served, Request::interleave(streams));
     report.verify().expect("serve aggregation identities");
     println!("{report}");
 }

@@ -12,6 +12,7 @@ use nandspin::cnn::layer::Layer;
 use nandspin::cnn::network::{small_cnn, Network, Node};
 use nandspin::cnn::ref_exec::{self, ModelParams, WideTensor};
 use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::serve::{CostTable, ShardRouter};
 use nandspin::coordinator::FunctionalEngine;
 use nandspin::device::energy::DeviceCosts;
 use nandspin::mapping::tiling::{plan_axis, AxisTile};
@@ -779,4 +780,132 @@ fn property_multilayer_tiled_network_matches_untiled() {
     assert_eq!(t_st.ops.global_bus_bits, u_st.ops.global_bus_bits);
     assert_eq!(t_st.ops.local_bus_bits, u_st.ops.local_bus_bits + halo_bits);
     assert_eq!(t_st.ops.reads, u_st.ops.reads);
+}
+
+// ====================================================================
+// Cost-aware shard router: invariants over randomized heterogeneous
+// pools.
+// ====================================================================
+
+/// Uniform f64 in [0, 1) from the hand-rolled generator (the standard
+/// 53-mantissa-bit u64 → f64 construction).
+fn gen_f64(rng: &mut Rng) -> f64 {
+    (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Random per-(chip, net) `(cold, warm)` cost rows with bounded skew:
+/// warm in [100, 200) ns, cold = warm × [1, 2). Bounded skew means a
+/// singleton batch costs under 400 ns anywhere while every routed
+/// batch advances its chip's backlog by at least 100 ns — that ratio
+/// is what makes the no-starvation property below provable rather
+/// than probabilistic.
+fn random_cost_rows(rng: &mut Rng, chips: usize, nets: usize) -> Vec<Vec<(f64, f64)>> {
+    (0..chips)
+        .map(|_| {
+            (0..nets)
+                .map(|_| {
+                    let warm = 100.0 + 100.0 * gen_f64(rng);
+                    (warm * (1.0 + gen_f64(rng)), warm)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn property_router_assignment_is_deterministic() {
+    // Same cost table + same batch sequence → bit-identical chip
+    // assignment, whatever the pool shape.
+    let mut rng = Rng::seed_from_u64(0x2077E);
+    for case in 0..20 {
+        let chips = rng.gen_usize(1, 7);
+        let nets = rng.gen_usize(1, 5);
+        let rows = random_cost_rows(&mut rng, chips, nets);
+        let batches: Vec<(usize, usize)> =
+            (0..48).map(|_| (rng.gen_usize(0, nets), rng.gen_usize(1, 9))).collect();
+        let run = || {
+            let mut router = ShardRouter::new(CostTable::new(rows.clone()));
+            batches.iter().map(|&(net, n)| router.route(net, n)).collect::<Vec<usize>>()
+        };
+        assert_eq!(run(), run(), "case {case} chips={chips} nets={nets}");
+    }
+}
+
+#[test]
+fn property_router_routes_every_batch_exactly_once() {
+    let mut rng = Rng::seed_from_u64(0x207702);
+    for case in 0..20 {
+        let chips = rng.gen_usize(1, 7);
+        let nets = rng.gen_usize(1, 5);
+        let mut router =
+            ShardRouter::new(CostTable::new(random_cost_rows(&mut rng, chips, nets)));
+        let total = 64usize;
+        for i in 0..total {
+            let chip = router.route(rng.gen_usize(0, nets), rng.gen_usize(1, 9));
+            assert!(chip < chips, "case {case}: chip {chip} out of range");
+            let routed: u64 = (0..chips).map(|c| router.routed_batches(c)).sum();
+            assert_eq!(routed, i as u64 + 1, "case {case}: every batch lands exactly once");
+        }
+        // Backlog accrues exactly on the chips that were routed to.
+        for c in 0..chips {
+            assert_eq!(
+                router.routed_batches(c) == 0,
+                router.est_busy_ns(c) == 0.0,
+                "case {case} chip {c}: backlog iff routed"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_router_starves_no_chip_under_bounded_skew() {
+    // With warm in [100, 200) and cold < 2 · warm, a singleton batch
+    // costs < 400 ns anywhere while every routed batch advances its
+    // chip's backlog by ≥ 100 ns — so an idle chip becomes the
+    // earliest-finish choice after at most 4 routes to any other chip.
+    // Over 64 singleton batches, every chip of a ≤ 6-chip pool serves.
+    let mut rng = Rng::seed_from_u64(0x57A12E);
+    for case in 0..20 {
+        let chips = rng.gen_usize(2, 7);
+        let nets = rng.gen_usize(1, 4);
+        let mut router =
+            ShardRouter::new(CostTable::new(random_cost_rows(&mut rng, chips, nets)));
+        for _ in 0..64 {
+            router.route(rng.gen_usize(0, nets), 1);
+        }
+        for c in 0..chips {
+            assert!(
+                router.routed_batches(c) > 0,
+                "case {case}: chip {c} starved in a {chips}-chip pool"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_router_with_identical_chips_is_least_loaded() {
+    // cold == warm kills the residency asymmetry and identical rows
+    // kill the heterogeneity: earliest-finish must then degenerate to
+    // the classic least-loaded assignment with lowest-index tie-break,
+    // replayed here as an inline reference model. Integer costs keep
+    // every sum exact, so the comparison is bit-for-bit.
+    let mut rng = Rng::seed_from_u64(0x1EA57);
+    for case in 0..20 {
+        let chips = rng.gen_usize(1, 7);
+        let cost = rng.gen_usize(1, 11) as f64;
+        let mut router = ShardRouter::new(CostTable::new(vec![vec![(cost, cost)]; chips]));
+        let mut busy = vec![0.0f64; chips];
+        for i in 0..48 {
+            let n = rng.gen_usize(1, 9);
+            let expect = (0..chips)
+                .map(|c| (c, busy[c]))
+                .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+                .map(|(c, _)| c)
+                .expect("at least one chip");
+            let got = router.route(0, n);
+            assert_eq!(got, expect, "case {case} batch {i}: least-loaded chip");
+            busy[expect] += n as f64 * cost;
+            assert_eq!(router.est_busy_ns(expect), busy[expect], "case {case} batch {i}");
+        }
+    }
 }

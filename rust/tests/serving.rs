@@ -9,9 +9,11 @@ use nandspin::arch::config::ArchConfig;
 use nandspin::cnn::network::{alexnet, micro_cnn, small_cnn, Network};
 use nandspin::cnn::ref_exec::{self, ModelParams};
 use nandspin::cnn::tensor::QTensor;
-use nandspin::coordinator::engine::{EngineFactory, EngineKind};
+use nandspin::coordinator::engine::{EngineFactory, EngineKind, PoolSpec};
 use nandspin::coordinator::serve::pool::{execute_with_workers, PlannedBatch};
-use nandspin::coordinator::serve::{serve, EngineMode, FlushCause, Request, ServeConfig};
+use nandspin::coordinator::serve::{
+    serve, serve_pool, EngineMode, FlushCause, Request, ServeConfig, ServedNetwork, SloPolicy,
+};
 
 fn requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
     Request::stream(
@@ -294,6 +296,7 @@ fn plan_single_chip(reqs: Vec<Request>, per_batch: usize) -> Vec<PlannedBatch> {
         planned.push(PlannedBatch {
             seq,
             chip: 0,
+            net: 0,
             cause: FlushCause::Size,
             flush_ns: 0.0,
             requests: batch,
@@ -390,6 +393,111 @@ fn hybrid_mode_spot_checks_small_presets() {
     assert!(sc.latency_ratio.0 <= sc.latency_ratio.1);
     // Hybrid serves analytically: no outputs on the completions.
     assert!(report.completions.iter().all(|c| c.output.is_none()));
+}
+
+// ================================================================
+// Per-network SLO lanes and the host-worker knob.
+// ================================================================
+
+#[test]
+fn mixed_stream_requests_never_wait_past_their_lane_deadline() {
+    // The SLO invariant, end to end: with per-network flush lanes, no
+    // request's batcher wait exceeds its own lane's deadline — the
+    // tight small_cnn lane cannot be held hostage by AlexNet's slowly
+    // filling batches. Arrivals are slow enough (and max_batch large
+    // enough) that every non-drain flush is deadline-driven, so the
+    // invariant is exercised at its boundary.
+    let big = alexnet(8);
+    let small = small_cnn(3);
+    let pool = PoolSpec::homogeneous(ArchConfig::paper(), EngineKind::Analytic, 2);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 16,
+        deadline_us: 400.0,
+        slo: SloPolicy::global().with_deadline_us(1, 30.0),
+        arrival_interval_ns: 15_000.0,
+        engine: EngineMode::Analytic,
+        ..ServeConfig::default()
+    };
+    let n = 10usize;
+    let streams = vec![
+        (0..n)
+            .map(|i| QTensor::random(big.input.0, big.input.1, big.input.2, 8, 800 + i as u64))
+            .collect(),
+        (0..n)
+            .map(|i| {
+                QTensor::random(
+                    small.input.0,
+                    small.input.1,
+                    small.input.2,
+                    small.input_bits,
+                    900 + i as u64,
+                )
+            })
+            .collect(),
+    ];
+    let nets = [
+        ServedNetwork { net: &big, params: None },
+        ServedNetwork { net: &small, params: None },
+    ];
+    let report = serve_pool(&pool, &scfg, &nets, Request::interleave(streams));
+    assert_eq!(report.served(), 2 * n);
+    report.verify().expect("per-network roll-up identities");
+    assert!(report.counters.deadline_flushes > 0, "lanes must flush on their deadlines");
+
+    // Per-request: batcher wait bounded by the request's OWN lane.
+    let lane_deadline_ns = [400.0 * 1e3, 30.0 * 1e3];
+    for c in &report.completions {
+        assert!(
+            c.batcher_wait_ns() <= lane_deadline_ns[c.net] + 1e-6,
+            "request {} (net {}) waited {} ns past its lane deadline",
+            c.id,
+            c.net,
+            c.batcher_wait_ns()
+        );
+    }
+    // Per-network roll-ups agree: both lanes fully served, no
+    // violations, and the tight lane's worst wait is bounded by ITS
+    // deadline, not the relaxed global one.
+    assert_eq!(report.networks.len(), 2);
+    for nr in &report.networks {
+        assert_eq!(nr.served, n as u64, "net {} ({})", nr.net, nr.name);
+        assert_eq!(nr.deadline_violations, 0, "net {} ({})", nr.net, nr.name);
+    }
+    assert!(report.networks[1].max_batcher_wait_ns <= 30.0 * 1e3 + 1e-6);
+    assert!((report.networks[1].deadline_ns - 30.0 * 1e3).abs() < 1e-9);
+}
+
+#[test]
+fn host_worker_count_never_changes_simulated_results() {
+    // Regression for the `host_workers` knob (née NANDSPIN_HOST_WORKERS):
+    // host-side parallelism is a wall-clock optimisation only — the
+    // simulated stream is defined by the plan, so every worker budget
+    // must yield the identical report, bit for bit.
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 41);
+    let run = |workers: usize| {
+        let scfg = ServeConfig {
+            chips: 1,
+            max_batch: 12,
+            host_workers: Some(workers),
+            ..ServeConfig::default()
+        };
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 12, 410))
+    };
+    let one = run(1);
+    let four = run(4);
+    one.verify().expect("identities at 1 worker");
+    four.verify().expect("identities at 4 workers");
+    assert_eq!(one.served(), 12);
+    assert_eq!(one.served(), four.served());
+    for (a, b) in one.completions.iter().zip(&four.completions) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.chip, b.chip);
+        assert_eq!(a.stats, b.stats, "request {}", a.id);
+        assert_eq!(a.output, b.output, "request {}", a.id);
+        assert!((a.finish_ns - b.finish_ns).abs() < 1e-9, "request {}", a.id);
+    }
 }
 
 #[test]

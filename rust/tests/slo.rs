@@ -1,0 +1,229 @@
+//! Integration tests pinning the serve runtime to the closed-form
+//! batching laws it schedules by, plus the per-network SLO acceptance
+//! condition of the heterogeneous-pool scheduler:
+//!
+//! * the simulated latency/energy aggregates of an analytic serve land
+//!   back on the [`BatchLaw`] curves (`cold + (n−1)·warm`) for batch
+//!   sizes 1, 4 and 16 — the law and the engine share one closed form,
+//!   so the tolerance is floating-point summation order only;
+//! * per-request energy amortises monotonically toward the warm floor
+//!   as the batch grows (the paper's Table 3 steady-state condition);
+//! * a mixed AlexNet + small_cnn stream over a heterogeneous two-chip
+//!   pool meets both networks' lane deadlines with zero violations;
+//! * the cost-aware router's chip assignment over a heterogeneous pool
+//!   is exactly reproduced by replaying the public [`ShardRouter`]
+//!   against laws derived from each chip's own operating point.
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::cnn::network::{alexnet, micro_cnn, small_cnn, Network};
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::engine::{EngineKind, PoolSpec};
+use nandspin::coordinator::serve::{
+    serve_pool, serving_wbits, BatchLaw, CostTable, EngineMode, Request, ServeConfig,
+    ServeReport, ServedNetwork, ShardRouter, SloPolicy,
+};
+
+/// Relative tolerance for "measured == closed form" assertions. The
+/// serve's analytic engine synthesizes per-request stats from the same
+/// two closed-form evaluations `BatchLaw::derive` folds, so the only
+/// slack needed is floating-point summation order (n ≤ 16 terms of an
+/// f64 sum: relative error ≪ 1e-12).
+const REL_TOL: f64 = 1e-9;
+
+fn assert_close(measured: f64, law: f64, what: &str) {
+    assert!(
+        (measured - law).abs() <= REL_TOL * law.abs().max(1.0),
+        "{what}: measured {measured} vs closed form {law}"
+    );
+}
+
+fn burst(net: &Network, n: usize, seed: u64) -> Vec<Request> {
+    Request::stream(
+        (0..n)
+            .map(|i| {
+                QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, seed + i as u64)
+            })
+            .collect(),
+    )
+}
+
+/// Serve `n` requests of `net` as ONE analytic batch on one chip (the
+/// closed-burst default flushes on size as soon as the lane fills).
+fn serve_one_batch(net: &Network, n: usize, seed: u64) -> ServeReport {
+    let pool = PoolSpec::homogeneous(ArchConfig::paper(), EngineKind::Analytic, 1);
+    let scfg = ServeConfig {
+        chips: 1,
+        max_batch: n,
+        engine: EngineMode::Analytic,
+        ..ServeConfig::default()
+    };
+    let nets = [ServedNetwork { net, params: None }];
+    let report = serve_pool(&pool, &scfg, &nets, burst(net, n, seed));
+    report.verify().expect("aggregation identities");
+    assert_eq!(report.served(), n);
+    assert_eq!(report.counters.batches, 1, "one lane fill => one batch");
+    report
+}
+
+#[test]
+fn batch_latency_follows_the_closed_form_law() {
+    // latency(n) = cold + (n − 1) · warm, per network, per batch size:
+    // the sum of per-request simulated latencies of one served batch is
+    // the law evaluated at the batch size, and so is the makespan (one
+    // batch flushed at t = 0 runs back-to-back on one chip).
+    for net in [small_cnn(3), micro_cnn(3)] {
+        let law = BatchLaw::derive(&ArchConfig::paper(), &net, serving_wbits(&net, None));
+        for n in [1usize, 4, 16] {
+            let report = serve_one_batch(&net, n, 1000 + n as u64);
+            let measured: f64 =
+                report.completions.iter().map(|c| c.stats.total_latency_ns()).sum();
+            assert_close(measured, law.batch_latency_ns(n), &format!("{} latency n={n}", net.name));
+            assert_close(
+                report.makespan_ns(),
+                law.batch_latency_ns(n),
+                &format!("{} makespan n={n}", net.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_energy_amortises_on_the_closed_form_curve() {
+    // energy(n) = cold_e + (n − 1) · warm_e, and energy per request
+    // decreases monotonically toward (but never reaches) the warm
+    // floor: the one-time weight stream spreads across the batch.
+    let net = small_cnn(3);
+    let law = BatchLaw::derive(&ArchConfig::paper(), &net, serving_wbits(&net, None));
+    let mut per_request = Vec::new();
+    for n in [1usize, 4, 16] {
+        let report = serve_one_batch(&net, n, 2000 + n as u64);
+        let measured: f64 = report.completions.iter().map(|c| c.stats.total_energy_fj()).sum();
+        assert_close(measured, law.batch_energy_fj(n), &format!("energy n={n}"));
+        let amortised = measured / n as f64;
+        assert_close(amortised, law.energy_per_request_fj(n), &format!("energy/req n={n}"));
+        per_request.push(amortised);
+    }
+    assert!(
+        per_request[0] > per_request[1] && per_request[1] > per_request[2],
+        "amortisation must be monotone: {per_request:?}"
+    );
+    assert!(per_request[2] > law.warm_energy_fj, "warm floor is an infimum, not attained");
+}
+
+#[test]
+fn mixed_stream_meets_both_deadlines_on_a_heterogeneous_pool() {
+    // The acceptance condition: AlexNet (relaxed SLO) and small_cnn
+    // (tight SLO) share one serve over a heterogeneous pool — the paper
+    // operating point next to a narrow-bus variant — and BOTH lanes
+    // finish with zero deadline violations, per the report's own
+    // re-derived per-network accounts.
+    let big = alexnet(8);
+    let small = small_cnn(3);
+    let mut narrow = ArchConfig::paper();
+    narrow.bus_width_bits = 32;
+    let pool = PoolSpec::heterogeneous(vec![ArchConfig::paper(), narrow], EngineKind::Analytic);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 8,
+        deadline_us: 500.0,
+        slo: SloPolicy::global().with_deadline_us(1, 40.0),
+        arrival_interval_ns: 10_000.0,
+        engine: EngineMode::Analytic,
+        ..ServeConfig::default()
+    };
+    let n = 12usize;
+    let streams = vec![
+        (0..n)
+            .map(|i| QTensor::random(big.input.0, big.input.1, big.input.2, 8, 3000 + i as u64))
+            .collect(),
+        (0..n)
+            .map(|i| {
+                QTensor::random(
+                    small.input.0,
+                    small.input.1,
+                    small.input.2,
+                    small.input_bits,
+                    4000 + i as u64,
+                )
+            })
+            .collect(),
+    ];
+    let nets = [
+        ServedNetwork { net: &big, params: None },
+        ServedNetwork { net: &small, params: None },
+    ];
+    let report = serve_pool(&pool, &scfg, &nets, Request::interleave(streams));
+    report.verify().expect("per-network roll-up identities");
+    assert_eq!(report.served(), 2 * n);
+    assert_eq!(report.networks.len(), 2);
+    for nr in &report.networks {
+        assert_eq!(nr.served, n as u64, "net {} ({})", nr.net, nr.name);
+        assert_eq!(
+            nr.deadline_violations, 0,
+            "net {} ({}) broke its {} µs SLO (max lane wait {} µs)",
+            nr.net,
+            nr.name,
+            nr.deadline_ns * 1e-3,
+            nr.max_batcher_wait_ns * 1e-3
+        );
+    }
+    // Both lanes really carry different deadlines.
+    assert!((report.networks[0].deadline_ns - 500.0e3).abs() < 1e-9);
+    assert!((report.networks[1].deadline_ns - 40.0e3).abs() < 1e-9);
+}
+
+#[test]
+fn cost_aware_routing_matches_a_router_replay_of_the_laws() {
+    // The serve's chip assignment over a heterogeneous pool must be
+    // exactly the assignment the public ShardRouter computes from laws
+    // derived per chip operating point — i.e. routing is driven by the
+    // analytic cost model, not by input size or round-robin position.
+    let net = small_cnn(3);
+    let mut narrow = ArchConfig::paper();
+    narrow.bus_width_bits = 32;
+    let law_fast = BatchLaw::derive(&ArchConfig::paper(), &net, serving_wbits(&net, None));
+    let law_slow = BatchLaw::derive(&narrow, &net, serving_wbits(&net, None));
+    assert!(
+        law_slow.cold_latency_ns > law_fast.cold_latency_ns,
+        "narrowing the bus must slow the weight stream"
+    );
+
+    let pool = PoolSpec::heterogeneous(vec![ArchConfig::paper(), narrow], EngineKind::Analytic);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 1,
+        engine: EngineMode::Analytic,
+        ..ServeConfig::default()
+    };
+    let n = 12usize;
+    let nets = [ServedNetwork { net: &net, params: None }];
+    let report = serve_pool(&pool, &scfg, &nets, burst(&net, n, 5000));
+    report.verify().expect("aggregation identities");
+    assert_eq!(report.served(), n);
+
+    // Replay the same singleton stream through a standalone router
+    // loaded with the same per-chip laws.
+    let costs = CostTable::new(vec![
+        vec![(law_fast.cold_latency_ns, law_fast.warm_latency_ns)],
+        vec![(law_slow.cold_latency_ns, law_slow.warm_latency_ns)],
+    ]);
+    let mut router = ShardRouter::new(costs);
+    let mut expected = [0u64; 2];
+    for _ in 0..n {
+        expected[router.route(0, 1)] += 1;
+    }
+    assert_eq!(
+        [report.chips[0].served, report.chips[1].served],
+        expected,
+        "serve must route exactly as the law-driven router does"
+    );
+    assert!(
+        expected[0] >= expected[1],
+        "the faster chip never serves less than the slower one: {expected:?}"
+    );
+
+    // With identical chips the same stream reduces to an even split.
+    let even_pool = PoolSpec::homogeneous(ArchConfig::paper(), EngineKind::Analytic, 2);
+    let even = serve_pool(&even_pool, &scfg, &nets, burst(&net, n, 5000));
+    assert_eq!(even.chips[0].served, even.chips[1].served, "identical chips split evenly");
+}
