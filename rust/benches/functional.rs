@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use nandspin::arch::config::ArchConfig;
 use nandspin::arch::stats::{Phase, Stats};
-use nandspin::cnn::network::small_cnn;
+use nandspin::cnn::network::{preset, small_cnn};
 use nandspin::cnn::ref_exec::ModelParams;
 use nandspin::cnn::tensor::QTensor;
 use nandspin::coordinator::engine::{EngineFactory, EngineKind};
@@ -223,6 +223,32 @@ fn main() {
         "serve {n} reqs (1 chip)  1 worker {serve_seq_s:>6.2} s  {workers} workers {serve_par_s:>6.2} s  ({serve_speedup:.1}x)"
     );
 
+    // ---- Leg 6: intra-request fan-out, full-size AlexNet ⟨2:2⟩. ------
+    // One request, so the serve-level request split cannot help: the
+    // speedup here is purely the per-filter fan-out inside each conv
+    // layer. Outputs and Stats are asserted bit-identical — the fan-out
+    // is a wall-clock optimisation only.
+    let anet = preset("alexnet", 2).expect("alexnet preset");
+    let aparams = ModelParams::random(&anet, 2, 7);
+    let (ac, ah, aw) = anet.input;
+    let aimg = QTensor::random(ac, ah, aw, anet.input_bits, 8);
+    let mut eng_seq = FunctionalEngine::new(ArchConfig::paper());
+    eng_seq.set_host_workers(1);
+    let t = Instant::now();
+    let out_seq = eng_seq.run(&anet, &aparams, &aimg);
+    let intra_seq_s = t.elapsed().as_secs_f64();
+    let mut eng_par = FunctionalEngine::new(ArchConfig::paper());
+    eng_par.set_host_workers(workers);
+    let t = Instant::now();
+    let out_par = eng_par.run(&anet, &aparams, &aimg);
+    let intra_par_s = t.elapsed().as_secs_f64();
+    assert_eq!(out_seq, out_par, "intra-request fan-out must be bit-identical");
+    assert_eq!(eng_seq.stats, eng_par.stats, "fan-out must leave Stats bit-identical");
+    let intra_speedup = intra_seq_s / intra_par_s.max(f64::MIN_POSITIVE);
+    println!(
+        "alexnet <2:2> request   1 worker {intra_seq_s:>6.2} s  {workers} workers {intra_par_s:>6.2} s  ({intra_speedup:.1}x)"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"functional\",\n  \"network\": \"{}\",\n  \
          \"counter_accumulate\": {{\"packed_ns\": {:.2}, \"scalar_ns\": {:.2}, \"speedup\": {:.2}}},\n  \
@@ -230,6 +256,8 @@ fn main() {
          \"add_columns_us\": {:.3},\n  \"multiply_columns_us\": {:.3},\n  \
          \"small_cnn_run_ms\": {:.3},\n  \
          \"serve_functional\": {{\"requests\": {}, \"sequential_s\": {:.4}, \"parallel_s\": {:.4}, \
+         \"workers\": {}, \"speedup\": {:.2}}},\n  \
+         \"alexnet_intra\": {{\"bits\": 2, \"sequential_s\": {:.4}, \"parallel_s\": {:.4}, \
          \"workers\": {}, \"speedup\": {:.2}}}\n}}\n",
         net.name,
         packed_acc * 1e9,
@@ -245,7 +273,11 @@ fn main() {
         serve_seq_s,
         serve_par_s,
         workers,
-        serve_speedup
+        serve_speedup,
+        intra_seq_s,
+        intra_par_s,
+        workers,
+        intra_speedup
     );
     std::fs::write("BENCH_functional.json", &json).expect("write BENCH_functional.json");
     println!("\n[wrote BENCH_functional.json]");

@@ -275,6 +275,42 @@ impl Stats {
     }
 }
 
+/// Deterministic merge of independently-recorded [`Stats`] deltas.
+///
+/// The functional engine's intra-request fan-out records each filter
+/// pass into its own zero-based `Stats` (a "ledger entry") keyed by the
+/// pass index, then folds every entry into the request total **in
+/// ascending key order** via [`Stats::merge_serial`] — regardless of
+/// the order workers finished. Because floating-point addition is not
+/// associative, this canonical ordering is what makes parallel
+/// execution bit-identical to sequential execution: both run the exact
+/// same sequence of `f64` additions.
+#[derive(Debug, Default)]
+pub struct OpLedger {
+    entries: Vec<(usize, Stats)>,
+}
+
+impl OpLedger {
+    /// Empty ledger.
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// Record one pass's zero-based stats delta under `index`.
+    /// Indices must be unique; push order is irrelevant.
+    pub fn push(&mut self, index: usize, stats: Stats) {
+        self.entries.push((index, stats));
+    }
+
+    /// Fold every entry into `total` in ascending index order.
+    pub fn merge_into(mut self, total: &mut Stats) {
+        self.entries.sort_unstable_by_key(|(i, _)| *i);
+        for (_, s) in &self.entries {
+            total.merge_serial(s);
+        }
+    }
+}
+
 impl fmt::Display for Stats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
@@ -360,6 +396,38 @@ mod tests {
         back.merge_serial(&d);
         assert_eq!(back.total_energy_fj(), s.total_energy_fj());
         assert_eq!(back.ops, s.ops);
+    }
+
+    #[test]
+    fn ledger_merge_is_order_deterministic() {
+        // Build entries whose f64 magnitudes differ wildly, so any
+        // change in summation order would change the rounded total.
+        let entry = |i: usize| {
+            let mut s = Stats::default();
+            s.record(Phase::Convolution, 1e16_f64.powf(0.1 * i as f64), 1.0 + 1e-9 * i as f64);
+            s.ops.ands += i as u64;
+            s
+        };
+        let n = 9;
+        let mut forward = OpLedger::new();
+        for i in 0..n {
+            forward.push(i, entry(i));
+        }
+        let mut shuffled = OpLedger::new();
+        // A fixed permutation that is far from sorted.
+        for &i in &[4usize, 8, 0, 6, 2, 7, 1, 5, 3] {
+            shuffled.push(i, entry(i));
+        }
+        let mut a = Stats::default();
+        let mut b = Stats::default();
+        forward.merge_into(&mut a);
+        shuffled.merge_into(&mut b);
+        // Bitwise equality, not approximate: the ledger must erase any
+        // trace of completion order.
+        let (pa, pb) = (a[Phase::Convolution], b[Phase::Convolution]);
+        assert_eq!(pa.energy_fj.to_bits(), pb.energy_fj.to_bits());
+        assert_eq!(pa.latency_ns.to_bits(), pb.latency_ns.to_bits());
+        assert_eq!(a.ops, b.ops);
     }
 
     #[test]

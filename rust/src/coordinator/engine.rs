@@ -37,7 +37,7 @@ use crate::cnn::network::Network;
 use crate::cnn::ref_exec::{ModelParams, WideTensor};
 use crate::cnn::tensor::QTensor;
 use crate::coordinator::analytic::{AnalyticModel, Calibration};
-use crate::coordinator::functional::FunctionalEngine;
+use crate::coordinator::functional::{FunctionalEngine, HostLayerProfile};
 
 /// The two engine implementations the factory can build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -129,6 +129,20 @@ pub trait InferenceEngine: Send {
         params: Option<&ModelParams>,
         input: &QTensor,
     ) -> Execution;
+
+    /// Pin this engine's intra-request host-worker budget (threads used
+    /// *inside* one request). Affects host wall time only — simulated
+    /// outputs and [`Stats`] are worker-count-invariant. The serving
+    /// pool calls this with each replica's share of the one
+    /// `host_workers` budget; engines without intra-request parallelism
+    /// (the analytic engine) ignore it.
+    fn set_host_workers(&mut self, _workers: usize) {}
+
+    /// Host wall-time profile of the most recent request, per conv
+    /// layer, for engines that measure one (`None` otherwise).
+    fn host_profile(&self) -> Option<&[HostLayerProfile]> {
+        None
+    }
 }
 
 /// Bit width of a non-negative value (engine-local copy of the
@@ -282,6 +296,14 @@ impl InferenceEngine for FunctionalEngine {
         let run_stats = std::mem::replace(&mut self.stats, total);
         self.stats.merge_serial(&run_stats);
         Execution { outputs: Some(outputs), stats: run_stats }
+    }
+
+    fn set_host_workers(&mut self, workers: usize) {
+        FunctionalEngine::set_host_workers(self, workers);
+    }
+
+    fn host_profile(&self) -> Option<&[HostLayerProfile]> {
+        Some(FunctionalEngine::host_profile(self))
     }
 }
 

@@ -22,13 +22,14 @@
 //! presets.
 
 use crate::arch::config::ArchConfig;
-use crate::arch::stats::{Phase, Stats};
+use crate::arch::stats::{OpLedger, Phase, Stats};
 use crate::bank::controller::WeightResidency;
 use crate::cnn::layer::Layer;
 use crate::cnn::network::Network;
 use crate::cnn::quantize::{BnParams, QuantParams};
 use crate::cnn::ref_exec::{avg_pool_scale, ModelParams, WideTensor};
-use crate::cnn::tensor::QTensor;
+use crate::cnn::tensor::{Kernel4, QTensor};
+use crate::device::energy::DeviceCosts;
 use crate::mapping::{ConvMapping, PoolSplit, TileExtent, TilePlan};
 use crate::subarray::conv::{
     bitplane_conv_counts_tiled, window_sum_planes, BitKernel, ConvGeometry, KernelTiling,
@@ -36,6 +37,9 @@ use crate::subarray::conv::{
 use crate::subarray::primitives::{add_columns, compare_columns, multiply_columns, CompareScratch};
 use crate::subarray::Subarray;
 use crate::util::{pack_columns, unpack_columns};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 /// Minimum bits reserved per accumulator operand slot; a conv layer
 /// whose accumulated total needs more precision widens its slots to the
@@ -63,13 +67,48 @@ fn low_mask(n: usize) -> u128 {
     }
 }
 
+/// Zero-padded view of an input tensor: index `(c, y, x)` over the
+/// padded `(h + 2·pad) × (w + 2·pad)` extent without materialising a
+/// padded clone per conv layer (padding is free in NAND-SPIN — padded
+/// cells are simply MTJs left in the erased state, so no host copy is
+/// ever needed either).
+struct PaddedView<'a> {
+    t: &'a WideTensor,
+    pad: usize,
+    /// Channels (same as the underlying tensor).
+    c: usize,
+    /// Padded height.
+    h: usize,
+    /// Padded width.
+    w: usize,
+}
+
+impl<'a> PaddedView<'a> {
+    fn new(t: &'a WideTensor, pad: usize) -> Self {
+        Self { t, pad, c: t.c, h: t.h + 2 * pad, w: t.w + 2 * pad }
+    }
+
+    /// Value at padded coordinates (0 inside the border).
+    #[inline]
+    fn at(&self, c: usize, y: usize, x: usize) -> i64 {
+        if y < self.pad || x < self.pad {
+            return 0;
+        }
+        let (iy, ix) = (y - self.pad, x - self.pad);
+        if iy >= self.t.h || ix >= self.t.w {
+            return 0;
+        }
+        self.t.at(c, iy, ix)
+    }
+}
+
 /// Bit-plane slab of `x`: one `u128` word per slab row, where bit `j`
 /// of word `y` is bit `n` of `x(ic, in_y0 + y, in_x0 + j)` over the
 /// tile's input rectangle. The single-tile case reproduces
 /// [`QTensor::bitplane_rows`] exactly (values are `< 2^ibits` on the
 /// quantized datapath, so selecting bit `n` directly equals quantizing
 /// first).
-fn slab_rows(x: &WideTensor, ic: usize, n: usize, tile: &TileExtent) -> Vec<u128> {
+fn slab_rows(x: &PaddedView<'_>, ic: usize, n: usize, tile: &TileExtent) -> Vec<u128> {
     let mut rows = Vec::with_capacity(tile.in_h);
     for y in 0..tile.in_h {
         let mut word = 0u128;
@@ -79,6 +118,56 @@ fn slab_rows(x: &WideTensor, ic: usize, n: usize, tile: &TileExtent) -> Vec<u128
         rows.push(word);
     }
     rows
+}
+
+/// Charge an inter-layer / off-chip transfer into `stats` — the free
+/// function form of [`FunctionalEngine::charge_transfer`], usable from
+/// the per-filter worker passes that record into their own ledger
+/// entry instead of the engine's accumulated stats.
+fn charge_transfer_into(
+    costs: &DeviceCosts,
+    bus_width_bits: usize,
+    stats: &mut Stats,
+    bits: u64,
+    phase: Phase,
+) {
+    let cycles = bits.div_ceil(bus_width_bits as u64);
+    let e = match phase {
+        Phase::LoadData => costs.global_bus_energy_per_bit_fj,
+        _ => costs.bus_energy_per_bit_fj,
+    };
+    if phase == Phase::LoadData {
+        stats.ops.global_bus_bits += bits;
+    } else {
+        stats.ops.local_bus_bits += bits;
+    }
+    stats.record(phase, e * bits as f64, cycles as f64 * costs.bus_cycle_ns);
+}
+
+/// Host wall-time profile of one conv layer's bit-accurate execution —
+/// the `serve --verbose` breakdown that shows where the *host* (not the
+/// simulated device) spends its time: slab loading, the parallel
+/// filter passes, and within them the conv stepper vs the cross-writing
+/// accumulation. All figures are wall-clock measurements and therefore
+/// machine-dependent; simulated `Stats` never depend on them.
+#[derive(Debug, Clone)]
+pub struct HostLayerProfile {
+    /// Node index within the network.
+    pub node: usize,
+    /// Human-readable layer shape (`oc×ic×kh×kw`).
+    pub label: String,
+    /// Worker threads the filter fan-out actually used.
+    pub workers: usize,
+    /// Tiles in the layer's multi-tile plan.
+    pub tiles: usize,
+    /// Wall time of the (tile, channel, bit-plane) slab loads, ns.
+    pub load_ns: u64,
+    /// Wall time of the whole filter fan-out (all workers), ns.
+    pub pass_ns: u64,
+    /// Conv-stepper time summed over workers, ns.
+    pub conv_ns: u64,
+    /// Accumulation time summed over workers, ns.
+    pub acc_ns: u64,
 }
 
 /// The functional engine.
@@ -106,6 +195,18 @@ pub struct FunctionalEngine {
     /// `(rows, cols)` cells. `None` — the default — uses the real
     /// subarray size.
     tile_cap: Option<(usize, usize)>,
+    /// Intra-request worker budget for the per-filter fan-out. `None`
+    /// — the default — resolves the `NANDSPIN_HOST_WORKERS`
+    /// environment variable, then the host's available parallelism.
+    /// The serving pool sets this explicitly so request-split and
+    /// intra-request parallelism share one budget.
+    host_workers: Option<usize>,
+    /// When false (testing hook), degenerate-shape fast paths (1×1
+    /// kernels) fall back to the generic stepper; outputs and `Stats`
+    /// must be bit-identical either way.
+    fast_paths: bool,
+    /// Per-conv-layer host wall-time profile of the most recent `run`.
+    profile: Vec<HostLayerProfile>,
 }
 
 /// Upper bound on pooled scratch subarrays (a conv layer holds
@@ -125,7 +226,52 @@ impl FunctionalEngine {
             resident_net: None,
             scratch: Vec::new(),
             tile_cap: None,
+            host_workers: None,
+            fast_paths: true,
+            profile: Vec::new(),
         }
+    }
+
+    /// Pin the intra-request worker budget: the per-filter fan-out of
+    /// each conv layer uses at most `workers` host threads. Changes
+    /// host wall time only — outputs and [`Stats`] are bit-identical at
+    /// every worker count (each filter pass records into its own ledger
+    /// entry, merged in deterministic filter order). The serving pool
+    /// calls this with its per-replica share so serve-level request
+    /// splitting and intra-request parallelism never oversubscribe the
+    /// one `ServeConfig::host_workers` / `NANDSPIN_HOST_WORKERS`
+    /// budget.
+    pub fn set_host_workers(&mut self, workers: usize) {
+        self.host_workers = Some(workers.max(1));
+    }
+
+    /// Disable degenerate-shape fast paths (testing hook): 1×1 conv
+    /// layers run the generic tiled stepper instead of the flat-buffer
+    /// fast path. Outputs and [`Stats`] must be bit-identical either
+    /// way — asserted by the fast-path equivalence property tests.
+    pub fn disable_fast_paths(&mut self) {
+        self.fast_paths = false;
+    }
+
+    /// Host wall-time profile of the most recent [`FunctionalEngine::run`],
+    /// one entry per conv layer. Wall-clock figures — machine-dependent,
+    /// never part of the simulated result.
+    pub fn host_profile(&self) -> &[HostLayerProfile] {
+        &self.profile
+    }
+
+    /// Effective intra-request worker budget: the explicit setting,
+    /// else `NANDSPIN_HOST_WORKERS`, else the host's parallelism.
+    fn effective_workers(&self) -> usize {
+        if let Some(w) = self.host_workers {
+            return w.max(1);
+        }
+        if let Ok(v) = std::env::var("NANDSPIN_HOST_WORKERS") {
+            if let Ok(w) = v.trim().parse::<usize>() {
+                return w.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 
     /// Force the conv tile planner to treat each scratch subarray as
@@ -190,19 +336,8 @@ impl FunctionalEngine {
 
     /// Charge an inter-layer / off-chip transfer.
     fn charge_transfer(&mut self, bits: u64, phase: Phase) {
-        let c = &self.cfg.costs;
-        let cycles = bits.div_ceil(self.cfg.bus_width_bits as u64);
-        let (e, per_bit) = match phase {
-            Phase::LoadData => (c.global_bus_energy_per_bit_fj, true),
-            _ => (c.bus_energy_per_bit_fj, true),
-        };
-        let _ = per_bit;
-        if phase == Phase::LoadData {
-            self.stats.ops.global_bus_bits += bits;
-        } else {
-            self.stats.ops.local_bus_bits += bits;
-        }
-        self.stats.record(phase, e * bits as f64, cycles as f64 * c.bus_cycle_ns);
+        let bus = self.cfg.bus_width_bits;
+        charge_transfer_into(&self.cfg.costs, bus, &mut self.stats, bits, phase);
     }
 
     /// Store `values` (non-negative, `bits` wide) vertically in `sub` at
@@ -248,6 +383,7 @@ impl FunctionalEngine {
     pub fn run(&mut self, net: &Network, params: &ModelParams, input: &QTensor) -> Vec<WideTensor> {
         assert_eq!((input.c, input.h, input.w), net.input);
         self.conv_seq = 0;
+        self.profile.clear();
         if self.residency.is_some() {
             let identity = net.fingerprint();
             if self.resident_net != Some(identity) {
@@ -280,7 +416,7 @@ impl FunctionalEngine {
                     let k = &params.conv_weights[ci];
                     ci += 1;
                     let _ = out_c;
-                    let y = self.conv_layer(src, act_bits, k, kh, kw, stride, pad, i == 0);
+                    let y = self.conv_layer(src, act_bits, k, kh, kw, stride, pad, i == 0, i);
                     act_bits = tensor_width(&y);
                     y
                 }
@@ -338,32 +474,19 @@ impl FunctionalEngine {
         &mut self,
         x: &WideTensor,
         ibits: usize,
-        k: &crate::cnn::tensor::Kernel4,
+        k: &Kernel4,
         kh: usize,
         kw: usize,
         stride: usize,
         pad: usize,
         first: bool,
+        node: usize,
     ) -> WideTensor {
         // Zero padding is free in NAND-SPIN: padded cells are simply
-        // left in the erased (AP = 0) state, so we materialise the
-        // padded bit-planes and store them directly. Unpadded layers
-        // borrow the input as-is.
-        let padded;
-        let x = if pad == 0 {
-            x
-        } else {
-            let mut p = WideTensor::zeros(x.c, x.h + 2 * pad, x.w + 2 * pad);
-            for c in 0..x.c {
-                for y in 0..x.h {
-                    for xx in 0..x.w {
-                        *p.at_mut(c, y + pad, xx + pad) = x.at(c, y, xx);
-                    }
-                }
-            }
-            padded = p;
-            &padded
-        };
+        // MTJs left in the erased (AP = 0) state. The padded extent is
+        // an offset *view* over the input — no padded clone of the
+        // feature map is ever materialised on the host.
+        let x = PaddedView::new(x, pad);
         let geo = ConvGeometry { in_h: x.h, in_w: x.w, stride };
         let oh = geo.out_h(kh);
         let ow = geo.out_w(kw);
@@ -401,20 +524,27 @@ impl FunctionalEngine {
             split.compute,
         );
 
-        // --- load every (tile, channel, bit-plane) slab into its own
-        // subarray: fresh elements arrive over the layer's input path,
-        // halo rows/columns are re-sent through the bank buffer from
-        // slabs already resident (in-mat transfer).
+        // --- load every (tile, channel, bit-plane) slab: fresh
+        // elements arrive over the layer's input path, halo
+        // rows/columns are re-sent through the bank buffer from slabs
+        // already resident (in-mat transfer). The slab *images* are
+        // kept as plain row words shared read-only by every filter
+        // pass; the charged device ops of the load (one strip write
+        // per 8 slab rows) are replayed through a single pooled
+        // subarray — write charges depend only on the written bits,
+        // never on prior contents, so one loader charges exactly what
+        // one-subarray-per-slab did.
         let phase = if first { Phase::LoadData } else { Phase::DataTransfer };
-        let mut planes: Vec<Vec<Vec<Subarray>>> = Vec::with_capacity(plan.count()); // [t][ic][n]
+        let load_t0 = Instant::now();
+        let mut slabs: Vec<Vec<Vec<Vec<u128>>>> = Vec::with_capacity(plan.count()); // [t][ic][n]
+        let mut loader = self.take_subarray();
         for tile in &plan.tiles {
             let (fresh, halo) = (tile.fresh_elems() as u64, tile.halo_elems() as u64);
             let mut per_ch = Vec::with_capacity(x.c);
             for ic in 0..x.c {
                 let mut per_bit = Vec::with_capacity(ibits);
                 for n in 0..ibits {
-                    let rows = slab_rows(x, ic, n, tile);
-                    let mut sub = self.take_subarray();
+                    let rows = slab_rows(&x, ic, n, tile);
                     self.charge_transfer(fresh, phase);
                     if halo > 0 {
                         self.charge_transfer(halo, Phase::DataTransfer);
@@ -423,14 +553,16 @@ impl FunctionalEngine {
                     for (strip, chunk) in rows.chunks(8).enumerate() {
                         let mut data = [0u128; 8];
                         data[..chunk.len()].copy_from_slice(chunk);
-                        sub.write_strip(strip, &data, &mut self.stats, phase);
+                        loader.write_strip(strip, &data, &mut self.stats, phase);
                     }
-                    per_bit.push(sub);
+                    per_bit.push(rows);
                 }
                 per_ch.push(per_bit);
             }
-            planes.push(per_ch);
+            slabs.push(per_ch);
         }
+        self.recycle_subarray(loader);
+        let load_ns = load_t0.elapsed().as_nanos() as u64;
 
         // --- weights arrive over the global bus once per layer; a
         // resident engine (serving mode) holds them across inferences,
@@ -460,9 +592,7 @@ impl FunctionalEngine {
         let bound = (((1i64 << ibits.min(32)) - 1) * ((1i64 << mbits.min(16)) - 1))
             .saturating_mul((x.c * kh * kw) as i64);
         let acc_bits = width_of(bound).max(ACC_BITS);
-        // One accumulation subarray per (output row, column group),
-        // reused across filters.
-        let mut acc = ColumnAccumulator::new(self.take_subarray(), ow.min(group_w), acc_bits);
+        let acc_cols = ow.min(group_w);
 
         let count_bits = width_of((kh * kw) as i64) as u64;
         // Window-sum plane count of every pass: the drain width
@@ -476,94 +606,110 @@ impl FunctionalEngine {
             .map(|t| ConvGeometry { in_h: t.in_h, in_w: t.in_w, stride })
             .collect();
 
-        for oc in 0..k.oc {
-            // One bit-plane convolution pass per (weight-plane, channel,
-            // input-plane) per tile; each tile's window sums are
-            // stitched into full-output-width planes, so the partials
-            // pushed into the accumulator are identical to an untiled
-            // run. `stitched[or][g]` is the packed window-sum planes of
-            // output row `or`, column group `g`.
-            let mut partials: Vec<(usize, Vec<Vec<Vec<u128>>>)> =
-                Vec::with_capacity(mbits * x.c * ibits);
-            for m in 0..mbits {
-                for ic in 0..x.c {
-                    let kernel = BitKernel::new(kh, kw, k.bitplane(oc, ic, m as u8));
-                    // One tiling per distinct slab width (grid column),
-                    // shared across every input bit-plane `n` and every
-                    // row of tiles.
-                    let col_tilings: Vec<KernelTiling> = (0..plan.tiles_w)
-                        .map(|tw| kernel.tilings(plan.tiles[tw].in_w))
-                        .collect();
-                    for n in 0..ibits {
-                        let mut stitched = vec![vec![vec![0u128; nplanes]; groups]; oh];
-                        for (t, tile) in plan.tiles.iter().enumerate() {
-                            let sub = &mut planes[t][ic][n];
-                            let counts = bitplane_conv_counts_tiled(
-                                sub,
-                                0,
-                                tile_geos[t],
-                                &col_tilings[t % plan.tiles_w],
-                                &mut self.stats,
-                                Phase::Convolution,
-                            );
-                            let sums = window_sum_planes(&counts, tile_geos[t], kh, kw);
-                            // In-mat transfer of the drained counts to
-                            // the accumulation subarray (the tile's
-                            // owned share of the output).
-                            self.charge_transfer(
-                                (tile.out_h * tile.out_w) as u64 * count_bits,
-                                Phase::DataTransfer,
-                            );
-                            // Stitch: keep only the windows this tile
-                            // owns (slab extension computes a few extra
-                            // columns/rows owned by neighbours) and
-                            // place them at their global output column.
-                            let owned = low_mask(tile.out_w);
-                            for ry in 0..tile.out_h {
-                                let dst = &mut stitched[tile.out_y0 + ry];
-                                for (p, &word) in sums[ry].iter().enumerate() {
-                                    let w = word & owned;
-                                    if w == 0 {
-                                        continue;
-                                    }
-                                    let mut j = 0;
-                                    while j < tile.out_w {
-                                        let gc = tile.out_x0 + j;
-                                        let (g, off) = (gc / group_w, gc % group_w);
-                                        let take = (group_w - off).min(tile.out_w - j);
-                                        dst[g][p] |= ((w >> j) & low_mask(take)) << off;
-                                        j += take;
-                                    }
+        // --- per-filter fan-out. Every `oc` pass is independent: it
+        // reads the shared slabs, runs on a worker-private compute
+        // subarray + accumulator, and records its device-op charges
+        // into its own zero-based `Stats`. The ledger then folds the
+        // per-pass stats in ascending `oc` order — the sequential path
+        // (workers == 1) goes through the identical per-pass/ledger
+        // machinery, so outputs, `Stats`, energy and latency are
+        // bit-identical at every worker count.
+        let ctx = PassContext {
+            slabs: &slabs,
+            plan: &plan,
+            tile_geos: &tile_geos,
+            k,
+            in_c: x.c,
+            ibits,
+            mbits,
+            kh,
+            kw,
+            oh,
+            ow,
+            group_w,
+            groups,
+            nplanes,
+            count_bits,
+            costs: self.cfg.costs,
+            bus_width_bits: self.cfg.bus_width_bits,
+            sub_cols: self.cfg.cols,
+            fast_1x1: self.fast_paths && kh == 1 && kw == 1 && stride == 1,
+        };
+        let workers = self.effective_workers().min(k.oc).max(1);
+        let pass_t0 = Instant::now();
+        let mut results: Vec<OcPassResult> = Vec::with_capacity(k.oc);
+        if workers <= 1 {
+            let mut sub = self.take_subarray();
+            let mut acc = ColumnAccumulator::new(self.take_subarray(), acc_cols, acc_bits);
+            for oc in 0..k.oc {
+                results.push(run_oc_pass(&ctx, oc, &mut sub, &mut acc));
+            }
+            self.recycle_subarray(sub);
+            self.recycle_subarray(acc.into_subarray());
+        } else {
+            let mut lanes: Vec<(Subarray, ColumnAccumulator)> = (0..workers)
+                .map(|_| {
+                    let sub = self.take_subarray();
+                    let acc = ColumnAccumulator::new(self.take_subarray(), acc_cols, acc_bits);
+                    (sub, acc)
+                })
+                .collect();
+            let next = AtomicUsize::new(0);
+            let (ctx_ref, next_ref, oc_count) = (&ctx, &next, k.oc);
+            let per_worker: Vec<Vec<OcPassResult>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = lanes
+                    .iter_mut()
+                    .map(|(sub, acc)| {
+                        scope.spawn(move || {
+                            let mut local = Vec::new();
+                            loop {
+                                let oc = next_ref.fetch_add(1, Ordering::Relaxed);
+                                if oc >= oc_count {
+                                    break;
                                 }
+                                local.push(run_oc_pass(ctx_ref, oc, sub, acc));
                             }
-                        }
-                        partials.push((n + m, stitched));
-                    }
-                }
+                            local
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("conv worker panicked")).collect()
+            });
+            for chunk in per_worker {
+                results.extend(chunk);
             }
-            for or in 0..oh {
-                for g in 0..groups {
-                    acc.reset(&mut self.stats);
-                    for (shift, sums) in &partials {
-                        acc.push_planes(&sums[or][g], *shift, &mut self.stats);
-                    }
-                    let row_vals = acc.finish(&mut self.stats);
-                    let gw = group_w.min(ow - g * group_w);
-                    for ocx in 0..gw {
-                        *y.at_mut(oc, or, g * group_w + ocx) = row_vals[ocx] as i64;
-                    }
-                }
+            for (sub, acc) in lanes {
+                self.recycle_subarray(sub);
+                self.recycle_subarray(acc.into_subarray());
             }
         }
-        // Hand every subarray back to the scratch pool.
-        for per_ch in planes {
-            for per_bit in per_ch {
-                for sub in per_bit {
-                    self.recycle_subarray(sub);
-                }
-            }
+        let pass_ns = pass_t0.elapsed().as_nanos() as u64;
+
+        // Deterministic merge: outputs scatter by filter index; the
+        // ledger replays every per-pass stats delta in ascending `oc`
+        // order regardless of which worker finished when.
+        results.sort_unstable_by_key(|r| r.oc);
+        let mut ledger = OpLedger::new();
+        let (mut conv_ns, mut acc_ns) = (0u64, 0u64);
+        for r in results {
+            conv_ns += r.conv_ns;
+            acc_ns += r.acc_ns;
+            let base = r.oc * oh * ow;
+            y.data[base..base + oh * ow].copy_from_slice(&r.out);
+            ledger.push(r.oc, r.stats);
         }
-        self.recycle_subarray(acc.into_subarray());
+        ledger.merge_into(&mut self.stats);
+
+        self.profile.push(HostLayerProfile {
+            node,
+            label: format!("{}x{}x{}x{}", k.oc, k.ic, kh, kw),
+            workers,
+            tiles: plan.count(),
+            load_ns,
+            pass_ns,
+            conv_ns,
+            acc_ns,
+        });
 
         // Spot-check parity with the analytic mapping (see above):
         // divide this layer's conv-phase latency by its parallelism.
@@ -834,6 +980,266 @@ impl FunctionalEngine {
         }
         y
     }
+}
+
+/// Read-only inputs shared by every per-filter pass of one conv layer.
+/// Everything mutable in a pass is worker-private (compute subarray,
+/// accumulator, the pass's own `Stats`), which is what makes the
+/// filter fan-out race-free without locks.
+struct PassContext<'a> {
+    /// Loaded bit-plane slab images, `[tile][channel][bit] → rows`.
+    slabs: &'a [Vec<Vec<Vec<u128>>>],
+    plan: &'a TilePlan,
+    tile_geos: &'a [ConvGeometry],
+    k: &'a Kernel4,
+    in_c: usize,
+    ibits: usize,
+    mbits: usize,
+    kh: usize,
+    kw: usize,
+    oh: usize,
+    ow: usize,
+    group_w: usize,
+    groups: usize,
+    nplanes: usize,
+    count_bits: u64,
+    costs: DeviceCosts,
+    bus_width_bits: usize,
+    /// Real subarray column count (device-op charges scale with it).
+    sub_cols: usize,
+    /// Take the flat-buffer 1×1 fast path (charge stream identical to
+    /// the generic stepper, asserted by property tests).
+    fast_1x1: bool,
+}
+
+/// One filter pass's outcome: its zero-based stats delta (a ledger
+/// entry), the filter's output feature map (`oh × ow`, row-major) and
+/// the host wall time split between conv stepping and accumulation.
+struct OcPassResult {
+    oc: usize,
+    stats: Stats,
+    out: Vec<i64>,
+    conv_ns: u64,
+    acc_ns: u64,
+}
+
+/// Execute one filter (`oc`) pass on worker-private state.
+fn run_oc_pass(
+    ctx: &PassContext<'_>,
+    oc: usize,
+    sub: &mut Subarray,
+    acc: &mut ColumnAccumulator,
+) -> OcPassResult {
+    if ctx.fast_1x1 {
+        run_oc_pass_1x1(ctx, oc, acc)
+    } else {
+        run_oc_pass_generic(ctx, oc, sub, acc)
+    }
+}
+
+/// The generic tiled pass: one bit-plane convolution per
+/// (weight-plane, channel, input-plane) per tile; each tile's window
+/// sums are stitched into full-output-width planes, so the partials
+/// pushed into the accumulator are identical to an untiled run.
+/// `stitched[or][g]` is the packed window-sum planes of output row
+/// `or`, column group `g`.
+fn run_oc_pass_generic(
+    ctx: &PassContext<'_>,
+    oc: usize,
+    sub: &mut Subarray,
+    acc: &mut ColumnAccumulator,
+) -> OcPassResult {
+    let mut stats = Stats::default();
+    let conv_t0 = Instant::now();
+    let mut partials: Vec<(usize, Vec<Vec<Vec<u128>>>)> =
+        Vec::with_capacity(ctx.mbits * ctx.in_c * ctx.ibits);
+    for m in 0..ctx.mbits {
+        for ic in 0..ctx.in_c {
+            let kernel = BitKernel::new(ctx.kh, ctx.kw, ctx.k.bitplane(oc, ic, m as u8));
+            // One tiling per distinct slab width (grid column), shared
+            // across every input bit-plane `n` and every row of tiles.
+            let col_tilings: Vec<KernelTiling> = (0..ctx.plan.tiles_w)
+                .map(|tw| kernel.tilings(ctx.plan.tiles[tw].in_w))
+                .collect();
+            for n in 0..ctx.ibits {
+                let mut stitched = vec![vec![vec![0u128; ctx.nplanes]; ctx.groups]; ctx.oh];
+                for (t, tile) in ctx.plan.tiles.iter().enumerate() {
+                    // Mirror the already-charged slab image into the
+                    // private compute subarray (cost-free host copy —
+                    // the load was charged once on the shared stream).
+                    sub.host_load_rows(0, &ctx.slabs[t][ic][n]);
+                    let counts = bitplane_conv_counts_tiled(
+                        sub,
+                        0,
+                        ctx.tile_geos[t],
+                        &col_tilings[t % ctx.plan.tiles_w],
+                        &mut stats,
+                        Phase::Convolution,
+                    );
+                    let sums = window_sum_planes(&counts, ctx.tile_geos[t], ctx.kh, ctx.kw);
+                    // In-mat transfer of the drained counts to the
+                    // accumulation subarray (the tile's owned share of
+                    // the output).
+                    charge_transfer_into(
+                        &ctx.costs,
+                        ctx.bus_width_bits,
+                        &mut stats,
+                        (tile.out_h * tile.out_w) as u64 * ctx.count_bits,
+                        Phase::DataTransfer,
+                    );
+                    // Stitch: keep only the windows this tile owns
+                    // (slab extension computes a few extra
+                    // columns/rows owned by neighbours) and place them
+                    // at their global output column.
+                    let owned = low_mask(tile.out_w);
+                    for ry in 0..tile.out_h {
+                        let dst = &mut stitched[tile.out_y0 + ry];
+                        for (p, &word) in sums[ry].iter().enumerate() {
+                            let w = word & owned;
+                            if w == 0 {
+                                continue;
+                            }
+                            let mut j = 0;
+                            while j < tile.out_w {
+                                let gc = tile.out_x0 + j;
+                                let (g, off) = (gc / ctx.group_w, gc % ctx.group_w);
+                                let take = (ctx.group_w - off).min(tile.out_w - j);
+                                dst[g][p] |= ((w >> j) & low_mask(take)) << off;
+                                j += take;
+                            }
+                        }
+                    }
+                }
+                partials.push((n + m, stitched));
+            }
+        }
+    }
+    let conv_ns = conv_t0.elapsed().as_nanos() as u64;
+    let acc_t0 = Instant::now();
+    let mut out = vec![0i64; ctx.oh * ctx.ow];
+    for or in 0..ctx.oh {
+        for g in 0..ctx.groups {
+            acc.reset(&mut stats);
+            for (shift, sums) in &partials {
+                acc.push_planes(&sums[or][g], *shift, &mut stats);
+            }
+            let row_vals = acc.finish(&mut stats);
+            let gw = ctx.group_w.min(ctx.ow - g * ctx.group_w);
+            for ocx in 0..gw {
+                out[or * ctx.ow + g * ctx.group_w + ocx] = row_vals[ocx] as i64;
+            }
+        }
+    }
+    let acc_ns = acc_t0.elapsed().as_nanos() as u64;
+    OcPassResult { oc, stats, out, conv_ns, acc_ns }
+}
+
+/// 1×1-conv (stride 1) fast path — the shape of every FC-as-conv
+/// layer, which dominates AlexNet/VGG19 host time at ⟨8:8⟩. The window
+/// sum of a 1×1 kernel is just `input-bit AND weight-bit`, so the pass
+/// skips `BitKernel`/`KernelTiling` construction, the stepper and
+/// `window_sum_planes` entirely and keeps the single window-sum plane
+/// per (pass, row, group) in one flat buffer — no nested per-pass
+/// allocations. The *charge stream* replays the generic stepper's
+/// sequence record for record (one buffer load for the single period,
+/// then per output row one buffer read, one AND, one count accumulate
+/// and one drain cycle — all content-independent), so `Stats` stay
+/// bit-identical to the generic path.
+fn run_oc_pass_1x1(ctx: &PassContext<'_>, oc: usize, acc: &mut ColumnAccumulator) -> OcPassResult {
+    let mut stats = Stats::default();
+    let conv_t0 = Instant::now();
+    let passes = ctx.mbits * ctx.in_c * ctx.ibits;
+    let mut shifts = Vec::with_capacity(passes);
+    let mut flat = vec![0u128; passes * ctx.oh * ctx.groups];
+    let c = &ctx.costs;
+    let colsf = ctx.sub_cols as f64;
+    let mut pi = 0usize;
+    for m in 0..ctx.mbits {
+        for ic in 0..ctx.in_c {
+            let wbit = (ctx.k.at(oc, ic, 0, 0) >> m) & 1 == 1;
+            for n in 0..ctx.ibits {
+                let base = pi * ctx.oh * ctx.groups;
+                for (t, tile) in ctx.plan.tiles.iter().enumerate() {
+                    debug_assert_eq!((tile.out_h, tile.out_w), (tile.in_h, tile.in_w));
+                    debug_assert_eq!((tile.out_y0, tile.out_x0), (tile.in_y0, tile.in_x0));
+                    stats.ops.buffer_accesses += 1;
+                    stats.record(
+                        Phase::Convolution,
+                        c.buffer_energy_per_bit_fj * colsf,
+                        c.buffer_latency_ns,
+                    );
+                    for _ in 0..tile.out_h {
+                        stats.ops.buffer_accesses += 1;
+                        stats.record(Phase::Convolution, c.buffer_energy_per_bit_fj * colsf, 0.0);
+                        stats.ops.ands += 1;
+                        stats.record(
+                            Phase::Convolution,
+                            c.and_energy_per_bit_fj * colsf,
+                            c.and_latency_ns,
+                        );
+                        stats.ops.bitcounts += 1;
+                        stats.record(Phase::Convolution, c.bitcount_energy_per_bit_fj * colsf, 0.0);
+                        stats.record(
+                            Phase::Convolution,
+                            c.bitcount_energy_per_bit_fj * colsf,
+                            c.bitcount_latency_ns,
+                        );
+                    }
+                    charge_transfer_into(
+                        c,
+                        ctx.bus_width_bits,
+                        &mut stats,
+                        (tile.out_h * tile.out_w) as u64 * ctx.count_bits,
+                        Phase::DataTransfer,
+                    );
+                    if !wbit {
+                        continue;
+                    }
+                    let rows = &ctx.slabs[t][ic][n];
+                    let owned = low_mask(tile.out_w);
+                    for ry in 0..tile.out_h {
+                        let w = rows[ry] & owned;
+                        if w == 0 {
+                            continue;
+                        }
+                        let dst = &mut flat[base + (tile.out_y0 + ry) * ctx.groups..];
+                        let mut j = 0;
+                        while j < tile.out_w {
+                            let gc = tile.out_x0 + j;
+                            let (g, off) = (gc / ctx.group_w, gc % ctx.group_w);
+                            let take = (ctx.group_w - off).min(tile.out_w - j);
+                            dst[g] |= ((w >> j) & low_mask(take)) << off;
+                            j += take;
+                        }
+                    }
+                }
+                shifts.push(n + m);
+                pi += 1;
+            }
+        }
+    }
+    let conv_ns = conv_t0.elapsed().as_nanos() as u64;
+    let acc_t0 = Instant::now();
+    let mut out = vec![0i64; ctx.oh * ctx.ow];
+    for or in 0..ctx.oh {
+        for g in 0..ctx.groups {
+            acc.reset(&mut stats);
+            for (p, &shift) in shifts.iter().enumerate() {
+                let w = flat[(p * ctx.oh + or) * ctx.groups + g];
+                // `push_planes` trims trailing zero planes, so a
+                // single-plane slice charges exactly what the generic
+                // path's `[w, 0]` pair does.
+                acc.push_planes(std::slice::from_ref(&w), shift, &mut stats);
+            }
+            let row_vals = acc.finish(&mut stats);
+            let gw = ctx.group_w.min(ctx.ow - g * ctx.group_w);
+            for ocx in 0..gw {
+                out[or * ctx.ow + g * ctx.group_w + ocx] = row_vals[ocx] as i64;
+            }
+        }
+    }
+    let acc_ns = acc_t0.elapsed().as_nanos() as u64;
+    OcPassResult { oc, stats, out, conv_ns, acc_ns }
 }
 
 /// Cross-writing accumulation subarray: partial counts are written as

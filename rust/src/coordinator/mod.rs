@@ -33,7 +33,7 @@ pub use engine::{
     AnalyticEngine, EngineFactory, EngineKind, Execution, ExecutionPlan, Fidelity,
     InferenceEngine, PoolSpec,
 };
-pub use functional::FunctionalEngine;
+pub use functional::{FunctionalEngine, HostLayerProfile};
 pub use serve::{serve, serve_pool};
 pub use serve::{
     BatchLaw, Completion, CostTable, EngineMode, NetworkReport, Request, ServeConfig,

@@ -40,7 +40,9 @@
 //!   host thread per chip; a single-network bit-accurate chip's stream
 //!   is further split across worker threads
 //!   ([`ServeConfig::host_workers`]) with a deterministic,
-//!   bit-identical merge — host wall time is the only thing that
+//!   bit-identical merge, and each replica spends its share of the same
+//!   budget on the functional engine's per-filter fan-out inside each
+//!   request — host wall time is the only thing that
 //!   changes. Batches are scheduled on the simulated clock behind a
 //!   bounded queue ([`pool::timeline`]), so a saturated chip exerts
 //!   backpressure instead of queueing unboundedly.
@@ -261,8 +263,13 @@ pub struct ServeConfig {
     pub engine: EngineMode,
     /// Host worker threads per chip for bit-accurate serving (`None`
     /// picks the automatic budget: host cores / chips, overridable via
-    /// the `NANDSPIN_HOST_WORKERS` environment variable). Changes host
-    /// wall time only — results are bit-identical for every count.
+    /// the `NANDSPIN_HOST_WORKERS` environment variable). This is one
+    /// budget shared by both levels of host parallelism on a chip:
+    /// request-stream splitting across engine replicas and the
+    /// per-filter fan-out *inside* each request — a chip divides its
+    /// budget between them instead of oversubscribing (single-request
+    /// serves put all of it into the fan-out). Changes host wall time
+    /// only — results are bit-identical for every count.
     pub host_workers: Option<usize>,
 }
 

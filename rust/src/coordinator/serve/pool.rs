@@ -31,6 +31,15 @@
 //! single-thread run whatever the worker count. Only host wall time
 //! changes.
 //!
+//! The same budget also feeds the *intra-request* filter fan-out inside
+//! [`crate::coordinator::functional::FunctionalEngine`]: a chip's
+//! `workers` threads are divided between `R` request-split replicas and
+//! a `⌊workers / R⌋` per-replica fan-out budget
+//! ([`InferenceEngine::set_host_workers`]), so the two levels of
+//! parallelism share one budget instead of oversubscribing the host.
+//! Short streams (down to a single request) put the whole budget into
+//! the fan-out.
+//!
 //! [`timeline`] models each chip as a FIFO single server behind a
 //! bounded batch queue: a batch flushed while the queue is full is held
 //! back (backpressure) until a slot frees, which is how a saturated
@@ -44,6 +53,7 @@ use crate::cnn::network::Network;
 use crate::cnn::ref_exec::{ModelParams, WideTensor};
 
 use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine, PoolSpec};
+use crate::coordinator::functional::HostLayerProfile;
 
 use super::batcher::FlushCause;
 use super::{Request, ServedNetwork};
@@ -117,6 +127,10 @@ pub struct ChipResult {
     pub weight_hits: u64,
     /// Weight-residency misses (streams) on this chip's engine.
     pub weight_misses: u64,
+    /// Per-conv-layer host wall-time profile of this chip's last
+    /// request (bit-accurate engines; `None` for synthesized ones).
+    /// Wall-clock figures — diagnostic only, never simulated cost.
+    pub host_profile: Option<Vec<HostLayerProfile>>,
 }
 
 /// Execute `planned` batches on `chips` identical weight-resident
@@ -213,6 +227,14 @@ fn auto_workers(chips: usize) -> usize {
 /// discarded warm-up run). A chip serving several networks runs
 /// sequentially: its residency ledger depends on the exact network
 /// switch order, which a chunk split would not preserve.
+///
+/// `workers` is the chip's whole host budget, shared between the two
+/// levels of parallelism: `R` request-split replicas each get a
+/// `⌊workers / R⌋` intra-request (per-filter fan-out) budget, so a chip
+/// never runs more than ~`workers` busy threads regardless of how the
+/// split falls. When the stream is too short to split (`R == 1`), the
+/// whole budget goes to intra-request parallelism — that is what makes
+/// a functional `--requests 1` serve of a full-size network fast.
 fn run_chip(
     factory: &EngineFactory,
     nets: &[ServedNetwork<'_>],
@@ -222,29 +244,33 @@ fn run_chip(
 ) -> ChipResult {
     let n: usize = batches.iter().map(|b| b.requests.len()).sum();
     let single_net = batches.windows(2).all(|w| w[0].net == w[1].net);
-    let workers = if factory.kind() == EngineKind::Functional && single_net {
+    let replicas = if factory.kind() == EngineKind::Functional && single_net {
         workers.min(n / 2).max(1)
     } else {
         // Synthesized engines are closed-form — a split cannot pay —
         // and mixed-network streams are inherently serial.
         1
     };
-    if workers <= 1 {
-        run_chip_sequential(factory, nets, chip, batches)
+    let intra = (workers / replicas).max(1);
+    if replicas <= 1 {
+        run_chip_sequential(factory, nets, chip, batches, intra)
     } else {
-        run_chip_parallel(factory, nets, chip, batches, workers)
+        run_chip_parallel(factory, nets, chip, batches, replicas, intra)
     }
 }
 
-/// Serve one chip's batches on a fresh weight-resident engine.
+/// Serve one chip's batches on a fresh weight-resident engine with an
+/// `intra`-thread per-request fan-out budget.
 fn run_chip_sequential(
     factory: &EngineFactory,
     nets: &[ServedNetwork<'_>],
     chip: usize,
     batches: Vec<PlannedBatch>,
+    intra: usize,
 ) -> ChipResult {
     let mut engine = factory.build();
     engine.make_weights_resident();
+    engine.set_host_workers(intra);
     let mut out = Vec::with_capacity(batches.len());
     for b in batches {
         let sn = &nets[b.net];
@@ -267,18 +293,28 @@ fn run_chip_sequential(
         .residency()
         .map(|r| (r.hits, r.misses))
         .unwrap_or((0, 0));
-    ChipResult { chip, batches: out, weight_hits: hits, weight_misses: misses }
+    let host_profile = engine.host_profile().map(<[HostLayerProfile]>::to_vec);
+    ChipResult {
+        chip,
+        batches: out,
+        weight_hits: hits,
+        weight_misses: misses,
+        host_profile,
+    }
 }
 
 /// Serve one chip's single-network stream across `workers ≥ 2` engine
 /// replicas with a deterministic merge (see the module docs for why
-/// the result is bit-identical to [`run_chip_sequential`]).
+/// the result is bit-identical to [`run_chip_sequential`]). Each
+/// replica runs its per-request filter fan-out on `intra` threads —
+/// its share of the chip's one host budget.
 fn run_chip_parallel(
     factory: &EngineFactory,
     nets: &[ServedNetwork<'_>],
     chip: usize,
     batches: Vec<PlannedBatch>,
     workers: usize,
+    intra: usize,
 ) -> ChipResult {
     // Guarded by `run_chip`: every batch targets the same network.
     let sn = &nets[batches[0].net];
@@ -302,7 +338,8 @@ fn run_chip_parallel(
     }
     chunks.reverse();
 
-    let results: Vec<(Vec<ExecutedRequest>, u64)> = thread::scope(|scope| {
+    type WorkerOut = (Vec<ExecutedRequest>, u64, Option<Vec<HostLayerProfile>>);
+    let results: Vec<WorkerOut> = thread::scope(|scope| {
         let handles: Vec<_> = chunks
             .into_iter()
             .enumerate()
@@ -310,6 +347,7 @@ fn run_chip_parallel(
                 scope.spawn(move || {
                     let mut engine = factory.build();
                     engine.make_weights_resident();
+                    engine.set_host_workers(intra);
                     let mut out = Vec::with_capacity(chunk.len());
                     for (i, req) in chunk.iter().enumerate() {
                         if k > 0 && i == 0 {
@@ -325,7 +363,12 @@ fn run_chip_parallel(
                         out.push(ExecutedRequest { id: req.id, output, stats: exec.stats });
                     }
                     let misses = engine.residency().map(|r| r.misses).unwrap_or(0);
-                    (out, misses)
+                    let profile = if k == 0 {
+                        engine.host_profile().map(<[HostLayerProfile]>::to_vec)
+                    } else {
+                        None
+                    };
+                    (out, misses, profile)
                 })
             })
             .collect();
@@ -337,9 +380,11 @@ fn run_chip_parallel(
     // are the chip's one cold weight stream (= conv-layer count), and
     // every other request of the stream is a warm hit on each of those
     // layers, exactly as one engine serving the stream would record.
-    let streams = results.first().map(|(_, m)| *m).unwrap_or(0);
+    let streams = results.first().map(|(_, m, _)| *m).unwrap_or(0);
+    let mut host_profile = None;
     let mut all: Vec<ExecutedRequest> = Vec::with_capacity(n);
-    for (out, _) in results {
+    for (out, _, profile) in results {
+        host_profile = host_profile.or(profile);
         all.extend(out);
     }
     let mut all = all.into_iter();
@@ -359,6 +404,7 @@ fn run_chip_parallel(
         batches: out_batches,
         weight_hits: streams * (n as u64 - 1),
         weight_misses: streams,
+        host_profile,
     }
 }
 

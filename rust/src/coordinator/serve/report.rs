@@ -149,6 +149,10 @@ pub struct ChipReport {
     pub weight_hits: u64,
     /// Weight-residency misses (weight streams) on this chip's engine.
     pub weight_misses: u64,
+    /// Per-conv-layer host wall-time profile of this chip's last
+    /// request (bit-accurate engines only; wall-clock diagnostics, not
+    /// simulated cost — `serve --verbose` prints it).
+    pub host_profile: Option<Vec<crate::coordinator::functional::HostLayerProfile>>,
 }
 
 impl ChipReport {
@@ -265,6 +269,7 @@ impl ServeReport {
                 queue_wait_ns: 0.0,
                 weight_hits: result.weight_hits,
                 weight_misses: result.weight_misses,
+                host_profile: result.host_profile,
             };
             for (batch, timing) in result.batches.into_iter().zip(chip_timings) {
                 report.batches += 1;
@@ -644,6 +649,7 @@ mod tests {
                 }],
                 weight_hits: 1,
                 weight_misses: 1,
+                host_profile: None,
             },
             ChipResult {
                 chip: 1,
@@ -657,6 +663,7 @@ mod tests {
                 }],
                 weight_hits: 0,
                 weight_misses: 1,
+                host_profile: None,
             },
         ];
         let timings = vec![
@@ -832,6 +839,7 @@ mod tests {
             }],
             weight_hits: 0,
             weight_misses: 1,
+            host_profile: None,
         }];
         let timings = vec![vec![BatchTiming {
             enqueue_ns: 0.0,

@@ -537,7 +537,8 @@ fn cmd_serve(args: &[String]) {
     let requests: usize =
         get("requests", &default_requests.to_string()).parse().unwrap_or(default_requests);
     let seed: u64 = get("seed", "1").parse().unwrap_or(1);
-    if args.iter().any(|a| a == "--verbose") {
+    let verbose = args.iter().any(|a| a == "--verbose");
+    if verbose {
         for net in &nets {
             print_tiling_plan(net, bits);
         }
@@ -603,6 +604,58 @@ fn cmd_serve(args: &[String]) {
     let report = serve_pool(&pool, &scfg, &served, Request::interleave(streams));
     report.verify().expect("serve aggregation identities");
     println!("{report}");
+    if verbose {
+        print_host_profiles(&report);
+    }
+}
+
+/// Per-layer host wall-time profile of each chip's last bit-accurate
+/// request (`serve --verbose`). Wall-clock diagnostics of the simulator
+/// itself — not simulated device cost. `pass` is the wall time of the
+/// whole filter fan-out; `conv`/`acc` are summed across its workers, so
+/// with several workers they exceed `pass`.
+fn print_host_profiles(report: &nandspin::coordinator::ServeReport) {
+    let ms = |ns: u64| ns as f64 / 1e6;
+    for chip in &report.chips {
+        let Some(profile) = &chip.host_profile else { continue };
+        if profile.is_empty() {
+            continue;
+        }
+        println!("host profile, chip {} (last request, wall-clock):", chip.chip);
+        println!(
+            "  {:>4}  {:<16} {:>7} {:>5} {:>9} {:>9} {:>9} {:>9}",
+            "node", "layer", "workers", "tiles", "load ms", "pass ms", "conv ms", "acc ms"
+        );
+        let (mut load, mut pass, mut conv, mut acc) = (0u64, 0u64, 0u64, 0u64);
+        for l in profile {
+            println!(
+                "  {:>4}  {:<16} {:>7} {:>5} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+                l.node,
+                l.label,
+                l.workers,
+                l.tiles,
+                ms(l.load_ns),
+                ms(l.pass_ns),
+                ms(l.conv_ns),
+                ms(l.acc_ns)
+            );
+            load += l.load_ns;
+            pass += l.pass_ns;
+            conv += l.conv_ns;
+            acc += l.acc_ns;
+        }
+        println!(
+            "  {:>4}  {:<16} {:>7} {:>5} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+            "",
+            "total",
+            "",
+            "",
+            ms(load),
+            ms(pass),
+            ms(conv),
+            ms(acc)
+        );
+    }
 }
 
 fn main() -> ExitCode {

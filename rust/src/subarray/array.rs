@@ -176,6 +176,25 @@ impl Subarray {
         self.buffer.clear();
     }
 
+    /// Host-side bulk row image load **without charging any cost**:
+    /// copies `data` into MTJ rows `base..base + data.len()` (masked to
+    /// this subarray's columns), leaving counters and buffer untouched.
+    ///
+    /// This exists for the intra-request fan-out in the functional
+    /// coordinator: the charged load of a `(tile, channel, bit-plane)`
+    /// slab happens exactly once on the shared charge stream, after
+    /// which each worker mirrors the already-paid-for bits into its
+    /// private compute subarray. Pairs with [`Subarray::clear_state`] —
+    /// neither models a device operation.
+    ///
+    /// # Panics
+    /// If `base + data.len()` exceeds the row count.
+    pub fn host_load_rows(&mut self, base: usize, data: &[u128]) {
+        for (i, &w) in data.iter().enumerate() {
+            self.rows[base + i] = w & self.col_mask;
+        }
+    }
+
     // ----------------------------------------------------------------
     // Compute mode (Fig. 5d)
     // ----------------------------------------------------------------
@@ -348,6 +367,17 @@ mod tests {
         assert_eq!(s.peek_row(9), 0);
         assert_eq!(s.buffer.read(1), 0);
         assert!(s.counters.is_zero());
+    }
+
+    #[test]
+    fn host_load_rows_is_uncharged_and_masked() {
+        let mut s = Subarray::new(16, 8, 2, DeviceCosts::default());
+        let st = Stats::default();
+        s.host_load_rows(4, &[u128::MAX, 0b1010_1010]);
+        assert_eq!(st, Stats::default(), "host load must charge nothing");
+        assert_eq!(s.peek_row(4), 0xff, "words are masked to the column width");
+        assert_eq!(s.peek_row(5), 0b1010_1010);
+        assert_eq!(s.peek_row(6), 0, "rows outside the image stay untouched");
     }
 
     #[test]

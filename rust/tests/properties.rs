@@ -783,6 +783,145 @@ fn property_multilayer_tiled_network_matches_untiled() {
 }
 
 // ====================================================================
+// Intra-request parallelism: the per-filter fan-out must be
+// bit-identical — outputs AND Stats — at any worker count, with and
+// without the 1×1 fast path.
+// ====================================================================
+
+/// Run `net` on a fresh paper-config engine with an explicit
+/// intra-request worker budget, optionally forcing the tile planner
+/// down and/or the 1×1 conv layers onto the generic stepper.
+fn engine_run_workers(
+    net: &Network,
+    params: &ModelParams,
+    input: &QTensor,
+    tile_cap: Option<(usize, usize)>,
+    workers: usize,
+    fast_paths: bool,
+) -> (Vec<WideTensor>, Stats) {
+    let mut eng = FunctionalEngine::new(ArchConfig::paper());
+    if let Some((r, c)) = tile_cap {
+        eng.force_tile_capacity(r, c);
+    }
+    eng.set_host_workers(workers);
+    if !fast_paths {
+        eng.disable_fast_paths();
+    }
+    let outs = eng.run(net, params, input);
+    (outs, eng.stats)
+}
+
+#[test]
+fn property_intra_request_fanout_bit_identical_across_worker_counts() {
+    // Randomized single-conv networks (varied kernel/stride/padding)
+    // behind a forced tile boundary: workers ∈ {1, 2, 7} must agree
+    // bit-for-bit on the output AND on every Stats field — the ledger
+    // merge replays the sequential charge order exactly.
+    let mut rng = Rng::seed_from_u64(0xFA17);
+    for case in 0..8u64 {
+        let stride = rng.gen_usize(1, 3);
+        let kh = stride + rng.gen_usize(0, 3);
+        let kw = stride + rng.gen_usize(0, 3);
+        let pad = rng.gen_usize(0, 2);
+        let h = rng.gen_usize(kh.max(4), 13);
+        let w = rng.gen_usize(kw.max(6), 19);
+        let c = rng.gen_usize(1, 3);
+        let out_c = rng.gen_usize(2, 6);
+        let ibits = rng.gen_usize(1, 4) as u8;
+        let wbits = rng.gen_usize(1, 4) as u8;
+        let rows_cap = (kh + stride * rng.gen_usize(0, 5)).max(8);
+        let cols_cap = kw + stride * rng.gen_usize(0, 2);
+        let net = Network {
+            name: format!("FanoutProp{case}"),
+            input: (c, h, w),
+            input_bits: ibits,
+            nodes: vec![Node {
+                layer: Layer::Conv { out_c, kh, kw, stride, pad },
+                input: None,
+            }],
+        };
+        let params = ModelParams::random(&net, wbits, 0xFA20 + case);
+        let input = QTensor::random(c, h, w, ibits, 0xFA30 + case);
+        let golden = ref_exec::execute(&net, &params, &input);
+        let cap = Some((rows_cap, cols_cap));
+        let ctx = format!(
+            "case {case}: c={c} {h}x{w} k={kh}x{kw} s={stride} p={pad} oc={out_c} \
+             i{ibits} w{wbits} cap={rows_cap}x{cols_cap}"
+        );
+        let (base_out, base_st) = engine_run_workers(&net, &params, &input, cap, 1, true);
+        assert_eq!(base_out, golden, "{ctx}: workers=1 vs golden");
+        for workers in [2usize, 7] {
+            let (out, st) = engine_run_workers(&net, &params, &input, cap, workers, true);
+            assert_eq!(out, base_out, "{ctx}: workers={workers} outputs");
+            assert_eq!(st, base_st, "{ctx}: workers={workers} Stats");
+        }
+    }
+}
+
+#[test]
+fn property_intra_request_fanout_whole_network_invariant() {
+    // Whole-network version: every small_cnn node output and the full
+    // Stats account are worker-count invariant even with the convs
+    // forcibly tiled (same capacities as the tiled-equivalence test).
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 0x90D);
+    let input = QTensor::random(2, 14, 22, 3, 0x90E);
+    let golden = ref_exec::execute(&net, &params, &input);
+    let cap = Some((8, 7));
+    let (base_out, base_st) = engine_run_workers(&net, &params, &input, cap, 1, true);
+    for (i, (a, b)) in base_out.iter().zip(&golden).enumerate() {
+        assert_eq!(a, b, "workers=1 node {i} vs golden");
+    }
+    for workers in [2usize, 7] {
+        let (out, st) = engine_run_workers(&net, &params, &input, cap, workers, true);
+        assert_eq!(out, base_out, "workers={workers}: outputs");
+        assert_eq!(st, base_st, "workers={workers}: Stats");
+    }
+}
+
+#[test]
+fn property_1x1_fast_path_matches_generic_bit_and_stats() {
+    // Randomized 1×1 stride-1 convs (the pointwise layers the fast path
+    // targets), with and without padding and forced width tiling: the
+    // flat-buffer fast path must agree with the generic tiled stepper
+    // bit-for-bit on outputs AND Stats, at every worker count.
+    let mut rng = Rng::seed_from_u64(0x1B17);
+    for case in 0..6u64 {
+        let c = rng.gen_usize(1, 4);
+        let out_c = rng.gen_usize(2, 7);
+        let h = rng.gen_usize(3, 10);
+        let w = rng.gen_usize(4, 14);
+        let pad = rng.gen_usize(0, 2);
+        let ibits = rng.gen_usize(1, 5) as u8;
+        let wbits = rng.gen_usize(1, 5) as u8;
+        let cols_cap = rng.gen_usize(2, 6);
+        let net = Network {
+            name: format!("PointwiseProp{case}"),
+            input: (c, h, w),
+            input_bits: ibits,
+            nodes: vec![Node {
+                layer: Layer::Conv { out_c, kh: 1, kw: 1, stride: 1, pad },
+                input: None,
+            }],
+        };
+        let params = ModelParams::random(&net, wbits, 0x1B20 + case);
+        let input = QTensor::random(c, h, w, ibits, 0x1B30 + case);
+        let golden = ref_exec::execute(&net, &params, &input);
+        let cap = Some((8, cols_cap));
+        let ctx = format!(
+            "case {case}: c={c} {h}x{w} p={pad} oc={out_c} i{ibits} w{wbits} cap=8x{cols_cap}"
+        );
+        let (g_out, g_st) = engine_run_workers(&net, &params, &input, cap, 1, false);
+        assert_eq!(g_out, golden, "{ctx}: generic vs golden");
+        for workers in [1usize, 2, 7] {
+            let (f_out, f_st) = engine_run_workers(&net, &params, &input, cap, workers, true);
+            assert_eq!(f_out, golden, "{ctx}: fast path workers={workers} outputs");
+            assert_eq!(f_st, g_st, "{ctx}: fast path workers={workers} Stats");
+        }
+    }
+}
+
+// ====================================================================
 // Cost-aware shard router: invariants over randomized heterogeneous
 // pools.
 // ====================================================================
