@@ -129,6 +129,57 @@ impl OpCounts {
     }
 }
 
+/// Fault-injection and recovery counters, recorded by the subarray
+/// fault hooks ([`crate::device::fault::FaultPlan`]) alongside the op
+/// counts. They ride inside [`Stats`], so they flow through the same
+/// `merge_serial` / `merge_parallel` / `delta_since` / [`OpLedger`]
+/// machinery — the fan-out merge stays bit-identical at any worker
+/// count, fault counters included.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultLedger {
+    /// Transient STT program failures injected (one intended bit
+    /// failed to switch in a program step).
+    pub program_faults: u64,
+    /// SPCSA decision flips injected on read senses.
+    pub read_flips: u64,
+    /// SPCSA decision flips injected on AND senses.
+    pub and_flips: u64,
+    /// Write-verify retries performed (each charged as a real
+    /// erase + program rewrite).
+    pub write_retries: u64,
+    /// Rows spared after the retry budget was exhausted (each charged
+    /// as a remap rewrite onto a spare row).
+    pub spared_rows: u64,
+}
+
+impl FaultLedger {
+    /// Injected fault events (excludes the recovery actions).
+    pub fn injected(&self) -> u64 {
+        self.program_faults + self.read_flips + self.and_flips
+    }
+
+    /// True when nothing was injected and nothing was recovered.
+    pub fn is_zero(&self) -> bool {
+        *self == FaultLedger::default()
+    }
+
+    fn add(&mut self, o: &FaultLedger) {
+        self.program_faults += o.program_faults;
+        self.read_flips += o.read_flips;
+        self.and_flips += o.and_flips;
+        self.write_retries += o.write_retries;
+        self.spared_rows += o.spared_rows;
+    }
+
+    fn sub(&mut self, o: &FaultLedger) {
+        self.program_faults -= o.program_faults;
+        self.read_flips -= o.read_flips;
+        self.and_flips -= o.and_flips;
+        self.write_retries -= o.write_retries;
+        self.spared_rows -= o.spared_rows;
+    }
+}
+
 /// Queue / batching counters of the serving runtime
 /// ([`crate::coordinator::serve`](mod@crate::coordinator::serve)):
 /// how requests moved through the
@@ -162,6 +213,9 @@ pub struct Stats {
     phases: [PhaseStats; 7],
     /// Op counts (not phase-resolved).
     pub ops: OpCounts,
+    /// Fault-injection / recovery counters (all-zero when no fault
+    /// plan is active).
+    pub faults: FaultLedger,
 }
 
 impl Index<Phase> for Stats {
@@ -214,6 +268,7 @@ impl Stats {
             self.phases[i].latency_ns += other.phases[i].latency_ns;
         }
         self.ops.add(&other.ops);
+        self.faults.add(&other.faults);
     }
 
     /// Parallel composition: `others` ran concurrently — energies sum,
@@ -229,6 +284,7 @@ impl Stats {
         }
         for o in others {
             self.ops.add(&o.ops);
+            self.faults.add(&o.faults);
         }
     }
 
@@ -253,6 +309,7 @@ impl Stats {
             d.phases[i].latency_ns -= earlier.phases[i].latency_ns;
         }
         d.ops.sub(&earlier.ops);
+        d.faults.sub(&earlier.faults);
         d
     }
 
@@ -332,6 +389,14 @@ impl fmt::Display for Stats {
                 100.0 * s.latency_ns / self.total_latency_ns().max(f64::MIN_POSITIVE),
                 s.energy_fj * 1e-12,
                 100.0 * s.energy_fj / self.total_energy_fj().max(f64::MIN_POSITIVE),
+            )?;
+        }
+        if !self.faults.is_zero() {
+            let f_ = &self.faults;
+            writeln!(
+                f,
+                "  faults: {} program, {} read flips, {} AND flips; {} retries, {} spared",
+                f_.program_faults, f_.read_flips, f_.and_flips, f_.write_retries, f_.spared_rows,
             )?;
         }
         Ok(())
@@ -428,6 +493,32 @@ mod tests {
         assert_eq!(pa.energy_fj.to_bits(), pb.energy_fj.to_bits());
         assert_eq!(pa.latency_ns.to_bits(), pb.latency_ns.to_bits());
         assert_eq!(a.ops, b.ops);
+    }
+
+    #[test]
+    fn fault_ledger_flows_through_merges_and_deltas() {
+        let mut a = Stats::default();
+        a.faults.program_faults = 2;
+        a.faults.write_retries = 1;
+        let mut b = Stats::default();
+        b.faults.read_flips = 3;
+        b.faults.spared_rows = 1;
+        let snap = a.clone();
+        a.merge_serial(&b);
+        assert_eq!(a.faults.program_faults, 2);
+        assert_eq!(a.faults.read_flips, 3);
+        assert_eq!(a.faults.injected(), 5);
+        let d = a.delta_since(&snap);
+        assert_eq!(d.faults, b.faults);
+        let mut p = Stats::default();
+        p.merge_parallel(&[a.clone(), b.clone()]);
+        assert_eq!(p.faults.read_flips, 6);
+        assert_eq!(p.faults.write_retries, 1);
+        assert!(!p.faults.is_zero());
+        assert!(Stats::default().faults.is_zero());
+        // The Display fault line appears only when something happened.
+        assert!(!format!("{}", Stats::default()).contains("faults:"));
+        assert!(format!("{p}").contains("faults:"));
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::cnn::ref_exec::{ModelParams, WideTensor};
 use crate::cnn::tensor::QTensor;
 use crate::coordinator::analytic::{AnalyticModel, Calibration};
 use crate::coordinator::functional::{FunctionalEngine, HostLayerProfile};
+use crate::device::fault::FaultPlan;
 
 /// The two engine implementations the factory can build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -143,6 +144,13 @@ pub trait InferenceEngine: Send {
     fn host_profile(&self) -> Option<&[HostLayerProfile]> {
         None
     }
+
+    /// Install a fault-injection plan ([`FaultPlan`]). Engines that
+    /// simulate individual device operations inject the plan's
+    /// stochastic faults and charge the recovery work; engines that
+    /// synthesize closed-form stats (the analytic engine) have no
+    /// per-op fault surface and ignore it.
+    fn set_fault_plan(&mut self, _plan: FaultPlan) {}
 }
 
 /// Bit width of a non-negative value (engine-local copy of the
@@ -304,6 +312,10 @@ impl InferenceEngine for FunctionalEngine {
 
     fn host_profile(&self) -> Option<&[HostLayerProfile]> {
         Some(FunctionalEngine::host_profile(self))
+    }
+
+    fn set_fault_plan(&mut self, plan: FaultPlan) {
+        FunctionalEngine::set_fault_plan(self, plan);
     }
 }
 
@@ -473,12 +485,13 @@ impl InferenceEngine for AnalyticEngine {
 pub struct EngineFactory {
     cfg: ArchConfig,
     kind: EngineKind,
+    fault: Option<FaultPlan>,
 }
 
 impl EngineFactory {
     /// Factory building `kind` engines for `cfg`.
     pub fn new(cfg: ArchConfig, kind: EngineKind) -> Self {
-        Self { cfg, kind }
+        Self { cfg, kind, fault: None }
     }
 
     /// Kind of engine this factory builds.
@@ -491,12 +504,28 @@ impl EngineFactory {
         &self.cfg
     }
 
+    /// Install a fault plan on every engine this factory builds (an
+    /// inactive plan clears it). The serve pool uses this to give each
+    /// chip its own seeded fault stream.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault = plan.is_active().then_some(plan);
+    }
+
+    /// The factory's fault plan, if an active one is installed.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref()
+    }
+
     /// Build a fresh engine.
     pub fn build(&self) -> Box<dyn InferenceEngine> {
-        match self.kind {
+        let mut engine: Box<dyn InferenceEngine> = match self.kind {
             EngineKind::Functional => Box::new(FunctionalEngine::new(self.cfg.clone())),
             EngineKind::Analytic => Box::new(AnalyticEngine::new(self.cfg.clone())),
+        };
+        if let Some(plan) = self.fault {
+            engine.set_fault_plan(plan);
         }
+        engine
     }
 
     /// Plan `net` on a fresh engine of this factory's kind.
@@ -552,6 +581,13 @@ impl PoolSpec {
     /// The factory (operating point) of chip `chip`.
     pub fn factory(&self, chip: usize) -> &EngineFactory {
         &self.factories[chip]
+    }
+
+    /// Mutable access to chip `chip`'s factory — used to install
+    /// per-chip fault plans or adjust an operating point before the
+    /// pool is served.
+    pub fn factory_mut(&mut self, chip: usize) -> &mut EngineFactory {
+        &mut self.factories[chip]
     }
 
     /// All per-chip factories, in chip order.

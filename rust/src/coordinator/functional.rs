@@ -30,6 +30,7 @@ use crate::cnn::quantize::{BnParams, QuantParams};
 use crate::cnn::ref_exec::{avg_pool_scale, ModelParams, WideTensor};
 use crate::cnn::tensor::{Kernel4, QTensor};
 use crate::device::energy::DeviceCosts;
+use crate::device::fault::{fault_ctx, mix, FaultPlan};
 use crate::mapping::{ConvMapping, PoolSplit, TileExtent, TilePlan};
 use crate::subarray::conv::{
     bitplane_conv_counts_tiled, window_sum_planes, BitKernel, ConvGeometry, KernelTiling,
@@ -207,6 +208,19 @@ pub struct FunctionalEngine {
     fast_paths: bool,
     /// Per-conv-layer host wall-time profile of the most recent `run`.
     profile: Vec<HostLayerProfile>,
+    /// Active fault-injection plan ([`FunctionalEngine::set_fault_plan`]).
+    /// `None` — the default, and any plan with all-zero rates — keeps
+    /// every code path bit-identical to the fault-free model.
+    fault: Option<FaultPlan>,
+    /// Fault context epoch of the current `run`: a hash of the input
+    /// tensor, so each request draws an independent fault stream that
+    /// is a pure function of the request (never of replica chunking,
+    /// warm-up replays or host worker count).
+    fault_epoch: u64,
+    /// Per-run sequence number of scratch-subarray checkouts; combined
+    /// with the epoch it gives every logical use of a scratch subarray
+    /// its own fault context in deterministic program order.
+    fault_seq: u64,
 }
 
 /// Upper bound on pooled scratch subarrays (a conv layer holds
@@ -229,7 +243,25 @@ impl FunctionalEngine {
             host_workers: None,
             fast_paths: true,
             profile: Vec::new(),
+            fault: None,
+            fault_epoch: 0,
+            fault_seq: 0,
         }
+    }
+
+    /// Install a fault-injection plan: subsequent runs inject the
+    /// plan's stochastic device faults (and recover them through the
+    /// charged write-verify-retry loop). An inactive plan (all-zero
+    /// rates) installs nothing. Fault events are a pure function of
+    /// `(plan, input, layer, filter)`, so runs are bit-identical across
+    /// repeats and at every host worker count.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault = plan.is_active().then_some(plan);
+    }
+
+    /// The installed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref()
     }
 
     /// Pin the intra-request worker budget: the per-filter fan-out of
@@ -312,8 +344,12 @@ impl FunctionalEngine {
     }
 
     /// Take a cleared subarray from the scratch pool (or build one).
+    /// With a fault plan active, the checkout installs a fresh fault
+    /// context derived from the run's input epoch and the checkout
+    /// sequence number — deterministic program order, so the fault
+    /// stream never depends on pool history or worker count.
     fn take_subarray(&mut self) -> Subarray {
-        match self.scratch.pop() {
+        let mut s = match self.scratch.pop() {
             Some(mut s) => {
                 s.clear_state();
                 s
@@ -324,7 +360,16 @@ impl FunctionalEngine {
                 self.cfg.buffer_rows.max(16),
                 self.cfg.costs,
             ),
+        };
+        match self.fault {
+            Some(plan) => {
+                let ctx = fault_ctx(&[self.fault_epoch, self.fault_seq]);
+                self.fault_seq += 1;
+                s.set_fault(plan, ctx);
+            }
+            None => s.clear_fault(),
         }
+        s
     }
 
     /// Return a subarray to the scratch pool for reuse.
@@ -384,6 +429,21 @@ impl FunctionalEngine {
         assert_eq!((input.c, input.h, input.w), net.input);
         self.conv_seq = 0;
         self.profile.clear();
+        if self.fault.is_some() {
+            // Fault epoch: a pure function of the request's input, so
+            // every request draws its own stream and a replay of the
+            // same request replays the same faults.
+            self.fault_epoch = input.data().iter().fold(
+                fault_ctx(&[
+                    input.c as u64,
+                    input.h as u64,
+                    input.w as u64,
+                    input.bits as u64,
+                ]),
+                |acc, &v| mix(acc ^ v as u64),
+            );
+            self.fault_seq = 0;
+        }
         if self.residency.is_some() {
             let identity = net.fingerprint();
             if self.resident_net != Some(identity) {
@@ -633,10 +693,27 @@ impl FunctionalEngine {
             costs: self.cfg.costs,
             bus_width_bits: self.cfg.bus_width_bits,
             sub_cols: self.cfg.cols,
-            fast_1x1: self.fast_paths && kh == 1 && kw == 1 && stride == 1,
+            // The 1×1 fast path hand-charges the op stream without real
+            // subarray senses, so it cannot inject faults — a fault
+            // plan routes through the generic stepper instead.
+            fast_1x1: self.fast_paths
+                && self.fault.is_none()
+                && kh == 1
+                && kw == 1
+                && stride == 1,
+            fault: self.fault,
+            fault_epoch: self.fault_epoch,
+            node: node as u64,
         };
         let workers = self.effective_workers().min(k.oc).max(1);
         let pass_t0 = Instant::now();
+        // Lane subarrays get their per-filter fault context inside
+        // `run_oc_pass` (so sequential and parallel schedules draw the
+        // same streams); the checkout-time contexts they consume here
+        // are never used for a draw, so the sequence number is restored
+        // afterwards to keep post-conv checkouts worker-count
+        // independent.
+        let seq_snap = self.fault_seq;
         let mut results: Vec<OcPassResult> = Vec::with_capacity(k.oc);
         if workers <= 1 {
             let mut sub = self.take_subarray();
@@ -683,6 +760,7 @@ impl FunctionalEngine {
                 self.recycle_subarray(acc.into_subarray());
             }
         }
+        self.fault_seq = seq_snap;
         let pass_ns = pass_t0.elapsed().as_nanos() as u64;
 
         // Deterministic merge: outputs scatter by filter index; the
@@ -787,7 +865,12 @@ impl FunctionalEngine {
                 }
                 // Read the winners back out.
                 let vals = self.load_vertical(&sub, 0, b, batch.len(), Phase::Pooling);
-                debug_assert_eq!(vals, cur, "in-array max must match tracked max");
+                // Under fault injection a sense flip can legitimately
+                // diverge the array's winner from the host-tracked one.
+                debug_assert!(
+                    sub.fault_active() || vals == cur,
+                    "in-array max must match tracked max"
+                );
                 for (&(r, q), v) in batch.iter().zip(&vals) {
                     *y.at_mut(c, r, q) = *v;
                 }
@@ -1008,8 +1091,16 @@ struct PassContext<'a> {
     /// Real subarray column count (device-op charges scale with it).
     sub_cols: usize,
     /// Take the flat-buffer 1×1 fast path (charge stream identical to
-    /// the generic stepper, asserted by property tests).
+    /// the generic stepper, asserted by property tests). Never taken
+    /// with a fault plan active.
     fast_1x1: bool,
+    /// Active fault plan, if any; each filter pass installs a context
+    /// derived from `(fault_epoch, node, oc)` on its lane.
+    fault: Option<FaultPlan>,
+    /// The run's input-derived fault epoch.
+    fault_epoch: u64,
+    /// Node index of this conv layer within the network.
+    node: u64,
 }
 
 /// One filter pass's outcome: its zero-based stats delta (a ledger
@@ -1030,6 +1121,14 @@ fn run_oc_pass(
     sub: &mut Subarray,
     acc: &mut ColumnAccumulator,
 ) -> OcPassResult {
+    if let Some(plan) = ctx.fault {
+        // Per-pass fault context: a pure function of (input epoch,
+        // layer, filter), so which lane or worker runs the pass — and
+        // in what order — never changes the injected faults.
+        let pass = fault_ctx(&[ctx.fault_epoch, ctx.node, oc as u64]);
+        sub.set_fault(plan, pass);
+        acc.set_fault(plan, mix(pass ^ 0xACC));
+    }
     if ctx.fast_1x1 {
         run_oc_pass_1x1(ctx, oc, acc)
     } else {
@@ -1342,6 +1441,12 @@ impl ColumnAccumulator {
             }
         }
         vals
+    }
+
+    /// Install a fault context on the accumulation subarray (see
+    /// [`Subarray::set_fault`]).
+    fn set_fault(&mut self, plan: FaultPlan, ctx: u64) {
+        self.sub.set_fault(plan, ctx);
     }
 
     /// Release the underlying subarray back to the caller's pool.

@@ -36,8 +36,8 @@ pub use engine::{
 pub use functional::{FunctionalEngine, HostLayerProfile};
 pub use serve::{serve, serve_pool};
 pub use serve::{
-    BatchLaw, Completion, CostTable, EngineMode, NetworkReport, Request, ServeConfig,
-    ServeReport, ServedNetwork, SloPolicy, SpotCheck,
+    BatchLaw, ChipReport, Completion, CostTable, EngineMode, FaultSummary, NetworkReport,
+    Request, ServeConfig, ServeReport, ServedNetwork, SloPolicy, SpotCheck,
 };
 
 use crate::arch::area::AreaModel;

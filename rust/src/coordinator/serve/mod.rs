@@ -61,7 +61,19 @@
 //!
 //! Everything is deterministic: batching and routing run on the
 //! simulated clock before execution starts, chips are independent, and
-//! host threads only parallelise the simulation work itself.
+//! host threads only parallelise the simulation work itself. That
+//! includes fault injection: with a [`FaultPlan`] active
+//! ([`ServeConfig::fault`] or per-chip factory plans), chips draw
+//! independent seeded fault streams, a chip whose injected-fault rate
+//! trips [`ServeConfig::fault_health_threshold`] is marked unhealthy
+//! and its batches are drained and re-routed to the survivors under
+//! [`ServeConfig::retry_budget`], and the [`ServeReport`] carries the
+//! exact fault/failover account.
+
+// Serving must degrade, not panic: a `.unwrap()` on this path would
+// turn one bad batch into a dropped stream. Use `expect` with a
+// reason, or handle the case.
+#![deny(clippy::unwrap_used)]
 
 pub mod batcher;
 pub mod laws;
@@ -72,18 +84,21 @@ pub mod router;
 pub use batcher::{DynamicBatcher, Flush, FlushCause, SloBatcher};
 pub use laws::{serving_wbits, BatchLaw};
 pub use pool::{BatchTiming, PlannedBatch};
-pub use report::{ChipReport, Completion, NetworkReport, ServeReport, SpotCheck};
+pub use report::{ChipReport, Completion, FaultSummary, NetworkReport, ServeReport, SpotCheck};
 pub use router::{CostTable, ShardRouter};
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use crate::arch::config::ArchConfig;
+use crate::arch::stats::Stats;
 use crate::cnn::network::Network;
 use crate::cnn::ref_exec::ModelParams;
 use crate::cnn::tensor::QTensor;
 use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine, PoolSpec};
+use crate::device::fault::FaultPlan;
 
+use pool::ChipResult;
 use report::NetworkMeta;
 
 /// One inference request.
@@ -271,6 +286,20 @@ pub struct ServeConfig {
     /// serves put all of it into the fan-out). Changes host wall time
     /// only — results are bit-identical for every count.
     pub host_workers: Option<usize>,
+    /// Serve-wide fault plan: specialised per chip via
+    /// [`FaultPlan::for_chip`] so chips draw independent fault
+    /// streams. A chip whose factory carries its own plan keeps it.
+    /// `None` (or an inactive plan) serves on the exact fault-free
+    /// path. Only bit-accurate engines inject faults; synthesized
+    /// engines ignore the plan (a hybrid serve still injects on its
+    /// spot-check replays).
+    pub fault: Option<FaultPlan>,
+    /// Extra failover rounds the serve may spend re-routing batches
+    /// off chips that trip the health threshold (0 = never fail over).
+    pub retry_budget: usize,
+    /// Injected-fault events per charged device op above which a chip
+    /// is marked unhealthy and drained.
+    pub fault_health_threshold: f64,
 }
 
 impl Default for ServeConfig {
@@ -284,6 +313,9 @@ impl Default for ServeConfig {
             arrival_interval_ns: 0.0,
             engine: EngineMode::Functional,
             host_workers: None,
+            fault: None,
+            retry_budget: 1,
+            fault_health_threshold: 0.01,
         }
     }
 }
@@ -314,6 +346,12 @@ impl ServeConfig {
             if check_every == 0 {
                 return Err("hybrid check stride must be >= 1".into());
             }
+        }
+        if let Some(plan) = &self.fault {
+            plan.rates.validate()?;
+        }
+        if !self.fault_health_threshold.is_finite() || self.fault_health_threshold < 0.0 {
+            return Err("fault health threshold must be a non-negative rate".into());
         }
         Ok(())
     }
@@ -423,6 +461,21 @@ pub fn serve_pool(
             .collect(),
     );
 
+    // Fault plans: a chip whose factory carries its own plan keeps it;
+    // otherwise the serve-wide plan is specialised per chip so chips
+    // draw independent fault streams. With none active, execution is
+    // the exact fault-free path.
+    let fault_plans: Vec<Option<FaultPlan>> = (0..pool.chips())
+        .map(|chip| {
+            pool.factory(chip)
+                .fault_plan()
+                .copied()
+                .or_else(|| scfg.fault.map(|p| p.for_chip(chip)))
+                .filter(FaultPlan::is_active)
+        })
+        .collect();
+    let fault_active = fault_plans.iter().any(Option::is_some);
+
     // Hybrid: sample every K-th request (by stream position) for the
     // functional replay, before the planner consumes the stream — but
     // only for networks where the replay is actually possible (params
@@ -446,6 +499,22 @@ pub fn serve_pool(
             .filter(|(i, r)| i % check_every == 0 && replayable[r.net])
             .map(|(_, r)| (r.id, r.net, r.image.clone()))
             .collect(),
+        _ => Vec::new(),
+    };
+    // Escalation reserve: under an active fault plan a hybrid serve
+    // may halve its spot-check stride if the run degrades, so hold
+    // clones of the extra sample positions too (fault-free serves skip
+    // the clones and keep today's exact behaviour).
+    let extra_samples: Vec<(u64, usize, QTensor)> = match scfg.engine {
+        EngineMode::Hybrid { check_every } if fault_active && check_every > 1 => {
+            let stride = (check_every / 2).max(1);
+            requests
+                .iter()
+                .enumerate()
+                .filter(|(i, r)| i % check_every != 0 && i % stride == 0 && replayable[r.net])
+                .map(|(_, r)| (r.id, r.net, r.image.clone()))
+                .collect()
+        }
         _ => Vec::new(),
     };
 
@@ -474,8 +543,110 @@ pub fn serve_pool(
     }
     let counters = batcher.counters();
 
-    // Execute: one host thread per chip, weight-resident engines.
-    let results = pool::execute_pool(pool, nets, planned, scfg.host_workers);
+    // Execute: one host thread per chip, weight-resident engines. With
+    // no active fault plan this is exactly the fault-free path; under
+    // one, the failover loop below drains and re-routes batches off
+    // chips whose injected-fault rate trips the health threshold,
+    // spending at most `retry_budget` extra rounds.
+    let chips = pool.chips();
+    let mut unhealthy = vec![false; chips];
+    // (rounds, failed-over batches, failed-over requests).
+    let mut failover = (0u64, 0u64, 0u64);
+    let results = if !fault_active {
+        pool::execute_pool(pool, nets, planned, scfg.host_workers)
+    } else {
+        let mut fpool = pool.clone();
+        for (chip, plan) in fault_plans.iter().enumerate() {
+            if let Some(p) = plan {
+                fpool.factory_mut(chip).set_fault_plan(*p);
+            }
+        }
+        let mut retired: Vec<ChipResult> = (0..chips)
+            .map(|chip| ChipResult {
+                chip,
+                batches: Vec::new(),
+                weight_hits: 0,
+                weight_misses: 0,
+                host_profile: None,
+            })
+            .collect();
+        let mut pending = planned;
+        while !pending.is_empty() {
+            // Re-routable clones: a tripped chip's round is discarded
+            // and re-executed from these on a surviving chip.
+            let spares: Vec<PlannedBatch> = pending
+                .iter()
+                .map(|b| PlannedBatch {
+                    seq: b.seq,
+                    chip: b.chip,
+                    net: b.net,
+                    cause: b.cause,
+                    flush_ns: b.flush_ns,
+                    requests: b
+                        .requests
+                        .iter()
+                        .map(|r| Request { id: r.id, net: r.net, image: r.image.clone() })
+                        .collect(),
+                    arrivals_ns: b.arrivals_ns.clone(),
+                })
+                .collect();
+            let results = pool::execute_pool(&fpool, nets, pending, scfg.host_workers);
+            // Health: injected fault events per charged device op,
+            // over the chip's batches of this round.
+            let newly: Vec<usize> = results
+                .iter()
+                .filter(|r| !unhealthy[r.chip] && !r.batches.is_empty())
+                .filter(|r| {
+                    let mut s = Stats::default();
+                    for b in &r.batches {
+                        for q in &b.requests {
+                            s.merge_serial(&q.stats);
+                        }
+                    }
+                    let ops = s.ops.reads + s.ops.ands + s.ops.program_steps;
+                    s.faults.injected() as f64
+                        > scfg.fault_health_threshold * ops.max(1) as f64
+                })
+                .map(|r| r.chip)
+                .collect();
+            let healthy = unhealthy.iter().filter(|&&u| !u).count();
+            if newly.is_empty()
+                || failover.0 >= scfg.retry_budget as u64
+                || newly.len() >= healthy
+            {
+                // Nothing tripped, the budget is spent, or draining
+                // would leave no chip: retire this round as-is so
+                // every request is still served.
+                for r in results {
+                    retire(&mut retired[r.chip], r);
+                }
+                break;
+            }
+            failover.0 += 1;
+            for &chip in &newly {
+                unhealthy[chip] = true;
+                router.mark_unhealthy(chip);
+            }
+            for r in results {
+                if !unhealthy[r.chip] {
+                    retire(&mut retired[r.chip], r);
+                }
+            }
+            pending = Vec::new();
+            for mut b in spares {
+                if unhealthy[b.chip] {
+                    failover.1 += 1;
+                    failover.2 += b.requests.len() as u64;
+                    b.chip = router.route(b.net, b.requests.len());
+                    pending.push(b);
+                }
+            }
+        }
+        for r in &mut retired {
+            r.batches.sort_by_key(|b| b.seq);
+        }
+        retired
+    };
 
     // Account: schedule each chip's batches behind its bounded queue.
     let timings: Vec<Vec<BatchTiming>> = results
@@ -499,11 +670,53 @@ pub fn serve_pool(
         counters,
         started.elapsed().as_secs_f64(),
     );
+    if fault_active {
+        report.faults.active = true;
+        report.faults.failover_rounds = failover.0;
+        report.faults.failed_over_batches = failover.1;
+        report.faults.failed_over_requests = failover.2;
+        report.faults.unhealthy_chips = unhealthy.iter().filter(|&&u| u).count() as u64;
+        for c in &mut report.chips {
+            c.healthy = !unhealthy[c.chip];
+        }
+    }
     if !samples.is_empty() {
-        report.spot_check = spot_check(pool, nets, &samples, &report);
+        let (mut check, replay_stats) = spot_check(pool, nets, &fault_plans, &samples, &report);
+        // Hybrid degradation: when the serve failed chips over, or the
+        // fault-injected replays themselves trip the health threshold,
+        // halve the spot-check stride by folding the reserve samples in.
+        let replay_ops =
+            replay_stats.ops.reads + replay_stats.ops.ands + replay_stats.ops.program_steps;
+        let replay_tripped = replay_stats.faults.injected() as f64
+            > scfg.fault_health_threshold * replay_ops.max(1) as f64;
+        let degraded = unhealthy.iter().any(|&u| u) || replay_tripped;
+        if degraded && !extra_samples.is_empty() {
+            report.faults.spot_check_escalated = true;
+            let (extra, _) = spot_check(pool, nets, &fault_plans, &extra_samples, &report);
+            check = match (check, extra) {
+                (Some(mut a), Some(b)) => {
+                    a.absorb(&b);
+                    Some(a)
+                }
+                (a, b) => a.or(b),
+            };
+        }
+        report.spot_check = check;
         report.wall_seconds = started.elapsed().as_secs_f64();
     }
     report
+}
+
+/// Fold one execution round's result for a chip into its retired
+/// account (the failover loop may execute a chip more than once).
+fn retire(into: &mut ChipResult, from: ChipResult) {
+    debug_assert_eq!(into.chip, from.chip);
+    into.batches.extend(from.batches);
+    into.weight_hits += from.weight_hits;
+    into.weight_misses += from.weight_misses;
+    if from.host_profile.is_some() {
+        into.host_profile = from.host_profile;
+    }
 }
 
 /// Route one flushed batch of network `net` and stamp it with its
@@ -530,17 +743,23 @@ type ReplayEngines = HashMap<(usize, usize), Option<Box<dyn InferenceEngine>>>;
 
 /// Replay the sampled requests on bit-accurate engines at the
 /// operating point of the chip that served each sample, and fold each
-/// replay's functional/analytic stat ratios into a [`SpotCheck`].
+/// replay's functional/analytic stat ratios into a [`SpotCheck`]. A
+/// serving chip's fault plan is installed on its replay engine, so the
+/// replays see the degradation the synthesized serve cannot model.
 /// Samples whose serving chip cannot run their network functionally
-/// are skipped; returns `None` when nothing could be replayed.
+/// are skipped; the check is `None` when nothing could be replayed.
+/// Also returns the serial fold of every replay's stats (the caller
+/// judges replay fault rates from it).
 fn spot_check(
     pool: &PoolSpec,
     nets: &[ServedNetwork<'_>],
+    fault_plans: &[Option<FaultPlan>],
     samples: &[(u64, usize, QTensor)],
     report: &ServeReport,
-) -> Option<SpotCheck> {
+) -> (Option<SpotCheck>, Stats) {
     let mut engines: ReplayEngines = HashMap::new();
     let mut check = SpotCheck::new();
+    let mut replay_stats = Stats::default();
     for (id, net_idx, image) in samples {
         let sn = &nets[*net_idx];
         let Some(params) = sn.params else { continue };
@@ -556,6 +775,9 @@ fn spot_check(
             );
             if factory.plan(sn.net).supported {
                 let mut engine = factory.build();
+                if let Some(plan) = fault_plans[completion.chip] {
+                    engine.set_fault_plan(plan);
+                }
                 engine.make_weights_resident();
                 Some(engine)
             } else {
@@ -565,23 +787,26 @@ fn spot_check(
         let Some(engine) = entry.as_mut() else { continue };
         let replay = engine.execute(sn.net, Some(params), image);
         let analytic = &completion.stats;
+        replay_stats.merge_serial(&replay.stats);
         check.observe(
             replay.stats.total_latency_ns() / analytic.total_latency_ns().max(f64::MIN_POSITIVE),
             replay.stats.total_energy_fj() / analytic.total_energy_fj().max(f64::MIN_POSITIVE),
         );
     }
     if check.checked == 0 {
-        None
+        (None, replay_stats)
     } else {
-        Some(check)
+        (Some(check), replay_stats)
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may panic on impossible states
 mod tests {
     use super::*;
     use crate::cnn::network::small_cnn;
     use crate::cnn::ref_exec;
+    use crate::device::fault::FaultRates;
 
     fn requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
         Request::stream(
@@ -770,6 +995,25 @@ mod tests {
         assert!(ServeConfig::default().validate().is_ok());
         assert!(ServeConfig {
             engine: EngineMode::Hybrid { check_every: 4 },
+            ..ServeConfig::default()
+        }
+        .validate()
+        .is_ok());
+        assert!(ServeConfig {
+            fault: Some(FaultPlan::new(1, FaultRates::uniform(1.5))),
+            ..ServeConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(ServeConfig { fault_health_threshold: f64::NAN, ..ServeConfig::default() }
+            .validate()
+            .is_err());
+        assert!(ServeConfig { fault_health_threshold: -0.1, ..ServeConfig::default() }
+            .validate()
+            .is_err());
+        assert!(ServeConfig {
+            fault: Some(FaultPlan::new(1, FaultRates::uniform(1e-3))),
+            retry_budget: 2,
             ..ServeConfig::default()
         }
         .validate()

@@ -12,7 +12,7 @@
 
 use std::fmt;
 
-use crate::arch::stats::{QueueCounters, Stats};
+use crate::arch::stats::{FaultLedger, QueueCounters, Stats};
 use crate::cnn::ref_exec::WideTensor;
 
 use super::pool::{BatchTiming, ChipResult};
@@ -137,6 +137,9 @@ pub struct ChipReport {
     pub batches: u64,
     /// Batches that stalled on this chip's full queue (backpressure).
     pub stalled_batches: u64,
+    /// False when the failover loop took this chip out of rotation
+    /// (its injected-fault rate tripped the health threshold).
+    pub healthy: bool,
     /// Serial merge of the chip's per-request stats.
     pub stats: Stats,
     /// Total execution time (ns) — the chip's busy time.
@@ -207,6 +210,22 @@ impl SpotCheck {
             (self.energy_ratio.0.min(energy_ratio), self.energy_ratio.1.max(energy_ratio));
     }
 
+    /// Fold another check's observations in (count sum, band union).
+    pub fn absorb(&mut self, other: &SpotCheck) {
+        if other.checked == 0 {
+            return;
+        }
+        self.checked += other.checked;
+        self.latency_ratio = (
+            self.latency_ratio.0.min(other.latency_ratio.0),
+            self.latency_ratio.1.max(other.latency_ratio.1),
+        );
+        self.energy_ratio = (
+            self.energy_ratio.0.min(other.energy_ratio.0),
+            self.energy_ratio.1.max(other.energy_ratio.1),
+        );
+    }
+
     /// True when every observed ratio sits inside [`Self::TOLERANCE`]
     /// (vacuously true when nothing was checked).
     pub fn passed(&self) -> bool {
@@ -220,6 +239,30 @@ impl Default for SpotCheck {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// Fault-injection and failover account of one serving run. The
+/// `ledger` is the fold of every completion's fault counters (an exact
+/// integer identity [`ServeReport::verify`] re-derives); the failover
+/// fields are filled by the serve runtime as it reacts to chips whose
+/// injected-fault rate trips the health threshold.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSummary {
+    /// True when any chip served under an active fault plan.
+    pub active: bool,
+    /// Aggregate injected/recovered fault counters across every request.
+    pub ledger: FaultLedger,
+    /// Extra planning rounds the failover loop ran (0 = no chip tripped).
+    pub failover_rounds: u64,
+    /// Batches drained off unhealthy chips and re-routed.
+    pub failed_over_batches: u64,
+    /// Requests riding in those re-routed batches.
+    pub failed_over_requests: u64,
+    /// Chips the failover loop marked unhealthy.
+    pub unhealthy_chips: u64,
+    /// True when a hybrid serve escalated its spot-check stride in
+    /// response to a failover.
+    pub spot_check_escalated: bool,
 }
 
 /// Summary of one serving run.
@@ -237,6 +280,8 @@ pub struct ServeReport {
     pub counters: QueueCounters,
     /// Functional spot-check of a hybrid run, when one was possible.
     pub spot_check: Option<SpotCheck>,
+    /// Fault-injection / failover account of the run.
+    pub faults: FaultSummary,
     /// Host wall-clock the simulation itself took, seconds.
     pub wall_seconds: f64,
 }
@@ -263,6 +308,7 @@ impl ServeReport {
                 served: 0,
                 batches: 0,
                 stalled_batches: 0,
+                healthy: true,
                 stats: Stats::default(),
                 busy_ns: 0.0,
                 finish_ns: 0.0,
@@ -346,7 +392,19 @@ impl ServeReport {
                 report
             })
             .collect();
-        Self { engine, completions, chips, networks, counters, spot_check: None, wall_seconds }
+        let mut report = Self {
+            engine,
+            completions,
+            chips,
+            networks,
+            counters,
+            spot_check: None,
+            faults: FaultSummary::default(),
+            wall_seconds,
+        };
+        report.faults.ledger = report.total_stats().faults;
+        report.faults.active = !report.faults.ledger.is_zero();
+        report
     }
 
     /// Requests served.
@@ -410,8 +468,11 @@ impl ServeReport {
     /// parts (including each network's deadline-violation count, which
     /// is re-derived from the raw flush stamps), the queue
     /// counters must be consistent with the emitted batches, the output
-    /// fidelity must match the engine mode, and a hybrid spot-check (if
-    /// one ran) must sit inside its plausibility band.
+    /// fidelity must match the engine mode, the fault ledgers (per-chip
+    /// and aggregate) must equal the exact integer fold of the
+    /// per-request counters with the unhealthy-chip tally matching the
+    /// per-chip flags, and a hybrid spot-check (if one ran) must sit
+    /// inside its plausibility band.
     pub fn verify(&self) -> Result<(), String> {
         let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0);
         if self.counters.enqueued != self.served() as u64 {
@@ -469,6 +530,13 @@ impl ServeReport {
             if !close(wait, chip.queue_wait_ns) {
                 return Err(format!("chip {}: queue-wait roll-up mismatch", chip.chip));
             }
+            let mut fold = Stats::default();
+            for c in &per_req {
+                fold.merge_serial(&c.stats);
+            }
+            if fold.faults != chip.stats.faults {
+                return Err(format!("chip {}: fault-ledger roll-up mismatch", chip.chip));
+            }
         }
         for c in &self.completions {
             if c.net >= self.networks.len() {
@@ -525,6 +593,19 @@ impl ServeReport {
         if !close(total.total_energy_fj(), req_energy) {
             return Err("aggregate energy != sum of per-request energies".into());
         }
+        if total.faults != self.faults.ledger {
+            return Err("aggregate fault ledger != fold of per-chip ledgers".into());
+        }
+        if !self.faults.ledger.is_zero() && !self.faults.active {
+            return Err("fault counters recorded without an active fault plan".into());
+        }
+        let unhealthy = self.chips.iter().filter(|c| !c.healthy).count() as u64;
+        if unhealthy != self.faults.unhealthy_chips {
+            return Err(format!(
+                "unhealthy-chip count {} != per-chip flags {}",
+                self.faults.unhealthy_chips, unhealthy
+            ));
+        }
         if let Some(sc) = &self.spot_check {
             if !sc.passed() {
                 return Err(format!(
@@ -550,7 +631,7 @@ impl fmt::Display for ServeReport {
         for c in &self.chips {
             writeln!(
                 f,
-                "{:>5} {:>8} {:>8} {:>8} {:>12.4} {:>12.4} {:>10.4} {:>7.1}% {:>7}/{}",
+                "{:>5} {:>8} {:>8} {:>8} {:>12.4} {:>12.4} {:>10.4} {:>7.1}% {:>7}/{}{}",
                 c.chip,
                 c.served,
                 c.batches,
@@ -561,6 +642,7 @@ impl fmt::Display for ServeReport {
                 100.0 * c.utilisation(makespan),
                 c.weight_hits,
                 c.weight_misses,
+                if c.healthy { "" } else { "  UNHEALTHY" },
             )?;
         }
         for n in &self.networks {
@@ -593,6 +675,24 @@ impl fmt::Display for ServeReport {
             self.engine.label(),
             if self.engine.bit_accurate() { " (bit-accurate)" } else { " (synthesized stats)" },
         )?;
+        if self.faults.active {
+            let fl = &self.faults;
+            writeln!(
+                f,
+                "faults: {} program / {} read / {} and injected; {} write retries, {} rows \
+                 spared; {} batches ({} requests) failed over in {} rounds; {} unhealthy chips{}",
+                fl.ledger.program_faults,
+                fl.ledger.read_flips,
+                fl.ledger.and_flips,
+                fl.ledger.write_retries,
+                fl.ledger.spared_rows,
+                fl.failed_over_batches,
+                fl.failed_over_requests,
+                fl.failover_rounds,
+                fl.unhealthy_chips,
+                if fl.spot_check_escalated { "; spot-check stride escalated" } else { "" },
+            )?;
+        }
         if let Some(sc) = &self.spot_check {
             writeln!(
                 f,
@@ -620,6 +720,7 @@ impl fmt::Display for ServeReport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may panic on impossible states
 mod tests {
     use super::super::batcher::FlushCause;
     use super::super::pool::{BatchTiming, ChipResult, ExecutedBatch, ExecutedRequest};
@@ -784,6 +885,75 @@ mod tests {
         assert!(!bad.passed());
         r.spot_check = Some(bad);
         assert!(r.verify().is_err(), "out-of-band spot check must fail verify");
+    }
+
+    #[test]
+    fn fault_ledger_rolls_up_and_is_verified() {
+        // Give one request injected faults and recovery work: the
+        // aggregate ledger must be their exact fold, the report counts
+        // as fault-active, and tampering any fault account fails verify.
+        let mut results = vec![ChipResult {
+            chip: 0,
+            batches: vec![ExecutedBatch {
+                seq: 0,
+                net: 0,
+                cause: FlushCause::Drain,
+                flush_ns: 0.0,
+                arrivals_ns: vec![0.0, 0.0],
+                requests: vec![req(0, 100.0, 10.0), req(1, 50.0, 5.0)],
+            }],
+            weight_hits: 1,
+            weight_misses: 1,
+            host_profile: None,
+        }];
+        results[0].batches[0].requests[0].stats.faults.program_faults = 4;
+        results[0].batches[0].requests[0].stats.faults.write_retries = 2;
+        results[0].batches[0].requests[1].stats.faults.read_flips = 3;
+        let timings = vec![vec![BatchTiming {
+            enqueue_ns: 0.0,
+            start_ns: 0.0,
+            finish_ns: 150.0,
+            stalled: false,
+        }]];
+        let counters = QueueCounters {
+            enqueued: 2,
+            batches: 1,
+            drain_flushes: 1,
+            max_queue_depth: 2,
+            max_batch: 2,
+            ..QueueCounters::default()
+        };
+        let meta = vec![NetworkMeta { name: "faulty".into(), deadline_ns: 100.0 }];
+        let r =
+            ServeReport::assemble(EngineMode::Functional, meta, results, timings, counters, 0.0);
+        assert!(r.faults.active, "non-zero ledger marks the run fault-active");
+        assert_eq!(r.faults.ledger.program_faults, 4);
+        assert_eq!(r.faults.ledger.read_flips, 3);
+        assert_eq!(r.faults.ledger.write_retries, 2);
+        assert_eq!(r.faults.ledger.injected(), 7);
+        r.verify().expect("fault identities hold");
+        let text = format!("{r}");
+        assert!(text.contains("faults: 4 program / 3 read / 0 and injected"), "{text}");
+
+        let mut tampered = r;
+        tampered.faults.ledger.program_faults += 1;
+        assert!(tampered.verify().is_err(), "tampered aggregate ledger must fail");
+        tampered.faults.ledger.program_faults -= 1;
+        tampered.chips[0].stats.faults.read_flips += 1;
+        assert!(tampered.verify().is_err(), "tampered per-chip ledger must fail");
+    }
+
+    #[test]
+    fn unhealthy_chip_flags_must_match_the_summary() {
+        let mut r = synthetic_report();
+        assert!(r.chips.iter().all(|c| c.healthy), "chips start healthy");
+        r.verify().expect("healthy report verifies");
+        r.chips[1].healthy = false;
+        assert!(r.verify().is_err(), "flagged chip without a summary count must fail");
+        r.faults.unhealthy_chips = 1;
+        r.verify().expect("flag and summary agree");
+        let text = format!("{r}");
+        assert!(text.contains("UNHEALTHY"), "{text}");
     }
 
     #[test]

@@ -89,6 +89,8 @@ pub struct ShardRouter {
     resident_net: Vec<Option<usize>>,
     /// Batches routed to each chip so far.
     routed_batches: Vec<u64>,
+    /// Chips taken out of rotation (fault-health failover).
+    unhealthy: Vec<bool>,
 }
 
 impl ShardRouter {
@@ -100,6 +102,7 @@ impl ShardRouter {
             est_busy_ns: vec![0.0; chips],
             resident_net: vec![None; chips],
             routed_batches: vec![0; chips],
+            unhealthy: vec![false; chips],
         }
     }
 
@@ -135,17 +138,18 @@ impl ShardRouter {
     /// batch cost, residency-aware), lowest index winning ties, then
     /// charges the batch to that chip and marks `net` resident there.
     /// Zero-cost batches still advance the horizon by 1 ns so they
-    /// cannot pile onto one chip.
+    /// cannot pile onto one chip. Chips marked unhealthy are skipped.
     ///
     /// # Panics
-    /// If `net` is outside the cost table.
+    /// If `net` is outside the cost table or no healthy chip remains.
     pub fn route(&mut self, net: usize, requests: usize) -> usize {
         assert!(net < self.costs.nets(), "network {net} is not in the cost table");
         let chip = (0..self.chips())
+            .filter(|&c| !self.unhealthy[c])
             .map(|c| (c, self.est_busy_ns[c] + self.batch_cost_ns(c, net, requests)))
             .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
             .map(|(c, _)| c)
-            .expect("at least one chip");
+            .expect("at least one healthy chip");
         let cost = self.batch_cost_ns(chip, net, requests);
         self.est_busy_ns[chip] += cost.max(1.0);
         self.resident_net[chip] = Some(net);
@@ -161,6 +165,22 @@ impl ShardRouter {
     /// Batches routed to `chip` so far.
     pub fn routed_batches(&self, chip: usize) -> u64 {
         self.routed_batches[chip]
+    }
+
+    /// Take `chip` out of rotation: [`Self::route`] will never pick it
+    /// again. Its in-flight batches are the caller's to re-route.
+    pub fn mark_unhealthy(&mut self, chip: usize) {
+        self.unhealthy[chip] = true;
+    }
+
+    /// True when `chip` is still in rotation.
+    pub fn is_healthy(&self, chip: usize) -> bool {
+        !self.unhealthy[chip]
+    }
+
+    /// Chips still in rotation.
+    pub fn healthy_chips(&self) -> usize {
+        self.unhealthy.iter().filter(|&&u| !u).count()
     }
 }
 
@@ -248,5 +268,31 @@ mod tests {
         let mut r = ShardRouter::new(CostTable::new(vec![vec![(0.0, 0.0)]; 2]));
         assert_eq!(r.route(0, 1), 0);
         assert_eq!(r.route(0, 1), 1, "zero-cost batches must not pile on one chip");
+    }
+
+    #[test]
+    fn unhealthy_chips_are_skipped() {
+        let mut r = ShardRouter::identical(3);
+        assert_eq!(r.healthy_chips(), 3);
+        r.mark_unhealthy(0);
+        assert!(!r.is_healthy(0));
+        assert_eq!(r.healthy_chips(), 2);
+        let chips: Vec<usize> = (0..4).map(|_| r.route(0, 1)).collect();
+        assert_eq!(chips, vec![1, 2, 1, 2], "chip 0 must never be picked again");
+    }
+
+    #[test]
+    fn failover_prefers_the_cheapest_survivor() {
+        // Chip 0 is the clear earliest finisher until it is marked
+        // unhealthy; routing then falls over to the next-cheapest chip.
+        let mut r = ShardRouter::new(CostTable::new(vec![
+            vec![(1.0, 1.0)],
+            vec![(5.0, 5.0)],
+            vec![(50.0, 50.0)],
+        ]));
+        assert_eq!(r.route(0, 1), 0);
+        r.mark_unhealthy(0);
+        assert_eq!(r.route(0, 1), 1, "survivors compete on cost as before");
+        assert_eq!(r.route(0, 1), 1);
     }
 }

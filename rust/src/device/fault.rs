@@ -1,0 +1,258 @@
+//! Deterministic, seeded fault injection for the device layer.
+//!
+//! The paper's reliability argument (§3.2/§4.1) is quantified by
+//! [`variation`](crate::device::variation) as a sensing error *rate*;
+//! this module turns those rates into concrete, replayable fault
+//! events. A [`FaultPlan`] carries a seed plus per-operation
+//! probabilities for the three modelled failure modes:
+//!
+//! * **STT program failures** — one intended bit of a program step
+//!   fails to switch (transient write error, recovered by the
+//!   subarray's write-verify-retry loop);
+//! * **SPCSA read / AND decision flips** — one bit of a sensed word is
+//!   returned inverted (the stored cell is untouched);
+//! * **stuck-at cells** — a cell that can never be set (unipolar STT
+//!   programming only *sets* bits, so a defective cell manifests as
+//!   stuck-at-0); unrecoverable rows are spared with a charged remap.
+//!
+//! Every draw is a **pure function** of `(seed, context, op index,
+//! salt)` through the same SplitMix64 finalizer the repo's PRNG uses:
+//! no mutable RNG state is shared between workers, so fault events are
+//! bit-identical at any host worker count and across runs. A plan with
+//! all-zero rates is *inactive* and injects nothing — the zero-rate
+//! execution is bit-identical to a fault-free one.
+
+use crate::device::mtj::MtjParams;
+use crate::device::variation;
+
+/// Stateless SplitMix64 finalizer: the mixing function behind every
+/// fault draw. Identical constants to [`crate::util::Rng`], applied as
+/// a pure hash instead of a stateful stream.
+#[inline]
+pub fn mix(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Fold a word list into one context id (order-sensitive).
+#[inline]
+pub fn fault_ctx(words: &[u64]) -> u64 {
+    words.iter().fold(0x5EED_FA17_0000_0001, |acc, &w| mix(acc ^ w))
+}
+
+/// Per-operation fault probabilities.
+///
+/// `program_fail` and `read_flip` are probabilities **per device
+/// operation** (one program step / one read or AND sense of a whole
+/// row); `stuck_at` is the probability **per row** that one of its
+/// cells is stuck at 0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRates {
+    /// Per program step: one intended bit fails to switch.
+    pub program_fail: f64,
+    /// Per read/AND sense: one returned bit is flipped.
+    pub read_flip: f64,
+    /// Per row: one cell is stuck at 0 (never programs).
+    pub stuck_at: f64,
+}
+
+impl FaultRates {
+    /// All-zero rates (no faults).
+    pub fn zero() -> Self {
+        Self { program_fail: 0.0, read_flip: 0.0, stuck_at: 0.0 }
+    }
+
+    /// One uniform per-op rate for the transient modes, with stuck-at
+    /// two orders of magnitude rarer (hard defects are much rarer than
+    /// transient sensing/switching errors).
+    pub fn uniform(rate: f64) -> Self {
+        Self { program_fail: rate, read_flip: rate, stuck_at: rate / 100.0 }
+    }
+
+    /// Rates derived from the SPCSA Monte-Carlo of
+    /// [`variation::sensing_error_rates`] at resistance-variation
+    /// `sigma`: the per-cell decision error rate is lifted to a per-op
+    /// (128-column row) rate, and stuck-at defects are taken two
+    /// orders of magnitude rarer.
+    pub fn from_sensing(params: &MtjParams, sigma: f64) -> Self {
+        let e = variation::sensing_error_rates(params, sigma, 100_000, 0xFA17).single_cell;
+        let per_op = 1.0 - (1.0 - e).powi(128);
+        Self { program_fail: per_op, read_flip: per_op, stuck_at: per_op / 100.0 }
+    }
+
+    /// True when every rate is exactly zero.
+    pub fn is_zero(&self) -> bool {
+        self.program_fail == 0.0 && self.read_flip == 0.0 && self.stuck_at == 0.0
+    }
+
+    /// Reject non-finite or out-of-range probabilities.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("program_fail", self.program_fail),
+            ("read_flip", self.read_flip),
+            ("stuck_at", self.stuck_at),
+        ] {
+            if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                return Err(format!("fault rate {name} must be in [0, 1], got {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A seeded fault-injection plan: which faults happen is a pure
+/// function of `(seed, context, op index)`, so any run with the same
+/// plan replays the same faults bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed; [`FaultPlan::for_chip`] derives per-chip seeds.
+    pub seed: u64,
+    /// Per-op fault probabilities.
+    pub rates: FaultRates,
+    /// Bounded write-verify retries before a row is spared.
+    pub write_retry_limit: u32,
+}
+
+/// Default bounded retry attempts of the write-verify loop.
+pub const DEFAULT_WRITE_RETRY_LIMIT: u32 = 3;
+
+impl FaultPlan {
+    /// Plan with the given seed and rates and the default retry bound.
+    pub fn new(seed: u64, rates: FaultRates) -> Self {
+        Self { seed, rates, write_retry_limit: DEFAULT_WRITE_RETRY_LIMIT }
+    }
+
+    /// Inactive plan: zero rates, injects nothing.
+    pub fn disabled() -> Self {
+        Self::new(0, FaultRates::zero())
+    }
+
+    /// True when any rate is nonzero — an inactive plan's execution is
+    /// bit-identical to no plan at all.
+    pub fn is_active(&self) -> bool {
+        !self.rates.is_zero()
+    }
+
+    /// Same rates under a chip-specific seed, so a pool of chips
+    /// sharing one plan still draws independent fault streams.
+    pub fn for_chip(&self, chip: usize) -> Self {
+        Self { seed: mix(self.seed ^ mix(0xC41F ^ chip as u64)), ..*self }
+    }
+
+    #[inline]
+    fn hash(&self, ctx: u64, op: u64, salt: u64) -> u64 {
+        mix(self.seed ^ mix(ctx ^ mix(op ^ salt)))
+    }
+
+    /// Uniform draw in `[0, 1)` for `(ctx, op, salt)` — the standard
+    /// 53-mantissa-bit u64 → f64 construction.
+    #[inline]
+    pub fn unit(&self, ctx: u64, op: u64, salt: u64) -> f64 {
+        (self.hash(ctx, op, salt) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform index in `0..n` for `(ctx, op, salt)`.
+    ///
+    /// # Panics
+    /// If `n` is 0.
+    #[inline]
+    pub fn pick(&self, ctx: u64, op: u64, salt: u64, n: u32) -> u32 {
+        assert!(n > 0, "pick needs a non-empty range");
+        (self.hash(ctx, op, salt) % n as u64) as u32
+    }
+}
+
+/// The `k`-th (0-based) set bit of `w` as a one-hot mask.
+///
+/// # Panics
+/// If `w` has fewer than `k + 1` set bits.
+#[inline]
+pub fn nth_set_bit(mut w: u128, mut k: u32) -> u128 {
+    assert!(w.count_ones() > k, "nth_set_bit out of range");
+    loop {
+        let b = w & w.wrapping_neg();
+        if k == 0 {
+            return b;
+        }
+        w ^= b;
+        k -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_are_pure_functions_of_the_key() {
+        let p = FaultPlan::new(42, FaultRates::uniform(0.5));
+        assert_eq!(p.unit(1, 2, 3).to_bits(), p.unit(1, 2, 3).to_bits());
+        assert_eq!(p.pick(7, 8, 9, 128), p.pick(7, 8, 9, 128));
+        // Different keys decorrelate.
+        assert_ne!(p.unit(1, 2, 3).to_bits(), p.unit(1, 2, 4).to_bits());
+        assert_ne!(
+            p.unit(1, 2, 3).to_bits(),
+            FaultPlan::new(43, FaultRates::uniform(0.5)).unit(1, 2, 3).to_bits()
+        );
+    }
+
+    #[test]
+    fn unit_draws_are_roughly_uniform() {
+        let p = FaultPlan::new(7, FaultRates::uniform(1.0));
+        let n = 10_000;
+        let below: usize = (0..n).filter(|&i| p.unit(0, i as u64, 0) < 0.25).count();
+        assert!((n / 4 - n / 20..=n / 4 + n / 20).contains(&below), "{below}");
+    }
+
+    #[test]
+    fn zero_rates_are_inactive() {
+        assert!(!FaultPlan::disabled().is_active());
+        assert!(FaultPlan::new(1, FaultRates::uniform(1e-6)).is_active());
+        assert!(FaultRates::zero().is_zero());
+    }
+
+    #[test]
+    fn per_chip_seeds_differ_but_rates_are_shared() {
+        let p = FaultPlan::new(99, FaultRates::uniform(0.01));
+        let a = p.for_chip(0);
+        let b = p.for_chip(1);
+        assert_ne!(a.seed, b.seed);
+        assert_ne!(a.seed, p.seed);
+        assert_eq!(a.rates, p.rates);
+        assert_eq!(a.write_retry_limit, p.write_retry_limit);
+        // Deterministic derivation.
+        assert_eq!(p.for_chip(0).seed, a.seed);
+    }
+
+    #[test]
+    fn sensing_derived_rates_scale_with_variation() {
+        let lo = FaultRates::from_sensing(&MtjParams::default(), 0.05);
+        let hi = FaultRates::from_sensing(&MtjParams::default(), 0.15);
+        assert!(lo.validate().is_ok() && hi.validate().is_ok());
+        assert!(hi.read_flip > lo.read_flip);
+        assert!(lo.stuck_at < lo.read_flip, "hard defects are the rare mode");
+        // No variation, no faults.
+        assert!(FaultRates::from_sensing(&MtjParams::default(), 0.0).is_zero());
+    }
+
+    #[test]
+    fn validate_rejects_bad_probabilities() {
+        assert!(FaultRates::uniform(0.5).validate().is_ok());
+        assert!(FaultRates { program_fail: -0.1, ..FaultRates::zero() }.validate().is_err());
+        assert!(FaultRates { read_flip: 1.5, ..FaultRates::zero() }.validate().is_err());
+        assert!(FaultRates { stuck_at: f64::NAN, ..FaultRates::zero() }.validate().is_err());
+    }
+
+    #[test]
+    fn nth_set_bit_walks_set_bits_in_order() {
+        let w: u128 = 0b1011_0100;
+        assert_eq!(nth_set_bit(w, 0), 0b100);
+        assert_eq!(nth_set_bit(w, 1), 0b1_0000);
+        assert_eq!(nth_set_bit(w, 2), 0b10_0000);
+        assert_eq!(nth_set_bit(w, 3), 0b1000_0000);
+        let hi = 1u128 << 127;
+        assert_eq!(nth_set_bit(hi, 0), hi);
+    }
+}

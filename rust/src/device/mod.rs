@@ -10,7 +10,13 @@
 //! functional models ([`mtj`], [`nand_spin`], [`spcsa`]) implement the
 //! Table 1 signal semantics bit-accurately.
 
+// The device layer underpins every charged operation: a panicking
+// `.unwrap()` here would take down a whole serve. Use `expect` with a
+// reason, or handle the case.
+#![deny(clippy::unwrap_used)]
+
 pub mod energy;
+pub mod fault;
 pub mod llg;
 pub mod mtj;
 pub mod nand_spin;
@@ -18,6 +24,7 @@ pub mod spcsa;
 pub mod variation;
 
 pub use energy::DeviceCosts;
+pub use fault::{FaultPlan, FaultRates};
 pub use mtj::{Mtj, MtjState};
 pub use nand_spin::{NandSpinDevice, MTJS_PER_DEVICE};
 pub use spcsa::Spcsa;

@@ -34,7 +34,8 @@ use nandspin::coordinator::{
     ServedNetwork, SloPolicy,
 };
 use nandspin::device::llg::SwitchingModel;
-use nandspin::device::DeviceCosts;
+use nandspin::device::mtj::MtjParams;
+use nandspin::device::{DeviceCosts, FaultPlan, FaultRates};
 use nandspin::mapping::TilePlan;
 use nandspin::nvsim::NvSimModel;
 use nandspin::workload::{ImageBatch, PRECISION_GRID};
@@ -58,7 +59,8 @@ fn usage() -> ExitCode {
                            [--chips N | --chip-config CAP[:BUS],CAP[:BUS],...]\n\
                            [--batch N] [--deadline-us F] [--slo-us NAME=F,... or F,...]\n\
                            [--requests N (per network)] [--arrival-ns F] [--queue N]\n\
-                           [--workers N] [--seed N]"
+                           [--workers N] [--seed N]\n\
+                           [--fault-rate F|auto] [--fault-seed N] [--retry-budget N]"
     );
     ExitCode::FAILURE
 }
@@ -309,6 +311,53 @@ fn checked(scfg: ServeConfig) -> ServeConfig {
     scfg
 }
 
+/// Parse `value` for `--flag`, rejecting malformed input with an
+/// explicit error instead of silently falling back to a default.
+fn parse_flag<T: std::str::FromStr>(flag: &str, value: &str) -> Result<T, String> {
+    value.trim().parse::<T>().map_err(|_| format!("invalid value for --{flag}: '{value}'"))
+}
+
+/// Look `--flag` up (with `default`) and parse it, exiting with an
+/// explicit error on malformed input.
+fn parse_or_exit<T: std::str::FromStr>(
+    get: &impl Fn(&str, &str) -> String,
+    flag: &str,
+    default: &str,
+) -> T {
+    parse_flag(flag, &get(flag, default)).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
+}
+
+/// Parse a `--fault-rate` spec: a per-op probability in [0, 1], or
+/// `auto` to derive the rates from the SPCSA sensing Monte-Carlo at
+/// 10 % resistance variation.
+fn parse_fault_rates(spec: &str) -> Result<FaultRates, String> {
+    if spec.trim() == "auto" {
+        return Ok(FaultRates::from_sensing(&MtjParams::default(), 0.10));
+    }
+    let rate: f64 = parse_flag("fault-rate", spec)?;
+    let rates = FaultRates::uniform(rate);
+    rates.validate().map_err(|e| format!("invalid value for --fault-rate: {e}"))?;
+    Ok(rates)
+}
+
+/// Assemble the serve fault plan from `--fault-rate` / `--fault-seed`
+/// (`None` when no rate was given — the exact fault-free path).
+fn fault_flags(get: &impl Fn(&str, &str) -> String) -> Option<FaultPlan> {
+    let spec = get("fault-rate", "");
+    if spec.is_empty() {
+        return None;
+    }
+    let rates = parse_fault_rates(&spec).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let seed: u64 = parse_or_exit(get, "fault-seed", "7");
+    Some(FaultPlan::new(seed, rates))
+}
+
 /// Parse an optional `--workers N` host budget (`None` = automatic).
 fn host_workers_flag(get: &impl Fn(&str, &str) -> String) -> Option<usize> {
     let arg = get("workers", "");
@@ -326,9 +375,9 @@ fn host_workers_flag(get: &impl Fn(&str, &str) -> String) -> Option<usize> {
 
 fn cmd_run(args: &[String]) {
     let get = flags(args);
-    let batch: usize = get("batch", "8").parse().unwrap_or(8);
-    let seed: u64 = get("seed", "1").parse().unwrap_or(1);
-    let chips: usize = get("chips", "4").parse().unwrap_or(4);
+    let batch: usize = parse_or_exit(&get, "batch", "8");
+    let seed: u64 = parse_or_exit(&get, "seed", "1");
+    let chips: usize = parse_or_exit(&get, "chips", "4");
     let host_workers = host_workers_flag(&get);
     if batch == 0 {
         eprintln!("invalid serve configuration: need at least one request (--batch)");
@@ -471,7 +520,7 @@ fn cmd_serve(args: &[String]) {
             "small" | "small_cnn" | "small_resnet" | "micro" | "micro_cnn" | "wide" | "wide_cnn"
         )
     });
-    let check_every: usize = get("check-every", "4").parse().unwrap_or(4);
+    let check_every: usize = parse_or_exit(&get, "check-every", "4");
     let engine = match get("engine", "functional").as_str() {
         "functional" => EngineMode::Functional,
         "analytic" => EngineMode::Analytic,
@@ -490,8 +539,7 @@ fn cmd_serve(args: &[String]) {
     // bit-accurate engine, where the default drops to ⟨2:2⟩ so a bare
     // `serve --engine functional --network alexnet` finishes in minutes
     // (the multi-tile mapping and op stream are identical at any
-    // precision, only narrower). A malformed --bits falls back to the
-    // same default.
+    // precision, only narrower).
     let default_bits: u8 = if small_preset {
         4
     } else if bit_accurate {
@@ -499,7 +547,7 @@ fn cmd_serve(args: &[String]) {
     } else {
         8
     };
-    let bits: u8 = get("bits", &default_bits.to_string()).parse().unwrap_or(default_bits);
+    let bits: u8 = parse_or_exit(&get, "bits", &default_bits.to_string());
     let nets: Vec<Network> = net_tokens
         .iter()
         .map(|t| {
@@ -514,7 +562,7 @@ fn cmd_serve(args: &[String]) {
     // heterogeneous `--chip-config` list (one operating point per chip).
     let chip_spec = get("chip-config", "");
     let chip_cfgs: Vec<ArchConfig> = if chip_spec.is_empty() {
-        let chips: usize = get("chips", "4").parse().unwrap_or(4);
+        let chips: usize = parse_or_exit(&get, "chips", "4");
         vec![ArchConfig::paper(); chips.max(1)]
     } else {
         parse_chip_configs(&chip_spec)
@@ -522,21 +570,23 @@ fn cmd_serve(args: &[String]) {
 
     let scfg = checked(ServeConfig {
         chips: chip_cfgs.len(),
-        max_batch: get("batch", "8").parse().unwrap_or(8),
-        deadline_us: get("deadline-us", "50").parse().unwrap_or(50.0),
+        max_batch: parse_or_exit(&get, "batch", "8"),
+        deadline_us: parse_or_exit(&get, "deadline-us", "50"),
         slo: parse_slo(&get("slo-us", ""), &net_tokens),
-        queue_depth: get("queue", "2").parse().unwrap_or(2),
-        arrival_interval_ns: get("arrival-ns", "0").parse().unwrap_or(0.0),
+        queue_depth: parse_or_exit(&get, "queue", "2"),
+        arrival_interval_ns: parse_or_exit(&get, "arrival-ns", "0"),
         engine,
         host_workers: host_workers_flag(&get),
+        fault: fault_flags(&get),
+        retry_budget: parse_or_exit(&get, "retry-budget", "1"),
+        ..ServeConfig::default()
     });
     // Bit-accurate full-size serving simulates every device op of a
     // many-layer network per request; default to a short burst there
     // (the analytic engine keeps the long-stream default).
     let default_requests = if bit_accurate && !small_preset { 4 } else { 32 };
-    let requests: usize =
-        get("requests", &default_requests.to_string()).parse().unwrap_or(default_requests);
-    let seed: u64 = get("seed", "1").parse().unwrap_or(1);
+    let requests: usize = parse_or_exit(&get, "requests", &default_requests.to_string());
+    let seed: u64 = parse_or_exit(&get, "seed", "1");
     let verbose = args.iter().any(|a| a == "--verbose");
     if verbose {
         for net in &nets {
@@ -655,6 +705,56 @@ fn print_host_profiles(report: &nandspin::coordinator::ServeReport) {
             ms(conv),
             ms(acc)
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test per flag family: the count flags (usize), the time
+    // flags (f64), the seed/bits flags (u64/u8) and the fault spec.
+    // Malformed values must produce an explicit per-flag error, never
+    // a silent fall-back to the default.
+
+    #[test]
+    fn count_flags_reject_garbage() {
+        assert_eq!(parse_flag::<usize>("batch", "8"), Ok(8));
+        assert_eq!(parse_flag::<usize>("chips", " 4 "), Ok(4), "whitespace is trimmed");
+        assert!(parse_flag::<usize>("batch", "eight").is_err());
+        assert!(parse_flag::<usize>("chips", "-1").is_err());
+        assert!(parse_flag::<usize>("queue", "2.5").is_err());
+        let err = parse_flag::<usize>("requests", "lots").unwrap_err();
+        assert!(err.contains("--requests") && err.contains("lots"), "{err}");
+    }
+
+    #[test]
+    fn time_flags_reject_garbage() {
+        assert_eq!(parse_flag::<f64>("deadline-us", "50"), Ok(50.0));
+        assert_eq!(parse_flag::<f64>("arrival-ns", "12.5"), Ok(12.5));
+        assert!(parse_flag::<f64>("deadline-us", "soon").is_err());
+        assert!(parse_flag::<f64>("arrival-ns", "10ns").is_err());
+    }
+
+    #[test]
+    fn seed_and_bits_flags_reject_garbage() {
+        assert_eq!(parse_flag::<u64>("seed", "42"), Ok(42));
+        assert!(parse_flag::<u64>("seed", "0x2a").is_err(), "seeds are decimal");
+        assert_eq!(parse_flag::<u8>("bits", "4"), Ok(4));
+        assert!(parse_flag::<u8>("bits", "300").is_err(), "bits must fit u8");
+        assert!(parse_flag::<u8>("bits", "four").is_err());
+    }
+
+    #[test]
+    fn fault_rate_flag_parses_numbers_and_auto() {
+        let r = parse_fault_rates("1e-3").expect("explicit rate");
+        assert!((r.program_fail - 1e-3).abs() < 1e-15);
+        assert!((r.stuck_at - 1e-5).abs() < 1e-15, "stuck-at is two orders rarer");
+        let auto = parse_fault_rates("auto").expect("derived rates");
+        assert!(auto.validate().is_ok());
+        assert!(parse_fault_rates("broken").is_err());
+        assert!(parse_fault_rates("1.5").is_err(), "out-of-range rates are rejected");
+        assert!(parse_fault_rates("-0.1").is_err());
     }
 }
 

@@ -1,14 +1,73 @@
 //! The subarray functional + timing model: memory-mode ops
 //! (erase / program / read) and compute-mode ops (AND + bit-count),
 //! each charging the calibrated device costs into a [`Stats`] record.
+//!
+//! With a [`FaultPlan`] installed ([`Subarray::set_fault`]) the charged
+//! ops additionally inject deterministic, seeded faults: program steps
+//! can drop an intended bit (transient STT failure), senses can return
+//! a flipped bit (SPCSA decision flip), and rows can carry a stuck-at-0
+//! cell. [`Subarray::write_strip`] then verifies every write through
+//! the (fault-prone) sense path and retries a bounded number of times —
+//! each retry charged as a real erase + program rewrite — before
+//! sparing an unrecoverable row with a charged remap. Without a plan
+//! (or with all-zero rates) every code path is bit-identical to the
+//! fault-free model.
 
+use std::cell::Cell;
 
 use crate::arch::stats::{Phase, Stats};
 use crate::device::energy::DeviceCosts;
+use crate::device::fault::{nth_set_bit, FaultPlan};
 use crate::device::nand_spin::MTJS_PER_DEVICE;
 
 use super::bitcounter::BitCounterBank;
 use super::buffer::WeightBuffer;
+
+// Domain-separation salts for the stateless fault draws.
+const SALT_STUCK: u64 = 0x57;
+const SALT_STUCK_POS: u64 = 0x58;
+const SALT_PROGRAM: u64 = 0x509;
+const SALT_PROGRAM_BIT: u64 = 0x50A;
+const SALT_READ: u64 = 0x2EAD;
+const SALT_READ_POS: u64 = 0x2EAE;
+const SALT_AND: u64 = 0xA4D;
+const SALT_AND_POS: u64 = 0xA4E;
+
+/// Installed fault-injection state: the plan, a logical-context id
+/// (what this subarray is being used *as* — faults are keyed on it so
+/// the event stream is independent of worker scheduling), a per-context
+/// op counter (`Cell`, because senses take `&self`) and the strips
+/// already remapped onto spares.
+#[derive(Debug, Clone)]
+struct FaultState {
+    plan: FaultPlan,
+    ctx: u64,
+    ops: Cell<u64>,
+    spared: Vec<bool>,
+}
+
+impl FaultState {
+    #[inline]
+    fn next_op(&self) -> u64 {
+        let n = self.ops.get();
+        self.ops.set(n + 1);
+        n
+    }
+
+    /// Stuck-at-0 mask for `row`: a pure function of `(plan, ctx, row)`,
+    /// so the same logical row is stuck the same way for its whole
+    /// context lifetime. Spared strips are defect-free.
+    fn stuck_mask(&self, row: usize, cols: usize) -> u128 {
+        if self.plan.rates.stuck_at == 0.0 || self.spared[row / MTJS_PER_DEVICE] {
+            return 0;
+        }
+        if self.plan.unit(self.ctx, row as u64, SALT_STUCK) < self.plan.rates.stuck_at {
+            1u128 << self.plan.pick(self.ctx, row as u64, SALT_STUCK_POS, cols as u32)
+        } else {
+            0
+        }
+    }
+}
 
 /// One NAND-SPIN subarray (paper: 256 rows × 128 columns).
 #[derive(Debug, Clone)]
@@ -22,6 +81,7 @@ pub struct Subarray {
     cols: usize,
     col_mask: u128,
     costs: DeviceCosts,
+    fault: Option<FaultState>,
 }
 
 impl Subarray {
@@ -40,7 +100,46 @@ impl Subarray {
             cols,
             col_mask,
             costs,
+            fault: None,
         }
+    }
+
+    /// Install fault injection under `plan` for logical context `ctx`,
+    /// resetting the per-context op counter and spare map. An inactive
+    /// plan (all-zero rates) installs nothing — execution stays
+    /// bit-identical to the fault-free model.
+    pub fn set_fault(&mut self, plan: FaultPlan, ctx: u64) {
+        if !plan.is_active() {
+            self.fault = None;
+            return;
+        }
+        let strips = self.strip_rows();
+        match &mut self.fault {
+            Some(f) => {
+                f.plan = plan;
+                f.ctx = ctx;
+                f.ops.set(0);
+                f.spared.fill(false);
+            }
+            None => {
+                self.fault = Some(FaultState {
+                    plan,
+                    ctx,
+                    ops: Cell::new(0),
+                    spared: vec![false; strips],
+                });
+            }
+        }
+    }
+
+    /// Remove any installed fault injection.
+    pub fn clear_fault(&mut self) {
+        self.fault = None;
+    }
+
+    /// True when an active fault plan is installed.
+    pub fn fault_active(&self) -> bool {
+        self.fault.is_some()
     }
 
     /// Number of MTJ rows.
@@ -94,10 +193,23 @@ impl Subarray {
         phase: Phase,
     ) {
         assert!(pos < MTJS_PER_DEVICE);
-        let bits = bits & self.col_mask;
+        let intended = bits & self.col_mask;
         let r = strip * MTJS_PER_DEVICE + pos;
-        self.rows[r] |= bits;
-        let switched = bits.count_ones() as u64;
+        let mut stored = intended;
+        if let Some(f) = &self.fault {
+            let op = f.next_op();
+            stored &= !f.stuck_mask(r, self.cols);
+            if stored != 0 && f.plan.unit(f.ctx, op, SALT_PROGRAM) < f.plan.rates.program_fail {
+                let k = f.plan.pick(f.ctx, op, SALT_PROGRAM_BIT, stored.count_ones());
+                stored &= !nth_set_bit(stored, k);
+                stats.faults.program_faults += 1;
+            }
+        }
+        self.rows[r] |= stored;
+        // The controller drives every intended column's STT current
+        // whether or not the MTJ actually switches, so the charge is
+        // for the intended bits.
+        let switched = intended.count_ones() as u64;
         stats.ops.program_steps += 1;
         stats.ops.programmed_bits += switched;
         stats.record(
@@ -122,10 +234,100 @@ impl Subarray {
         stats: &mut Stats,
         phase: Phase,
     ) {
+        self.write_strip_once(strip, data, stats, phase);
+        if self.fault.is_some() {
+            self.verify_and_recover(strip, data, stats, phase);
+        }
+    }
+
+    /// One erase + program pass of [`Subarray::write_strip`], without
+    /// the write-verify loop.
+    fn write_strip_once(
+        &mut self,
+        strip: usize,
+        data: &[u128; MTJS_PER_DEVICE],
+        stats: &mut Stats,
+        phase: Phase,
+    ) {
         self.erase_strip(strip, stats, phase);
         for (pos, &bits) in data.iter().enumerate() {
             if bits & self.col_mask != 0 {
                 self.program_row(strip, pos, bits, stats, phase);
+            }
+        }
+    }
+
+    /// Read back every programmed position of `strip` through the
+    /// (fault-prone) sense path and compare against the intended bits,
+    /// charging one read per verified row. All-zero rows are skipped:
+    /// the erase left them 0 and stuck-at-0 cannot corrupt a 0.
+    fn verify_strip(
+        &mut self,
+        strip: usize,
+        data: &[u128; MTJS_PER_DEVICE],
+        stats: &mut Stats,
+        phase: Phase,
+    ) -> bool {
+        let base = strip * MTJS_PER_DEVICE;
+        let mut ok = true;
+        for (pos, &bits) in data.iter().enumerate() {
+            let intended = bits & self.col_mask;
+            if intended == 0 {
+                continue;
+            }
+            if self.read_row(base + pos, stats, phase) != intended {
+                ok = false;
+            }
+        }
+        ok
+    }
+
+    /// The write-verify-retry loop: bounded rewrite attempts (each
+    /// charged as a real erase + program pass), then row-sparing — the
+    /// strip is remapped onto a spare (stuck cells no longer apply) and
+    /// one final clean rewrite is charged and stored exactly.
+    fn verify_and_recover(
+        &mut self,
+        strip: usize,
+        data: &[u128; MTJS_PER_DEVICE],
+        stats: &mut Stats,
+        phase: Phase,
+    ) {
+        let limit = match &self.fault {
+            Some(f) => f.plan.write_retry_limit,
+            None => return,
+        };
+        if self.verify_strip(strip, data, stats, phase) {
+            return;
+        }
+        for _ in 0..limit {
+            stats.faults.write_retries += 1;
+            self.write_strip_once(strip, data, stats, phase);
+            if self.verify_strip(strip, data, stats, phase) {
+                return;
+            }
+        }
+        // Unrecoverable under the retry budget: remap to a spare strip.
+        // The remap is charged as one more full rewrite; the spare
+        // passed manufacturing test, so the store is exact (the failed
+        // attempts above already charged the transient-fault energy).
+        stats.faults.spared_rows += 1;
+        if let Some(f) = self.fault.as_mut() {
+            f.spared[strip] = true;
+        }
+        self.erase_strip(strip, stats, phase);
+        for (pos, &bits) in data.iter().enumerate() {
+            let b = bits & self.col_mask;
+            if b != 0 {
+                self.rows[strip * MTJS_PER_DEVICE + pos] = b;
+                let switched = b.count_ones() as u64;
+                stats.ops.program_steps += 1;
+                stats.ops.programmed_bits += switched;
+                stats.record(
+                    phase,
+                    self.costs.program_energy_per_bit_fj() * switched as f64,
+                    self.costs.program_latency_per_bit_ns,
+                );
             }
         }
     }
@@ -156,7 +358,15 @@ impl Subarray {
             self.costs.read_energy_per_bit_fj * self.cols as f64,
             self.costs.read_latency_ns,
         );
-        self.rows[row]
+        let word = self.rows[row];
+        if let Some(f) = &self.fault {
+            let op = f.next_op();
+            if f.plan.unit(f.ctx, op, SALT_READ) < f.plan.rates.read_flip {
+                stats.faults.read_flips += 1;
+                return word ^ (1u128 << f.plan.pick(f.ctx, op, SALT_READ_POS, self.cols as u32));
+            }
+        }
+        word
     }
 
     /// Peek without charging costs (testing / debugging only).
@@ -209,7 +419,15 @@ impl Subarray {
             self.costs.and_energy_per_bit_fj * self.cols as f64,
             self.costs.and_latency_ns,
         );
-        self.rows[row] & operand & self.col_mask
+        let word = self.rows[row] & operand & self.col_mask;
+        if let Some(f) = &self.fault {
+            let op = f.next_op();
+            if f.plan.unit(f.ctx, op, SALT_AND) < f.plan.rates.read_flip {
+                stats.faults.and_flips += 1;
+                return word ^ (1u128 << f.plan.pick(f.ctx, op, SALT_AND_POS, self.cols as u32));
+            }
+        }
+        word
     }
 
     /// AND row `row` against buffer row `buf_row` and accumulate the SA
@@ -387,5 +605,155 @@ mod tests {
         s.program_row(0, 0, u128::MAX, &mut st, Phase::LoadData);
         assert_eq!(s.peek_row(0), 0xff);
         assert_eq!(st.ops.programmed_bits, 8);
+    }
+
+    // ----------------------------------------------------------------
+    // Fault injection and the write-verify-retry loop.
+    // ----------------------------------------------------------------
+
+    use crate::device::fault::{FaultPlan, FaultRates};
+
+    fn exercise(s: &mut Subarray) -> Stats {
+        let mut st = Stats::default();
+        let data = [0xdeadu128, 0xbeef, 0x1234, 0x5678, 0x9abc, 0xdef0, 0x0f0f, 0xf0f0];
+        s.write_strip(2, &data, &mut st, Phase::LoadData);
+        for r in 0..16 {
+            s.read_row(r, &mut st, Phase::Other);
+            s.and_row(r, 0xffff, &mut st, Phase::Convolution);
+        }
+        st
+    }
+
+    #[test]
+    fn zero_rate_plan_is_bit_identical_to_no_plan() {
+        let mut clean = sub();
+        let mut planned = sub();
+        planned.set_fault(FaultPlan::disabled(), 7);
+        assert!(!planned.fault_active(), "inactive plans install nothing");
+        let a = exercise(&mut clean);
+        let b = exercise(&mut planned);
+        assert_eq!(a, b, "zero-rate plan must charge identically");
+        assert!(b.faults.is_zero());
+        for r in 0..32 {
+            assert_eq!(clean.peek_row(r), planned.peek_row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn fault_stream_is_deterministic_per_context() {
+        let plan = FaultPlan::new(42, FaultRates::uniform(0.3));
+        let run = |ctx: u64| {
+            let mut s = sub();
+            s.set_fault(plan, ctx);
+            let st = exercise(&mut s);
+            (st, (0..32).map(|r| s.peek_row(r)).collect::<Vec<_>>())
+        };
+        assert_eq!(run(1), run(1), "same (plan, ctx) replays the same faults");
+        assert_ne!(run(1), run(2), "contexts draw independent streams");
+    }
+
+    #[test]
+    fn certain_program_failure_retries_then_spares_with_charged_recovery() {
+        let plan = FaultPlan::new(
+            9,
+            FaultRates { program_fail: 1.0, read_flip: 0.0, stuck_at: 0.0 },
+        );
+        let mut clean = sub();
+        let mut faulty = sub();
+        faulty.set_fault(plan, 0);
+        let data = [0xffu128; 8];
+        let mut st_clean = Stats::default();
+        let mut st = Stats::default();
+        clean.write_strip(0, &data, &mut st_clean, Phase::LoadData);
+        faulty.write_strip(0, &data, &mut st, Phase::LoadData);
+        // Every attempt drops a bit, so the bounded retries exhaust and
+        // the strip is spared — after which the store is exact.
+        assert_eq!(st.faults.write_retries, plan.write_retry_limit as u64);
+        assert_eq!(st.faults.spared_rows, 1);
+        assert!(st.faults.program_faults > 0);
+        for pos in 0..8 {
+            assert_eq!(faulty.peek_row(pos), 0xff, "spared strip stores exactly");
+        }
+        // Recovery is charged: retries + remap show up as real erase /
+        // program / verify-read energy and latency.
+        assert!(st.ops.erases > st_clean.ops.erases);
+        assert!(st.ops.reads > st_clean.ops.reads, "verify reads are charged");
+        assert!(st.total_energy_fj() > st_clean.total_energy_fj());
+        assert!(st.total_latency_ns() > st_clean.total_latency_ns());
+    }
+
+    #[test]
+    fn transient_failures_recover_within_the_retry_budget() {
+        // At a moderate rate strips verify clean within the bounded
+        // retries and nothing is spared.
+        let plan = FaultPlan::new(
+            3,
+            FaultRates { program_fail: 0.08, read_flip: 0.0, stuck_at: 0.0 },
+        );
+        let mut s = sub();
+        s.set_fault(plan, 1);
+        let mut st = Stats::default();
+        let mut data = [0u128; 8];
+        data[0] = 0xffff_ffff;
+        data[1] = 0xf00d;
+        for strip in 0..32 {
+            s.write_strip(strip, &data, &mut st, Phase::LoadData);
+            for (pos, &d) in data.iter().enumerate() {
+                assert_eq!(
+                    s.peek_row(strip * 8 + pos),
+                    d,
+                    "strip {strip}: write-verify must leave the intended bits"
+                );
+            }
+        }
+        assert!(st.faults.program_faults > 0, "8 % over 64+ programs must fault");
+        assert!(st.faults.write_retries > 0, "faulted strips must retry");
+        assert_eq!(st.faults.spared_rows, 0, "transients recover without sparing");
+    }
+
+    #[test]
+    fn read_flips_corrupt_the_sense_not_the_cell() {
+        let plan = FaultPlan::new(
+            11,
+            FaultRates { program_fail: 0.0, read_flip: 1.0, stuck_at: 0.0 },
+        );
+        let mut s = sub();
+        let mut st = Stats::default();
+        s.write_row(8, 0b1100, &mut st, Phase::LoadData);
+        s.set_fault(plan, 5);
+        let stored = s.peek_row(8);
+        let sensed = s.read_row(8, &mut st, Phase::Other);
+        assert_eq!((sensed ^ stored).count_ones(), 1, "exactly one decision flips");
+        assert_eq!(s.peek_row(8), stored, "the stored cell is untouched");
+        let and = s.and_row(8, 0b1010, &mut st, Phase::Convolution);
+        assert_eq!((and ^ 0b1000u128).count_ones(), 1);
+        assert_eq!(st.faults.read_flips, 1);
+        assert_eq!(st.faults.and_flips, 1);
+    }
+
+    #[test]
+    fn stuck_cells_are_stable_and_recovered_by_sparing() {
+        let plan = FaultPlan::new(
+            21,
+            FaultRates { program_fail: 0.0, read_flip: 0.0, stuck_at: 1.0 },
+        );
+        let mut s = sub();
+        s.set_fault(plan, 3);
+        let mut st = Stats::default();
+        // Direct program: the stuck bit never sets, and it is the same
+        // bit every time.
+        s.program_row(4, 0, u128::MAX, &mut st, Phase::LoadData);
+        let first = s.peek_row(32);
+        assert_eq!(first.count_ones(), 127, "one cell stuck at 0");
+        s.program_row(4, 0, u128::MAX, &mut st, Phase::LoadData);
+        assert_eq!(s.peek_row(32), first, "the defect is stable per row");
+        // A verified strip write hits the stuck cells, exhausts the
+        // retries and spares the strip — after which it stores exactly.
+        let data = [u128::MAX; 8];
+        s.write_strip(6, &data, &mut st, Phase::LoadData);
+        assert_eq!(st.faults.spared_rows, 1);
+        for pos in 0..8 {
+            assert_eq!(s.peek_row(6 * 8 + pos), u128::MAX, "spared strip is clean");
+        }
     }
 }

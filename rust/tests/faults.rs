@@ -1,0 +1,211 @@
+//! End-to-end fault injection and recovery: the acceptance criteria of
+//! the fault subsystem. A zero-rate plan must be bit-identical to no
+//! plan at all; a fixed seed with nonzero rates must be bit-identical
+//! run to run and at every host worker count; retries must show up in
+//! the charged energy and the `verify()`-checked ledgers; and a serve
+//! with one unhealthy chip must still answer every request.
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::cnn::network::{micro_cnn, small_cnn, Network};
+use nandspin::cnn::ref_exec::{self, ModelParams};
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::engine::{EngineKind, PoolSpec};
+use nandspin::coordinator::serve::{
+    serve, serve_pool, EngineMode, Request, ServeConfig, ServedNetwork,
+};
+use nandspin::coordinator::FunctionalEngine;
+use nandspin::device::{FaultPlan, FaultRates};
+
+fn requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
+    Request::stream(
+        (0..n)
+            .map(|i| {
+                QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, seed + i as u64)
+            })
+            .collect(),
+    )
+}
+
+/// Flatten a report into comparable per-request records.
+fn fingerprint(report: &nandspin::coordinator::ServeReport) -> Vec<(u64, usize, String)> {
+    let mut v: Vec<(u64, usize, String)> = report
+        .completions
+        .iter()
+        .map(|c| (c.id, c.chip, format!("{:?}|{:?}", c.stats, c.output)))
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+#[test]
+fn zero_rate_plan_is_bit_identical_to_no_plan_at_every_worker_count() {
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 5);
+    for workers in [1usize, 2, 8] {
+        let run = |fault: Option<FaultPlan>| {
+            let scfg = ServeConfig {
+                chips: 2,
+                max_batch: 2,
+                host_workers: Some(workers),
+                fault,
+                ..ServeConfig::default()
+            };
+            serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 6, 100))
+        };
+        let clean = run(None);
+        let zeroed = run(Some(FaultPlan::new(9, FaultRates::zero())));
+        clean.verify().expect("clean identities");
+        zeroed.verify().expect("zero-rate identities");
+        assert_eq!(fingerprint(&clean), fingerprint(&zeroed), "workers={workers}");
+        assert!(zeroed.faults.ledger.is_zero());
+        assert!(!zeroed.faults.active, "a zero-rate plan is the fault-free path");
+    }
+}
+
+#[test]
+fn fixed_seed_nonzero_rates_are_bit_identical_run_to_run_and_across_workers() {
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 7);
+    let run = |workers: usize| {
+        let scfg = ServeConfig {
+            chips: 2,
+            max_batch: 2,
+            host_workers: Some(workers),
+            fault: Some(FaultPlan::new(7, FaultRates::uniform(0.02))),
+            ..ServeConfig::default()
+        };
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 6, 300))
+    };
+    let first = run(1);
+    first.verify().expect("faulted identities");
+    assert!(first.faults.active);
+    assert!(first.faults.ledger.injected() > 0, "2% per-op rate must inject");
+    let again = run(1);
+    assert_eq!(fingerprint(&first), fingerprint(&again), "same seed, same faults");
+    assert_eq!(first.faults.ledger, again.faults.ledger);
+    for workers in [2usize, 4] {
+        let wide = run(workers);
+        assert_eq!(fingerprint(&first), fingerprint(&wide), "workers={workers}");
+        assert_eq!(first.faults.ledger, wide.faults.ledger, "workers={workers}");
+    }
+}
+
+#[test]
+fn retries_and_recovery_are_charged_as_real_energy_and_latency() {
+    let net = micro_cnn(3);
+    let params = ModelParams::random(&net, 2, 1);
+    let input = QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, 4);
+    let mut clean = FunctionalEngine::new(ArchConfig::paper());
+    clean.run(&net, &params, &input);
+    let mut faulty = FunctionalEngine::new(ArchConfig::paper());
+    faulty.set_fault_plan(FaultPlan::new(3, FaultRates {
+        program_fail: 0.05,
+        read_flip: 0.0,
+        stuck_at: 0.0,
+    }));
+    faulty.run(&net, &params, &input);
+    let ledger = faulty.stats.faults;
+    assert!(ledger.program_faults > 0, "5% program-fail rate must inject");
+    assert!(ledger.write_retries > 0, "transient failures must be retried");
+    assert_eq!(ledger.read_flips + ledger.and_flips, 0, "only programs fault here");
+    assert!(
+        faulty.stats.total_energy_fj() > clean.stats.total_energy_fj(),
+        "every retry is charged as a real rewrite"
+    );
+    assert!(
+        faulty.stats.total_latency_ns() > clean.stats.total_latency_ns(),
+        "retry latency is charged too"
+    );
+    assert!(clean.stats.faults.is_zero());
+}
+
+#[test]
+fn failover_drains_the_unhealthy_chip_and_serves_every_request() {
+    // Three functional chips; only chip 0 carries a (high-rate) fault
+    // plan, installed through its own factory. Its injected-fault rate
+    // trips the default health threshold, so the serve drains it and
+    // re-routes its batches to the two clean survivors — every request
+    // is still answered, and (because only clean chips' rounds are
+    // retired) every answer is bit-exact.
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 21);
+    let reqs = requests(&net, 9, 700);
+    let images: Vec<QTensor> = reqs.iter().map(|r| r.image.clone()).collect();
+    let mut pool = PoolSpec::homogeneous(ArchConfig::paper(), EngineKind::Functional, 3);
+    pool.factory_mut(0).set_fault_plan(FaultPlan::new(13, FaultRates::uniform(0.2)));
+    let scfg = ServeConfig { chips: 3, max_batch: 1, ..ServeConfig::default() };
+    let nets = [ServedNetwork { net: &net, params: Some(&params) }];
+    let report = serve_pool(&pool, &scfg, &nets, reqs);
+    report.verify().expect("failover identities");
+    assert_eq!(report.served(), 9, "every request is served despite the bad chip");
+    assert!(report.faults.active);
+    assert_eq!(report.faults.unhealthy_chips, 1);
+    assert!(!report.chips[0].healthy, "chip 0 tripped the health threshold");
+    assert!(report.chips[1].healthy && report.chips[2].healthy);
+    assert!(report.faults.failover_rounds >= 1);
+    assert!(report.faults.failed_over_batches > 0);
+    assert!(report.faults.failed_over_requests > 0);
+    assert_eq!(report.chips[0].served, 0, "nothing retired from the drained chip");
+    for c in &report.completions {
+        assert_ne!(c.chip, 0, "request {} retired from the drained chip", c.id);
+        let golden = ref_exec::execute(&net, &params, &images[c.id as usize]);
+        let output = c.output.as_ref().expect("functional outputs");
+        assert_eq!(output, golden.last().expect("output"), "request {}", c.id);
+    }
+    let text = format!("{report}");
+    assert!(text.contains("UNHEALTHY"), "{text}");
+    assert!(text.contains("faults:"), "{text}");
+}
+
+#[test]
+fn failover_is_skipped_when_no_healthy_chip_would_remain() {
+    // Every chip serves under the same high-rate plan, so all of them
+    // trip — draining them all would leave nobody. The serve must keep
+    // the results instead and still answer every request.
+    let net = micro_cnn(3);
+    let params = ModelParams::random(&net, 2, 2);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 1,
+        fault: Some(FaultPlan::new(5, FaultRates::uniform(0.2))),
+        ..ServeConfig::default()
+    };
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 4, 50));
+    report.verify().expect("identities with every chip faulty");
+    assert_eq!(report.served(), 4, "requests are served even when no chip is clean");
+    assert!(report.faults.active);
+    assert!(report.faults.ledger.injected() > 0);
+    assert_eq!(report.faults.failed_over_batches, 0, "nowhere to fail over to");
+    assert_eq!(report.faults.unhealthy_chips, 0, "chips are kept in rotation");
+}
+
+#[test]
+fn hybrid_serve_escalates_its_spot_check_stride_under_faults() {
+    // Hybrid serves analytically (no faults injected in the serving
+    // path), but its functional replays carry the chips' fault plans.
+    // When the replays' injected-fault rate trips the health threshold
+    // the spot-check stride is halved: reserve samples fold in.
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 17);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 2,
+        engine: EngineMode::Hybrid { check_every: 4 },
+        fault: Some(FaultPlan::new(7, FaultRates::uniform(0.2))),
+        ..ServeConfig::default()
+    };
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 8, 60));
+    report.verify().expect("hybrid fault identities");
+    assert_eq!(report.served(), 8);
+    assert!(report.faults.active);
+    assert!(report.faults.spot_check_escalated, "degraded replays must escalate");
+    let sc = report.spot_check.expect("replays ran");
+    assert_eq!(sc.checked, 4, "positions 0, 4 plus escalated 2, 6");
+    assert!(sc.passed(), "latency {:?} energy {:?}", sc.latency_ratio, sc.energy_ratio);
+    assert!(
+        report.faults.ledger.is_zero(),
+        "analytic completions inject nothing — replay faults stay out of the ledger"
+    );
+}

@@ -14,6 +14,7 @@ use nandspin::coordinator::serve::pool::{execute_with_workers, PlannedBatch};
 use nandspin::coordinator::serve::{
     serve, serve_pool, EngineMode, FlushCause, Request, ServeConfig, ServedNetwork, SloPolicy,
 };
+use nandspin::device::{FaultPlan, FaultRates};
 
 fn requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
     Request::stream(
@@ -130,6 +131,43 @@ fn saturating_one_chip_applies_backpressure() {
     finishes.dedup();
     assert_eq!(finishes.len(), 4, "distinct serial finish times");
     report.verify().expect("identities");
+}
+
+#[test]
+fn backpressure_holds_while_retries_inflate_service_time() {
+    let net = micro_cnn(3);
+    let params = ModelParams::random(&net, 2, 1);
+    // Same 1-chip / 1-deep-queue saturation as above, but now every
+    // write runs a 30% transient-failure gauntlet: verify-retry loops
+    // inflate each batch's service time. The queue must keep stalling
+    // (no deadlock), and every request must still come back with the
+    // report identities — retries included — intact. With one chip
+    // there is nowhere to fail over to, so the chip stays in rotation.
+    let scfg = ServeConfig {
+        chips: 1,
+        max_batch: 1,
+        queue_depth: 1,
+        fault: Some(FaultPlan::new(
+            11,
+            FaultRates { program_fail: 0.3, read_flip: 0.0, stuck_at: 0.0 },
+        )),
+        ..ServeConfig::default()
+    };
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 6, 44));
+    assert_eq!(report.served(), 6, "no request may be dropped under faulty backpressure");
+    assert_eq!(report.counters.batches, 6);
+    assert!(
+        report.counters.stalled_batches >= 3,
+        "expected backpressure stalls, got {}",
+        report.counters.stalled_batches
+    );
+    assert!(
+        report.faults.ledger.write_retries > 0,
+        "retries are what inflate the service time"
+    );
+    assert_eq!(report.faults.failed_over_batches, 0, "one chip: nowhere to drain to");
+    report.verify().expect("identities under faulty backpressure");
 }
 
 #[test]
