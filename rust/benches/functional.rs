@@ -206,6 +206,8 @@ fn main() {
             flush_ns: 0.0,
             requests,
             arrivals_ns: arrivals,
+            est_cost_ns: 0.0,
+            est_finish_ns: 0.0,
         }]
     };
     let factory = EngineFactory::new(ArchConfig::paper(), EngineKind::Functional);

@@ -19,7 +19,12 @@
 //!
 //! Besides the human table, the bench writes `BENCH_serving.json`
 //! (same grid, machine-readable, one `network` key per row) so the
-//! perf trajectory can be tracked across PRs.
+//! perf trajectory can be tracked across PRs. Every serve runs traced
+//! (`ServeConfig::trace`), so each grid cell also records the
+//! per-layer **simulated** cost profile (`"layer_profile"`: mean
+//! per-request latency/energy per network node, folded across chips) —
+//! the observability layer's cost attribution, tracked across PRs
+//! alongside the aggregate numbers.
 
 use std::time::Instant;
 
@@ -29,8 +34,36 @@ use nandspin::cnn::ref_exec::ModelParams;
 use nandspin::cnn::tensor::QTensor;
 use nandspin::coordinator::engine::{EngineKind, PoolSpec};
 use nandspin::coordinator::serve::{
-    serve, serve_pool, EngineMode, Request, ServeConfig, ServedNetwork, SloPolicy,
+    serve, serve_pool, EngineMode, Request, ServeConfig, ServeReport, ServedNetwork, SloPolicy,
 };
+use nandspin::trace::merge_layer_costs;
+
+/// Per-layer simulated cost summary of a traced run, as a JSON array:
+/// chips' `LayerCostProfile`s merged per network, one object per node
+/// with its mean per-request latency (µs) and energy (mJ).
+fn layer_profile_json(report: &ServeReport) -> String {
+    let mut merged = None;
+    for c in &report.chips {
+        merge_layer_costs(&mut merged, c.layer_costs.clone());
+    }
+    let Some(profiles) = merged else { return "[]".to_string() };
+    let mut entries = Vec::new();
+    for p in &profiles {
+        let requests = p.requests.max(1) as f64;
+        for l in &p.layers {
+            entries.push(format!(
+                "{{\"network\": \"{}\", \"node\": {}, \"label\": \"{}\", \
+                 \"latency_us_per_req\": {:.4}, \"mj_per_req\": {:.6}}}",
+                p.network,
+                l.node,
+                l.label,
+                l.stats.total_latency_ns() * 1e-3 / requests,
+                l.stats.total_energy_mj() / requests,
+            ));
+        }
+    }
+    format!("[{}]", entries.join(", "))
+}
 
 /// Serve `n` requests of `net` for every (engine, batch, chips) cell,
 /// printing the human table rows and appending JSON rows to `rows`.
@@ -55,6 +88,7 @@ fn sweep(
                     chips,
                     max_batch: batch,
                     engine,
+                    trace: true,
                     ..ServeConfig::default()
                 };
                 let requests: Vec<Request> = Request::stream(images.clone());
@@ -85,7 +119,8 @@ fn sweep(
                     "    {{\"network\": \"{}\", \"engine\": \"{}\", \"batch\": {}, \
                      \"chips\": {}, \"sim_fps\": {:.3}, \"mean_latency_us\": {:.3}, \
                      \"p95_latency_us\": {:.3}, \"mj_per_request\": {:.6}, \
-                     \"weight_hit_rate\": {:.4}, \"wall_s\": {:.4}}}",
+                     \"weight_hit_rate\": {:.4}, \"wall_s\": {:.4}, \
+                     \"layer_profile\": {}}}",
                     net.name,
                     engine.label(),
                     batch,
@@ -95,7 +130,8 @@ fn sweep(
                     p95_us,
                     mj_per_req,
                     hit_rate,
-                    report.wall_seconds
+                    report.wall_seconds,
+                    layer_profile_json(&report)
                 ));
             }
         }
@@ -145,6 +181,7 @@ fn sweep_mixed(batches: &[usize], n: usize, rows: &mut Vec<String>) {
             engine: EngineMode::Analytic,
             arrival_interval_ns: 20_000.0,
             slo: SloPolicy::global().with_deadline_us(0, 500.0).with_deadline_us(1, 50.0),
+            trace: true,
             ..ServeConfig::default()
         };
         let report = serve_pool(&pool, &scfg, &nets, streams(70));
@@ -170,7 +207,8 @@ fn sweep_mixed(batches: &[usize], n: usize, rows: &mut Vec<String>) {
             "    {{\"network\": \"mixed(alexnet+small_cnn)\", \"engine\": \"analytic\", \
              \"batch\": {}, \"chips\": {}, \"sim_fps\": {:.3}, \
              \"mean_latency_us\": {:.3}, \"p95_latency_us\": {:.3}, \
-             \"mj_per_request\": {:.6}, \"slo_violations\": {}, \"wall_s\": {:.4}}}",
+             \"mj_per_request\": {:.6}, \"slo_violations\": {}, \"wall_s\": {:.4}, \
+             \"layer_profile\": {}}}",
             batch,
             pool.chips(),
             report.sim_fps(),
@@ -178,7 +216,8 @@ fn sweep_mixed(batches: &[usize], n: usize, rows: &mut Vec<String>) {
             report.p95_latency_ms() * 1e3,
             report.total_energy_mj() / (2 * n) as f64,
             violations,
-            report.wall_seconds
+            report.wall_seconds,
+            layer_profile_json(&report)
         ));
     }
 }

@@ -104,6 +104,23 @@ pub struct OpCounts {
 }
 
 impl OpCounts {
+    /// Every counter with its stable name, in declaration order — the
+    /// canonical iteration for op-mix telemetry (layer-cost exports,
+    /// metrics registries), so every emitter agrees on names and order.
+    pub fn named(&self) -> [(&'static str, u64); 9] {
+        [
+            ("erases", self.erases),
+            ("program_steps", self.program_steps),
+            ("programmed_bits", self.programmed_bits),
+            ("reads", self.reads),
+            ("ands", self.ands),
+            ("bitcounts", self.bitcounts),
+            ("buffer_accesses", self.buffer_accesses),
+            ("local_bus_bits", self.local_bus_bits),
+            ("global_bus_bits", self.global_bus_bits),
+        ]
+    }
+
     fn add(&mut self, o: &OpCounts) {
         self.erases += o.erases;
         self.program_steps += o.program_steps;

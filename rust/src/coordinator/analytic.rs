@@ -97,10 +97,25 @@ impl AnalyticModel {
 
     /// Stats for a full inference of `net` at weight precision `wbits`
     /// (activation precision comes from the network's quantize nodes /
-    /// `input_bits`).
+    /// `input_bits`): the serial fold of
+    /// [`network_layer_stats`](Self::network_layer_stats), in node
+    /// order — the same additions the per-node path performs, so the
+    /// two views agree bit-for-bit.
     pub fn network_stats(&self, net: &Network, wbits: u8) -> Stats {
-        let shapes = net.shapes();
         let mut total = Stats::default();
+        for s in self.network_layer_stats(net, wbits) {
+            total.merge_serial(&s);
+        }
+        total
+    }
+
+    /// Per-node stats for a full inference of `net` at weight precision
+    /// `wbits`: one [`Stats`] per network node, in schedule order. The
+    /// per-layer cost attribution behind the observability layer's
+    /// [`LayerCostProfile`](crate::trace::LayerCostProfile)s.
+    pub fn network_layer_stats(&self, net: &Network, wbits: u8) -> Vec<Stats> {
+        let shapes = net.shapes();
+        let mut layers = Vec::with_capacity(net.nodes.len());
         let mut act_bits = net.input_bits;
 
         for (i, node) in net.nodes.iter().enumerate() {
@@ -126,9 +141,9 @@ impl AnalyticModel {
                 }
                 Layer::Residual { .. } => self.residual_stats(out_shape, act_bits),
             };
-            total.merge_serial(&s);
+            layers.push(s);
         }
-        total
+        layers
     }
 
     /// Convolution layer: load (weights + activations), AND/bit-count,

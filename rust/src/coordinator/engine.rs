@@ -97,6 +97,12 @@ pub struct Execution {
     pub outputs: Option<Vec<WideTensor>>,
     /// Simulated PIM cost of this request alone.
     pub stats: Stats,
+    /// Per-node simulated cost deltas (one [`Stats`] per network node,
+    /// in schedule order; they sum serially to `stats`). Recorded only
+    /// when layer recording is enabled
+    /// ([`InferenceEngine::set_layer_recording`]) — `None` otherwise,
+    /// keeping the default path allocation-free.
+    pub layer_stats: Option<Vec<Stats>>,
 }
 
 /// The common engine contract the serving runtime is generic over.
@@ -144,6 +150,15 @@ pub trait InferenceEngine: Send {
     fn host_profile(&self) -> Option<&[HostLayerProfile]> {
         None
     }
+
+    /// Enable (or disable) per-layer simulated cost recording: when on,
+    /// every [`execute`](InferenceEngine::execute) also returns one
+    /// zero-based [`Stats`] delta per network node in
+    /// [`Execution::layer_stats`]. Off by default — the trace hook is a
+    /// no-op sink, so untraced serves do no extra work. Recording does
+    /// not change `Execution::stats` by a single bit: the deltas are
+    /// observations of the same accumulation, not a different fold.
+    fn set_layer_recording(&mut self, _on: bool) {}
 
     /// Install a fault-injection plan ([`FaultPlan`]). Engines that
     /// simulate individual device operations inject the plan's
@@ -303,11 +318,18 @@ impl InferenceEngine for FunctionalEngine {
         let outputs = self.run(net, params, input);
         let run_stats = std::mem::replace(&mut self.stats, total);
         self.stats.merge_serial(&run_stats);
-        Execution { outputs: Some(outputs), stats: run_stats }
+        // Layer deltas are snapshots of the zero-based run above, so
+        // they are pure functions of the request too.
+        let layer_stats = self.layer_recording().then(|| self.take_layer_stats());
+        Execution { outputs: Some(outputs), stats: run_stats, layer_stats }
     }
 
     fn set_host_workers(&mut self, workers: usize) {
         FunctionalEngine::set_host_workers(self, workers);
+    }
+
+    fn set_layer_recording(&mut self, on: bool) {
+        FunctionalEngine::set_layer_recording(self, on);
     }
 
     fn host_profile(&self) -> Option<&[HostLayerProfile]> {
@@ -337,6 +359,12 @@ struct NetCache {
     cold: Stats,
     /// Per-inference stats with weights resident (stream skipped).
     warm: Stats,
+    /// Per-node stats behind `cold`, in schedule order (they fold
+    /// serially to `cold` — the exact same additions, so the totals
+    /// agree bit-for-bit).
+    cold_layers: Vec<Stats>,
+    /// Per-node stats behind `warm`.
+    warm_layers: Vec<Stats>,
     /// Conv layers (residency tags) in the network.
     conv_layers: usize,
 }
@@ -363,6 +391,7 @@ pub struct AnalyticEngine {
     pub stats: Stats,
     residency: Option<WeightResidency>,
     cache: Option<NetCache>,
+    record_layer_costs: bool,
 }
 
 impl AnalyticEngine {
@@ -373,6 +402,7 @@ impl AnalyticEngine {
             stats: Stats::default(),
             residency: None,
             cache: None,
+            record_layer_costs: false,
         }
     }
 
@@ -404,12 +434,26 @@ impl AnalyticEngine {
         warm_model.cal.weights_resident = true;
         let conv_layers =
             net.nodes.iter().filter(|n| matches!(n.layer, Layer::Conv { .. })).count();
+        // `network_stats` is the serial fold of `network_layer_stats`,
+        // so caching the per-node vector and folding it here yields the
+        // exact totals the old single-call path produced.
+        let fold = |layers: &[Stats]| {
+            let mut total = Stats::default();
+            for s in layers {
+                total.merge_serial(s);
+            }
+            total
+        };
+        let cold_layers = cold_model.network_layer_stats(net, wbits);
+        let warm_layers = warm_model.network_layer_stats(net, wbits);
         self.cache = Some(NetCache {
             identity,
             wbits,
             cal: self.model.cal,
-            cold: cold_model.network_stats(net, wbits),
-            warm: warm_model.network_stats(net, wbits),
+            cold: fold(&cold_layers),
+            warm: fold(&warm_layers),
+            cold_layers,
+            warm_layers,
             conv_layers,
         });
     }
@@ -473,8 +517,19 @@ impl InferenceEngine for AnalyticEngine {
             None => false,
         };
         let delta = if warm { cache.warm.clone() } else { cache.cold.clone() };
+        let layer_stats = self.record_layer_costs.then(|| {
+            if warm {
+                cache.warm_layers.clone()
+            } else {
+                cache.cold_layers.clone()
+            }
+        });
         self.stats.merge_serial(&delta);
-        Execution { outputs: None, stats: delta }
+        Execution { outputs: None, stats: delta, layer_stats }
+    }
+
+    fn set_layer_recording(&mut self, on: bool) {
+        self.record_layer_costs = on;
     }
 }
 
@@ -703,6 +758,45 @@ mod tests {
             (engine.stats.total_energy_fj() - 2.0 * a.stats.total_energy_fj()).abs()
                 < 1e-9 * engine.stats.total_energy_fj()
         );
+    }
+
+    #[test]
+    fn layer_recording_deltas_fold_to_request_totals() {
+        let net = micro_cnn(3);
+        let params = ModelParams::random(&net, 3, 5);
+        let input = input_for(&net, 6);
+        // Analytic: the per-node vector folds to the request stats
+        // bit-for-bit (the cache total *is* that fold), and recording
+        // does not change the request stats themselves.
+        let mut engine = AnalyticEngine::new(ArchConfig::paper());
+        let off = engine.execute(&net, None, &input);
+        assert!(off.layer_stats.is_none(), "recording is off by default");
+        InferenceEngine::set_layer_recording(&mut engine, true);
+        let exec = engine.execute(&net, None, &input);
+        assert_eq!(exec.stats, off.stats, "recording must not perturb stats");
+        let layers = exec.layer_stats.expect("recording on");
+        assert_eq!(layers.len(), net.nodes.len());
+        let mut fold = Stats::default();
+        for s in &layers {
+            fold.merge_serial(s);
+        }
+        assert_eq!(fold.total_latency_ns().to_bits(), exec.stats.total_latency_ns().to_bits());
+        assert_eq!(fold.ops, exec.stats.ops);
+        // Functional: node deltas cover everything except the
+        // pre-schedule input load; node-attributed op counts match the
+        // request's exactly (every AND happens inside some node).
+        let mut engine = EngineFactory::new(ArchConfig::paper(), EngineKind::Functional).build();
+        engine.set_layer_recording(true);
+        let exec = engine.execute(&net, Some(&params), &input);
+        let layers = exec.layer_stats.expect("recording on");
+        assert_eq!(layers.len(), net.nodes.len());
+        let mut fold = Stats::default();
+        for s in &layers {
+            fold.merge_serial(s);
+        }
+        assert_eq!(fold.ops.ands, exec.stats.ops.ands);
+        assert!(fold.total_latency_ns() > 0.0);
+        assert!(fold.total_latency_ns() <= exec.stats.total_latency_ns());
     }
 
     #[test]

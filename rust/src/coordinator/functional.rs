@@ -208,6 +208,13 @@ pub struct FunctionalEngine {
     fast_paths: bool,
     /// Per-conv-layer host wall-time profile of the most recent `run`.
     profile: Vec<HostLayerProfile>,
+    /// When true, `run` snapshots `stats` around every node and keeps
+    /// the per-node deltas in `layer_stats` (trace hook; off by
+    /// default so untraced runs do no extra work).
+    record_layer_costs: bool,
+    /// Per-node simulated cost deltas of the most recent `run`
+    /// (empty unless `record_layer_costs`).
+    layer_stats: Vec<Stats>,
     /// Active fault-injection plan ([`FunctionalEngine::set_fault_plan`]).
     /// `None` — the default, and any plan with all-zero rates — keeps
     /// every code path bit-identical to the fault-free model.
@@ -243,6 +250,8 @@ impl FunctionalEngine {
             host_workers: None,
             fast_paths: true,
             profile: Vec::new(),
+            record_layer_costs: false,
+            layer_stats: Vec::new(),
             fault: None,
             fault_epoch: 0,
             fault_seq: 0,
@@ -290,6 +299,33 @@ impl FunctionalEngine {
     /// never part of the simulated result.
     pub fn host_profile(&self) -> &[HostLayerProfile] {
         &self.profile
+    }
+
+    /// Enable (or disable) per-node simulated cost recording: each
+    /// subsequent [`FunctionalEngine::run`] keeps a zero-based
+    /// [`Stats`] delta per network node, retrievable via
+    /// [`FunctionalEngine::take_layer_stats`]. Recording only
+    /// *observes* the one stats accumulation (snapshot + `delta_since`
+    /// around each node), so outputs and totals are bit-identical with
+    /// it on or off.
+    pub fn set_layer_recording(&mut self, on: bool) {
+        self.record_layer_costs = on;
+        if !on {
+            self.layer_stats.clear();
+        }
+    }
+
+    /// True when per-node cost recording is enabled.
+    pub fn layer_recording(&self) -> bool {
+        self.record_layer_costs
+    }
+
+    /// Take the per-node simulated cost deltas of the most recent
+    /// [`FunctionalEngine::run`] (empty unless recording is enabled;
+    /// one [`Stats`] per node, in schedule order). The pre-schedule
+    /// input load is charged before any node and is not attributed.
+    pub fn take_layer_stats(&mut self) -> Vec<Stats> {
+        std::mem::take(&mut self.layer_stats)
     }
 
     /// Effective intra-request worker budget: the explicit setting,
@@ -429,6 +465,7 @@ impl FunctionalEngine {
         assert_eq!((input.c, input.h, input.w), net.input);
         self.conv_seq = 0;
         self.profile.clear();
+        self.layer_stats.clear();
         if self.fault.is_some() {
             // Fault epoch: a pure function of the request's input, so
             // every request draws its own stream and a replay of the
@@ -471,6 +508,10 @@ impl FunctionalEngine {
                 None if i == 0 => &input_wide,
                 None => &outs[i - 1],
             };
+            // Trace hook: snapshot around the node so its charged cost
+            // can be attributed. Pure observation of the one
+            // accumulator — the fold of charges is unchanged.
+            let snap = self.record_layer_costs.then(|| self.stats.clone());
             let out = match node.layer {
                 Layer::Conv { out_c, kh, kw, stride, pad } => {
                     let k = &params.conv_weights[ci];
@@ -520,6 +561,9 @@ impl FunctionalEngine {
                     y
                 }
             };
+            if let Some(snap) = snap {
+                self.layer_stats.push(self.stats.delta_since(&snap));
+            }
             outs.push(out);
         }
         outs

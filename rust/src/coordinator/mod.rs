@@ -37,7 +37,7 @@ pub use functional::{FunctionalEngine, HostLayerProfile};
 pub use serve::{serve, serve_pool};
 pub use serve::{
     BatchLaw, ChipReport, Completion, CostTable, EngineMode, FaultSummary, NetworkReport,
-    Request, ServeConfig, ServeReport, ServedNetwork, SloPolicy, SpotCheck,
+    Request, RouteDecision, ServeConfig, ServeReport, ServedNetwork, SloPolicy, SpotCheck,
 };
 
 use crate::arch::area::AreaModel;

@@ -33,6 +33,17 @@ pub enum FlushCause {
     Drain,
 }
 
+impl FlushCause {
+    /// Stable lower-case label for traces and exports.
+    pub fn label(self) -> &'static str {
+        match self {
+            FlushCause::Size => "size",
+            FlushCause::Deadline => "deadline",
+            FlushCause::Drain => "drain",
+        }
+    }
+}
+
 /// One emitted batch: the requests plus their arrival times.
 #[derive(Debug)]
 pub struct Flush {

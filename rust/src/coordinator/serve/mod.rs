@@ -85,7 +85,7 @@ pub use batcher::{DynamicBatcher, Flush, FlushCause, SloBatcher};
 pub use laws::{serving_wbits, BatchLaw};
 pub use pool::{BatchTiming, PlannedBatch};
 pub use report::{ChipReport, Completion, FaultSummary, NetworkReport, ServeReport, SpotCheck};
-pub use router::{CostTable, ShardRouter};
+pub use router::{CostTable, RouteDecision, ShardRouter};
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
@@ -97,6 +97,7 @@ use crate::cnn::ref_exec::ModelParams;
 use crate::cnn::tensor::QTensor;
 use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine, PoolSpec};
 use crate::device::fault::FaultPlan;
+use crate::trace::{Trace, TraceEvent};
 
 use pool::ChipResult;
 use report::NetworkMeta;
@@ -300,6 +301,15 @@ pub struct ServeConfig {
     /// Injected-fault events per charged device op above which a chip
     /// is marked unhealthy and drained.
     pub fault_health_threshold: f64,
+    /// Record a deterministic observability trace of the serve: a
+    /// simulated-clock event timeline (one `arrival → … → complete`
+    /// span chain per request, plus batch / fault / failover /
+    /// spot-check events), an integer metrics snapshot, and per-layer
+    /// simulated cost profiles on every chip — all attached to
+    /// [`ServeReport::trace`] / [`ChipReport::layer_costs`]. Off by
+    /// default; when off the serve runs the exact pre-trace path and
+    /// the report is bit-identical to an untraced run.
+    pub trace: bool,
 }
 
 impl Default for ServeConfig {
@@ -316,6 +326,7 @@ impl Default for ServeConfig {
             fault: None,
             retry_budget: 1,
             fault_health_threshold: 0.01,
+            trace: false,
         }
     }
 }
@@ -552,8 +563,12 @@ pub fn serve_pool(
     let mut unhealthy = vec![false; chips];
     // (rounds, failed-over batches, failed-over requests).
     let mut failover = (0u64, 0u64, 0u64);
+    // Failover / health events for the trace, collected as the loop
+    // reacts (everything is on the simulated clock, so the list is
+    // deterministic).
+    let mut sched_events: Vec<TraceEvent> = Vec::new();
     let results = if !fault_active {
-        pool::execute_pool(pool, nets, planned, scfg.host_workers)
+        pool::execute_pool(pool, nets, planned, scfg.host_workers, scfg.trace)
     } else {
         let mut fpool = pool.clone();
         for (chip, plan) in fault_plans.iter().enumerate() {
@@ -568,6 +583,7 @@ pub fn serve_pool(
                 weight_hits: 0,
                 weight_misses: 0,
                 host_profile: None,
+                layer_costs: None,
             })
             .collect();
         let mut pending = planned;
@@ -588,9 +604,11 @@ pub fn serve_pool(
                         .map(|r| Request { id: r.id, net: r.net, image: r.image.clone() })
                         .collect(),
                     arrivals_ns: b.arrivals_ns.clone(),
+                    est_cost_ns: b.est_cost_ns,
+                    est_finish_ns: b.est_finish_ns,
                 })
                 .collect();
-            let results = pool::execute_pool(&fpool, nets, pending, scfg.host_workers);
+            let results = pool::execute_pool(&fpool, nets, pending, scfg.host_workers, scfg.trace);
             // Health: injected fault events per charged device op,
             // over the chip's batches of this round.
             let newly: Vec<usize> = results
@@ -626,6 +644,20 @@ pub fn serve_pool(
             for &chip in &newly {
                 unhealthy[chip] = true;
                 router.mark_unhealthy(chip);
+                if scfg.trace {
+                    // Deterministic stamp: the earliest flush of the
+                    // work this chip is about to be drained of.
+                    let ts = spares
+                        .iter()
+                        .filter(|b| b.chip == chip)
+                        .map(|b| b.flush_ns)
+                        .fold(f64::INFINITY, f64::min);
+                    sched_events.push(
+                        TraceEvent::instant("chip_unhealthy", "fault", ts.min(f64::MAX))
+                            .on(chip as u64 + 1, 0)
+                            .arg("round", failover.0),
+                    );
+                }
             }
             for r in results {
                 if !unhealthy[r.chip] {
@@ -637,7 +669,20 @@ pub fn serve_pool(
                 if unhealthy[b.chip] {
                     failover.1 += 1;
                     failover.2 += b.requests.len() as u64;
-                    b.chip = router.route(b.net, b.requests.len());
+                    let decision = router.route_decision(b.net, b.requests.len());
+                    if scfg.trace {
+                        sched_events.push(
+                            TraceEvent::instant("failover", "fault", b.flush_ns)
+                                .on(0, b.seq as u64)
+                                .arg("round", failover.0)
+                                .arg("from", b.chip as u64)
+                                .arg("to", decision.chip as u64)
+                                .arg("requests", b.requests.len() as u64),
+                        );
+                    }
+                    b.chip = decision.chip;
+                    b.est_cost_ns = decision.cost_ns;
+                    b.est_finish_ns = decision.finish_ns;
                     pending.push(b);
                 }
             }
@@ -657,6 +702,36 @@ pub fn serve_pool(
             pool::timeline(&flushes, &services, scfg.queue_depth)
         })
         .collect();
+    if scfg.trace {
+        // Batch-plane events: flush + route decision on the scheduler
+        // track, the execution span on the chip track. Built in chip
+        // order from the retired results — deterministic.
+        for (r, chip_timings) in results.iter().zip(&timings) {
+            for (b, t) in r.batches.iter().zip(chip_timings) {
+                let seq = b.seq as u64;
+                sched_events.push(
+                    TraceEvent::instant("flush", "batch", b.flush_ns)
+                        .on(0, seq)
+                        .arg("net", nets[b.net].net.name.as_str())
+                        .arg("cause", b.cause.label())
+                        .arg("requests", b.requests.len() as u64),
+                );
+                sched_events.push(
+                    TraceEvent::instant("route", "batch", b.flush_ns)
+                        .on(0, seq)
+                        .arg("chip", r.chip as u64)
+                        .arg("est_cost_ns", b.est_cost_ns)
+                        .arg("est_finish_ns", b.est_finish_ns),
+                );
+                sched_events.push(
+                    TraceEvent::span("batch", "batch", t.start_ns, t.finish_ns - t.start_ns)
+                        .on(r.chip as u64 + 1, seq)
+                        .arg("requests", b.requests.len() as u64)
+                        .arg("stalled", u64::from(t.stalled)),
+                );
+            }
+        }
+    }
     let nets_meta: Vec<NetworkMeta> = nets
         .iter()
         .zip(&lane_deadlines_ns)
@@ -680,8 +755,11 @@ pub fn serve_pool(
             c.healthy = !unhealthy[c.chip];
         }
     }
+    let mut spot_obs: Vec<SpotObservation> = Vec::new();
     if !samples.is_empty() {
-        let (mut check, replay_stats) = spot_check(pool, nets, &fault_plans, &samples, &report);
+        let (mut check, replay_stats, obs) =
+            spot_check(pool, nets, &fault_plans, &samples, &report);
+        spot_obs.extend(obs);
         // Hybrid degradation: when the serve failed chips over, or the
         // fault-injected replays themselves trip the health threshold,
         // halve the spot-check stride by folding the reserve samples in.
@@ -692,7 +770,8 @@ pub fn serve_pool(
         let degraded = unhealthy.iter().any(|&u| u) || replay_tripped;
         if degraded && !extra_samples.is_empty() {
             report.faults.spot_check_escalated = true;
-            let (extra, _) = spot_check(pool, nets, &fault_plans, &extra_samples, &report);
+            let (extra, _, obs) = spot_check(pool, nets, &fault_plans, &extra_samples, &report);
+            spot_obs.extend(obs);
             check = match (check, extra) {
                 (Some(mut a), Some(b)) => {
                     a.absorb(&b);
@@ -704,7 +783,89 @@ pub fn serve_pool(
         report.spot_check = check;
         report.wall_seconds = started.elapsed().as_secs_f64();
     }
+    if scfg.trace {
+        report.trace = Some(build_trace(chips, nets, &report, sched_events, &spot_obs));
+    }
     report
+}
+
+/// One hybrid spot-check replay, for the trace: `(request id, chip,
+/// simulated finish time ns, functional/analytic latency ratio,
+/// energy ratio)`.
+type SpotObservation = (u64, usize, f64, f64, f64);
+
+/// Assemble the serve's deterministic [`Trace`]: per-request span
+/// chains and fault markers from the completions, the pre-collected
+/// batch / failover / health events, spot-check markers, and the
+/// report's metrics snapshot. Everything is derived from
+/// planning metadata and the assembled report — both already
+/// bit-identical across host worker counts — so the trace (and every
+/// byte of its exports) is too.
+fn build_trace(
+    chips: usize,
+    nets: &[ServedNetwork<'_>],
+    report: &ServeReport,
+    sched_events: Vec<TraceEvent>,
+    spot_obs: &[SpotObservation],
+) -> Trace {
+    let mut trace = Trace::default();
+    trace.tracks.push("scheduler".to_string());
+    for chip in 0..chips {
+        trace.tracks.push(format!("chip {chip}"));
+    }
+    trace.events = sched_events;
+    for c in &report.completions {
+        let pid = c.chip as u64 + 1;
+        trace.events.push(
+            TraceEvent::instant("arrival", "request", c.arrival_ns)
+                .on(0, c.id)
+                .arg("net", nets[c.net].net.name.as_str()),
+        );
+        trace.events.push(
+            TraceEvent::span("lane_wait", "request", c.arrival_ns, c.batcher_wait_ns())
+                .on(0, c.id)
+                .arg("batch", c.batch as u64),
+        );
+        trace.events.push(
+            TraceEvent::span("queue_wait", "request", c.flush_ns, c.start_ns - c.flush_ns)
+                .on(0, c.id)
+                .arg("chip", c.chip as u64),
+        );
+        trace.events.push(
+            TraceEvent::span("execute", "request", c.start_ns, c.service_ns())
+                .on(pid, c.id)
+                .arg("net", nets[c.net].net.name.as_str())
+                .arg("energy_fj", c.stats.total_energy_fj()),
+        );
+        trace.events.push(
+            TraceEvent::instant("complete", "request", c.finish_ns)
+                .on(pid, c.id)
+                .arg("latency_ns", c.latency_ns()),
+        );
+        let faults = &c.stats.faults;
+        if !faults.is_zero() {
+            trace.events.push(
+                TraceEvent::instant("faults", "fault", c.finish_ns)
+                    .on(pid, c.id)
+                    .arg("program", faults.program_faults)
+                    .arg("read", faults.read_flips)
+                    .arg("and", faults.and_flips)
+                    .arg("write_retries", faults.write_retries)
+                    .arg("spared_rows", faults.spared_rows),
+            );
+        }
+    }
+    for &(id, chip, finish_ns, latency_ratio, energy_ratio) in spot_obs {
+        trace.events.push(
+            TraceEvent::instant("spot_check", "check", finish_ns)
+                .on(chip as u64 + 1, id)
+                .arg("latency_ratio", latency_ratio)
+                .arg("energy_ratio", energy_ratio),
+        );
+    }
+    trace.metrics = report.metrics();
+    trace.sort_events();
+    trace
 }
 
 /// Fold one execution round's result for a chip into its retired
@@ -714,23 +875,25 @@ fn retire(into: &mut ChipResult, from: ChipResult) {
     into.batches.extend(from.batches);
     into.weight_hits += from.weight_hits;
     into.weight_misses += from.weight_misses;
-    if from.host_profile.is_some() {
-        into.host_profile = from.host_profile;
-    }
+    pool::fold_host_profile(&mut into.host_profile, from.host_profile.as_deref());
+    crate::trace::merge_layer_costs(&mut into.layer_costs, from.layer_costs);
 }
 
 /// Route one flushed batch of network `net` and stamp it with its
-/// sequence number.
+/// sequence number and the router's cost estimates (the trace's
+/// route-decision events report them).
 fn plan(net: usize, flush: Flush, router: &mut ShardRouter, seq: &mut usize) -> PlannedBatch {
-    let chip = router.route(net, flush.requests.len());
+    let decision = router.route_decision(net, flush.requests.len());
     let b = PlannedBatch {
         seq: *seq,
-        chip,
+        chip: decision.chip,
         net,
         cause: flush.cause,
         flush_ns: flush.at_ns,
         requests: flush.requests,
         arrivals_ns: flush.arrivals_ns,
+        est_cost_ns: decision.cost_ns,
+        est_finish_ns: decision.finish_ns,
     };
     *seq += 1;
     b
@@ -749,17 +912,19 @@ type ReplayEngines = HashMap<(usize, usize), Option<Box<dyn InferenceEngine>>>;
 /// Samples whose serving chip cannot run their network functionally
 /// are skipped; the check is `None` when nothing could be replayed.
 /// Also returns the serial fold of every replay's stats (the caller
-/// judges replay fault rates from it).
+/// judges replay fault rates from it) and the per-replay observations
+/// (the trace's spot-check markers).
 fn spot_check(
     pool: &PoolSpec,
     nets: &[ServedNetwork<'_>],
     fault_plans: &[Option<FaultPlan>],
     samples: &[(u64, usize, QTensor)],
     report: &ServeReport,
-) -> (Option<SpotCheck>, Stats) {
+) -> (Option<SpotCheck>, Stats, Vec<SpotObservation>) {
     let mut engines: ReplayEngines = HashMap::new();
     let mut check = SpotCheck::new();
     let mut replay_stats = Stats::default();
+    let mut observations = Vec::new();
     for (id, net_idx, image) in samples {
         let sn = &nets[*net_idx];
         let Some(params) = sn.params else { continue };
@@ -788,15 +953,23 @@ fn spot_check(
         let replay = engine.execute(sn.net, Some(params), image);
         let analytic = &completion.stats;
         replay_stats.merge_serial(&replay.stats);
-        check.observe(
-            replay.stats.total_latency_ns() / analytic.total_latency_ns().max(f64::MIN_POSITIVE),
-            replay.stats.total_energy_fj() / analytic.total_energy_fj().max(f64::MIN_POSITIVE),
-        );
+        let latency_ratio =
+            replay.stats.total_latency_ns() / analytic.total_latency_ns().max(f64::MIN_POSITIVE);
+        let energy_ratio =
+            replay.stats.total_energy_fj() / analytic.total_energy_fj().max(f64::MIN_POSITIVE);
+        check.observe(latency_ratio, energy_ratio);
+        observations.push((
+            *id,
+            completion.chip,
+            completion.finish_ns,
+            latency_ratio,
+            energy_ratio,
+        ));
     }
     if check.checked == 0 {
-        (None, replay_stats)
+        (None, replay_stats, observations)
     } else {
-        (Some(check), replay_stats)
+        (Some(check), replay_stats, observations)
     }
 }
 

@@ -54,6 +54,7 @@ use crate::cnn::ref_exec::{ModelParams, WideTensor};
 
 use crate::coordinator::engine::{EngineFactory, EngineKind, InferenceEngine, PoolSpec};
 use crate::coordinator::functional::HostLayerProfile;
+use crate::trace::{LayerCost, LayerCostProfile};
 
 use super::batcher::FlushCause;
 use super::{Request, ServedNetwork};
@@ -77,6 +78,12 @@ pub struct PlannedBatch {
     pub requests: Vec<Request>,
     /// Arrival time of each request (ns), parallel to `requests`.
     pub arrivals_ns: Vec<f64>,
+    /// Router's estimated service cost of the batch (ns) at routing
+    /// time, before the chip horizon was charged.
+    pub est_cost_ns: f64,
+    /// Router's estimated finish horizon of the chosen chip (ns) after
+    /// charging this batch.
+    pub est_finish_ns: f64,
 }
 
 /// One executed request: its own simulated cost, plus the output when
@@ -90,6 +97,9 @@ pub struct ExecutedRequest {
     pub output: Option<WideTensor>,
     /// Simulated PIM cost of this request alone (engine-stats delta).
     pub stats: Stats,
+    /// Per-node stats deltas of this request (recorded only when layer
+    /// cost tracing is on; `None` otherwise).
+    pub layer_stats: Option<Vec<Stats>>,
 }
 
 /// One executed batch, still carrying its planning metadata.
@@ -105,6 +115,10 @@ pub struct ExecutedBatch {
     pub flush_ns: f64,
     /// Per-request arrival times (ns).
     pub arrivals_ns: Vec<f64>,
+    /// Router's estimated service cost at routing time (ns).
+    pub est_cost_ns: f64,
+    /// Router's estimated chip finish horizon after this batch (ns).
+    pub est_finish_ns: f64,
     /// Executed requests, in batch order.
     pub requests: Vec<ExecutedRequest>,
 }
@@ -127,10 +141,16 @@ pub struct ChipResult {
     pub weight_hits: u64,
     /// Weight-residency misses (streams) on this chip's engine.
     pub weight_misses: u64,
-    /// Per-conv-layer host wall-time profile of this chip's last
-    /// request (bit-accurate engines; `None` for synthesized ones).
-    /// Wall-clock figures — diagnostic only, never simulated cost.
+    /// Per-conv-layer host wall-time profile accumulated across the
+    /// chip's *whole* request stream (bit-accurate engines; `None` for
+    /// synthesized ones). Wall times sum over runs, worker/tile counts
+    /// keep their maxima. Wall-clock figures — diagnostic only, never
+    /// simulated cost.
     pub host_profile: Option<Vec<HostLayerProfile>>,
+    /// Per-network simulated layer-cost profiles, folded across this
+    /// chip's stream in arrival order (only when layer cost tracing is
+    /// on).
+    pub layer_costs: Option<Vec<LayerCostProfile>>,
 }
 
 /// Execute `planned` batches on `chips` identical weight-resident
@@ -167,7 +187,7 @@ pub fn execute_with_workers(
     workers_per_chip: Option<usize>,
 ) -> Vec<ChipResult> {
     let pool = PoolSpec::replicate(factory.clone(), chips.max(1));
-    execute_pool(&pool, &[ServedNetwork { net, params }], planned, workers_per_chip)
+    execute_pool(&pool, &[ServedNetwork { net, params }], planned, workers_per_chip, false)
 }
 
 /// Execute `planned` batches across a (possibly heterogeneous)
@@ -178,6 +198,12 @@ pub fn execute_with_workers(
 /// across the worker budget (mixed-network chips serve sequentially —
 /// the residency ledger across network switches is inherently serial).
 ///
+/// `record_layer_costs` switches on per-node stats recording in each
+/// chip's engine ([`InferenceEngine::set_layer_recording`]); the
+/// per-request deltas are folded into each [`ChipResult::layer_costs`]
+/// in stream order, so the profiles are bit-identical at any worker
+/// count.
+///
 /// # Panics
 /// If a batch names an out-of-range chip or network.
 pub fn execute_pool(
@@ -185,6 +211,7 @@ pub fn execute_pool(
     nets: &[ServedNetwork<'_>],
     planned: Vec<PlannedBatch>,
     workers_per_chip: Option<usize>,
+    record_layer_costs: bool,
 ) -> Vec<ChipResult> {
     let chips = pool.chips();
     let workers = workers_per_chip.unwrap_or_else(|| auto_workers(chips)).max(1);
@@ -201,11 +228,88 @@ pub fn execute_pool(
             .enumerate()
             .map(|(chip, batches)| {
                 let factory = pool.factory(chip);
-                scope.spawn(move || run_chip(factory, nets, chip, batches, workers))
+                scope.spawn(move || {
+                    let mut result =
+                        run_chip(factory, nets, chip, batches, workers, record_layer_costs);
+                    result.layer_costs =
+                        collect_layer_costs(record_layer_costs, &mut result.batches, nets);
+                    result
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("chip worker panicked")).collect()
     })
+}
+
+/// Fold each executed request's per-node stats deltas (present only
+/// when layer recording was on) into per-network
+/// [`LayerCostProfile`]s, iterating batches and requests in stream
+/// order so the f64 fold order is canonical — the same order a
+/// single-threaded chip would have charged them in.
+fn collect_layer_costs(
+    enabled: bool,
+    batches: &mut [ExecutedBatch],
+    nets: &[ServedNetwork<'_>],
+) -> Option<Vec<LayerCostProfile>> {
+    if !enabled {
+        return None;
+    }
+    let mut profiles: Vec<LayerCostProfile> = Vec::new();
+    for b in batches.iter_mut() {
+        for r in &mut b.requests {
+            let Some(layers) = r.layer_stats.take() else { continue };
+            let profile = match profiles.iter_mut().find(|p| p.net == b.net) {
+                Some(p) => p,
+                None => {
+                    let network = nets[b.net].net;
+                    profiles.push(LayerCostProfile {
+                        net: b.net,
+                        network: network.name.clone(),
+                        requests: 0,
+                        layers: network
+                            .nodes
+                            .iter()
+                            .enumerate()
+                            .map(|(node, n)| LayerCost {
+                                node,
+                                label: n.layer.mnemonic().to_string(),
+                                stats: Stats::default(),
+                            })
+                            .collect(),
+                    });
+                    profiles.last_mut().expect("just pushed")
+                }
+            };
+            profile.fold_request(&layers);
+        }
+    }
+    (!profiles.is_empty()).then_some(profiles)
+}
+
+/// Fold one engine run's per-conv-layer host profile into a chip-level
+/// accumulator keyed by `(node, label)`: wall times add across the
+/// stream, worker/tile counts keep their maxima. The engine clears its
+/// profile every run, so without this fold a chip would only report its
+/// *last* request.
+pub(crate) fn fold_host_profile(
+    acc: &mut Option<Vec<HostLayerProfile>>,
+    run: Option<&[HostLayerProfile]>,
+) {
+    let Some(run) = run else { return };
+    let acc = acc.get_or_insert_with(Vec::new);
+    for layer in run {
+        if let Some(slot) = acc.iter_mut().find(|s| s.node == layer.node && s.label == layer.label)
+        {
+            slot.workers = slot.workers.max(layer.workers);
+            slot.tiles = slot.tiles.max(layer.tiles);
+            slot.load_ns += layer.load_ns;
+            slot.pass_ns += layer.pass_ns;
+            slot.conv_ns += layer.conv_ns;
+            slot.acc_ns += layer.acc_ns;
+        } else {
+            acc.push(layer.clone());
+        }
+    }
 }
 
 /// Automatic intra-chip worker budget: host cores spread over the
@@ -241,6 +345,7 @@ fn run_chip(
     chip: usize,
     batches: Vec<PlannedBatch>,
     workers: usize,
+    record_layer_costs: bool,
 ) -> ChipResult {
     let n: usize = batches.iter().map(|b| b.requests.len()).sum();
     let single_net = batches.windows(2).all(|w| w[0].net == w[1].net);
@@ -253,9 +358,9 @@ fn run_chip(
     };
     let intra = (workers / replicas).max(1);
     if replicas <= 1 {
-        run_chip_sequential(factory, nets, chip, batches, intra)
+        run_chip_sequential(factory, nets, chip, batches, intra, record_layer_costs)
     } else {
-        run_chip_parallel(factory, nets, chip, batches, replicas, intra)
+        run_chip_parallel(factory, nets, chip, batches, replicas, intra, record_layer_costs)
     }
 }
 
@@ -267,18 +372,27 @@ fn run_chip_sequential(
     chip: usize,
     batches: Vec<PlannedBatch>,
     intra: usize,
+    record_layer_costs: bool,
 ) -> ChipResult {
     let mut engine = factory.build();
     engine.make_weights_resident();
     engine.set_host_workers(intra);
+    engine.set_layer_recording(record_layer_costs);
+    let mut host_profile = None;
     let mut out = Vec::with_capacity(batches.len());
     for b in batches {
         let sn = &nets[b.net];
         let mut executed = Vec::with_capacity(b.requests.len());
         for req in b.requests {
             let exec = engine.execute(sn.net, sn.params, &req.image);
+            fold_host_profile(&mut host_profile, engine.host_profile());
             let output = exec.outputs.map(|mut outs| outs.pop().expect("non-empty network"));
-            executed.push(ExecutedRequest { id: req.id, output, stats: exec.stats });
+            executed.push(ExecutedRequest {
+                id: req.id,
+                output,
+                stats: exec.stats,
+                layer_stats: exec.layer_stats,
+            });
         }
         out.push(ExecutedBatch {
             seq: b.seq,
@@ -286,6 +400,8 @@ fn run_chip_sequential(
             cause: b.cause,
             flush_ns: b.flush_ns,
             arrivals_ns: b.arrivals_ns,
+            est_cost_ns: b.est_cost_ns,
+            est_finish_ns: b.est_finish_ns,
             requests: executed,
         });
     }
@@ -293,13 +409,13 @@ fn run_chip_sequential(
         .residency()
         .map(|r| (r.hits, r.misses))
         .unwrap_or((0, 0));
-    let host_profile = engine.host_profile().map(<[HostLayerProfile]>::to_vec);
     ChipResult {
         chip,
         batches: out,
         weight_hits: hits,
         weight_misses: misses,
         host_profile,
+        layer_costs: None,
     }
 }
 
@@ -315,6 +431,7 @@ fn run_chip_parallel(
     batches: Vec<PlannedBatch>,
     workers: usize,
     intra: usize,
+    record_layer_costs: bool,
 ) -> ChipResult {
     // Guarded by `run_chip`: every batch targets the same network.
     let sn = &nets[batches[0].net];
@@ -323,7 +440,16 @@ fn run_chip_parallel(
     let mut metas = Vec::with_capacity(batches.len());
     let mut flat: Vec<Request> = Vec::new();
     for b in batches {
-        metas.push((b.seq, b.net, b.cause, b.flush_ns, b.arrivals_ns, b.requests.len()));
+        metas.push((
+            b.seq,
+            b.net,
+            b.cause,
+            b.flush_ns,
+            b.arrivals_ns,
+            b.est_cost_ns,
+            b.est_finish_ns,
+            b.requests.len(),
+        ));
         flat.extend(b.requests);
     }
     let n = flat.len();
@@ -348,6 +474,8 @@ fn run_chip_parallel(
                     let mut engine = factory.build();
                     engine.make_weights_resident();
                     engine.set_host_workers(intra);
+                    engine.set_layer_recording(record_layer_costs);
+                    let mut profile = None;
                     let mut out = Vec::with_capacity(chunk.len());
                     for (i, req) in chunk.iter().enumerate() {
                         if k > 0 && i == 0 {
@@ -356,18 +484,20 @@ fn run_chip_parallel(
                             // the run, so every request it *reports*
                             // carries the sequential (warm) cost.
                             let _ = engine.execute(net, params, &req.image);
+                            fold_host_profile(&mut profile, engine.host_profile());
                         }
                         let exec = engine.execute(net, params, &req.image);
+                        fold_host_profile(&mut profile, engine.host_profile());
                         let output =
                             exec.outputs.map(|mut o| o.pop().expect("non-empty network"));
-                        out.push(ExecutedRequest { id: req.id, output, stats: exec.stats });
+                        out.push(ExecutedRequest {
+                            id: req.id,
+                            output,
+                            stats: exec.stats,
+                            layer_stats: exec.layer_stats,
+                        });
                     }
                     let misses = engine.residency().map(|r| r.misses).unwrap_or(0);
-                    let profile = if k == 0 {
-                        engine.host_profile().map(<[HostLayerProfile]>::to_vec)
-                    } else {
-                        None
-                    };
                     (out, misses, profile)
                 })
             })
@@ -384,19 +514,23 @@ fn run_chip_parallel(
     let mut host_profile = None;
     let mut all: Vec<ExecutedRequest> = Vec::with_capacity(n);
     for (out, _, profile) in results {
-        host_profile = host_profile.or(profile);
+        fold_host_profile(&mut host_profile, profile.as_deref());
         all.extend(out);
     }
     let mut all = all.into_iter();
     let out_batches: Vec<ExecutedBatch> = metas
         .into_iter()
-        .map(|(seq, net, cause, flush_ns, arrivals_ns, len)| ExecutedBatch {
-            seq,
-            net,
-            cause,
-            flush_ns,
-            arrivals_ns,
-            requests: all.by_ref().take(len).collect(),
+        .map(|(seq, net, cause, flush_ns, arrivals_ns, est_cost_ns, est_finish_ns, len)| {
+            ExecutedBatch {
+                seq,
+                net,
+                cause,
+                flush_ns,
+                arrivals_ns,
+                est_cost_ns,
+                est_finish_ns,
+                requests: all.by_ref().take(len).collect(),
+            }
         })
         .collect();
     ChipResult {
@@ -405,6 +539,7 @@ fn run_chip_parallel(
         weight_hits: streams * (n as u64 - 1),
         weight_misses: streams,
         host_profile,
+        layer_costs: None,
     }
 }
 

@@ -14,6 +14,7 @@ use std::fmt;
 
 use crate::arch::stats::{FaultLedger, QueueCounters, Stats};
 use crate::cnn::ref_exec::WideTensor;
+use crate::trace::{LayerCostProfile, MetricsRegistry, Trace};
 
 use super::pool::{BatchTiming, ChipResult};
 use super::EngineMode;
@@ -152,10 +153,16 @@ pub struct ChipReport {
     pub weight_hits: u64,
     /// Weight-residency misses (weight streams) on this chip's engine.
     pub weight_misses: u64,
-    /// Per-conv-layer host wall-time profile of this chip's last
-    /// request (bit-accurate engines only; wall-clock diagnostics, not
-    /// simulated cost — `serve --verbose` prints it).
+    /// Per-conv-layer host wall-time profile accumulated across the
+    /// chip's whole request stream (bit-accurate engines only;
+    /// wall-clock diagnostics, not simulated cost — `serve --verbose`
+    /// prints it).
     pub host_profile: Option<Vec<crate::coordinator::functional::HostLayerProfile>>,
+    /// Per-network **simulated** layer cost profiles (latency / energy
+    /// / op-mix per node), folded across this chip's stream in arrival
+    /// order. Recorded only when the serve traces
+    /// ([`ServeConfig::trace`](super::ServeConfig::trace)).
+    pub layer_costs: Option<Vec<LayerCostProfile>>,
 }
 
 impl ChipReport {
@@ -282,6 +289,10 @@ pub struct ServeReport {
     pub spot_check: Option<SpotCheck>,
     /// Fault-injection / failover account of the run.
     pub faults: FaultSummary,
+    /// Deterministic event timeline + metrics snapshot of the run,
+    /// recorded when [`ServeConfig::trace`](super::ServeConfig::trace)
+    /// is on (`None` otherwise — tracing never perturbs the serve).
+    pub trace: Option<Trace>,
     /// Host wall-clock the simulation itself took, seconds.
     pub wall_seconds: f64,
 }
@@ -316,6 +327,7 @@ impl ServeReport {
                 weight_hits: result.weight_hits,
                 weight_misses: result.weight_misses,
                 host_profile: result.host_profile,
+                layer_costs: result.layer_costs,
             };
             for (batch, timing) in result.batches.into_iter().zip(chip_timings) {
                 report.batches += 1;
@@ -400,6 +412,7 @@ impl ServeReport {
             counters,
             spot_check: None,
             faults: FaultSummary::default(),
+            trace: None,
             wall_seconds,
         };
         report.faults.ledger = report.total_stats().faults;
@@ -461,6 +474,70 @@ impl ServeReport {
         lat.sort_by(f64::total_cmp);
         let idx = ((lat.len() as f64 * 0.95).ceil() as usize).clamp(1, lat.len()) - 1;
         lat[idx] * 1e-6
+    }
+
+    /// Fold the report into an integer [`MetricsRegistry`] snapshot.
+    ///
+    /// Built the deterministic way the report itself is: one
+    /// sub-registry per chip (chip-labelled counters and gauges, so
+    /// names stay disjoint) merged in chip order, then run-wide
+    /// counters and the per-request time histograms. Every counter
+    /// re-derives a report aggregate exactly — e.g.
+    /// `nandspin_requests_served_total == served()` — so a snapshot can
+    /// stand in for the report in dashboards without drift.
+    pub fn metrics(&self) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        for c in &self.chips {
+            let mut chip = MetricsRegistry::new();
+            chip.inc(&format!("nandspin_chip_served_total{{chip=\"{}\"}}", c.chip), c.served);
+            chip.inc(&format!("nandspin_chip_batches_total{{chip=\"{}\"}}", c.chip), c.batches);
+            chip.inc(
+                &format!("nandspin_chip_stalled_batches_total{{chip=\"{}\"}}", c.chip),
+                c.stalled_batches,
+            );
+            chip.inc(
+                &format!("nandspin_chip_weight_hits_total{{chip=\"{}\"}}", c.chip),
+                c.weight_hits,
+            );
+            chip.inc(
+                &format!("nandspin_chip_weight_misses_total{{chip=\"{}\"}}", c.chip),
+                c.weight_misses,
+            );
+            chip.set_gauge(
+                &format!("nandspin_chip_healthy{{chip=\"{}\"}}", c.chip),
+                i64::from(c.healthy),
+            );
+            m.merge(&chip);
+        }
+        m.inc("nandspin_requests_served_total", self.served() as u64);
+        m.inc("nandspin_batches_total", self.counters.batches);
+        m.inc("nandspin_flushes_total{cause=\"size\"}", self.counters.size_flushes);
+        m.inc("nandspin_flushes_total{cause=\"deadline\"}", self.counters.deadline_flushes);
+        m.inc("nandspin_flushes_total{cause=\"drain\"}", self.counters.drain_flushes);
+        for n in &self.networks {
+            m.inc(&format!("nandspin_net_served_total{{net=\"{}\"}}", n.name), n.served);
+            m.inc(
+                &format!("nandspin_net_deadline_violations_total{{net=\"{}\"}}", n.name),
+                n.deadline_violations,
+            );
+        }
+        let fl = &self.faults.ledger;
+        m.inc("nandspin_faults_injected_total{kind=\"program\"}", fl.program_faults);
+        m.inc("nandspin_faults_injected_total{kind=\"read\"}", fl.read_flips);
+        m.inc("nandspin_faults_injected_total{kind=\"and\"}", fl.and_flips);
+        m.inc("nandspin_fault_write_retries_total", fl.write_retries);
+        m.inc("nandspin_fault_spared_rows_total", fl.spared_rows);
+        m.inc("nandspin_failover_rounds_total", self.faults.failover_rounds);
+        m.inc("nandspin_failed_over_batches_total", self.faults.failed_over_batches);
+        m.inc("nandspin_failed_over_requests_total", self.faults.failed_over_requests);
+        m.set_gauge("nandspin_unhealthy_chips", self.faults.unhealthy_chips as i64);
+        m.set_gauge("nandspin_makespan_ns", self.makespan_ns() as i64);
+        for c in &self.completions {
+            m.observe_ns("nandspin_request_latency_ns", c.latency_ns() as u64);
+            m.observe_ns("nandspin_request_lane_wait_ns", c.batcher_wait_ns() as u64);
+            m.observe_ns("nandspin_request_queue_wait_ns", c.queue_wait_ns() as u64);
+        }
+        m
     }
 
     /// Check the aggregation identities: every per-chip, per-network
@@ -730,7 +807,7 @@ mod tests {
     fn req(id: u64, lat_ns: f64, energy_fj: f64) -> ExecutedRequest {
         let mut stats = Stats::default();
         stats.record(Phase::Convolution, energy_fj, lat_ns);
-        ExecutedRequest { id, output: Some(WideTensor::zeros(1, 1, 1)), stats }
+        ExecutedRequest { id, output: Some(WideTensor::zeros(1, 1, 1)), stats, layer_stats: None }
     }
 
     /// Hand-build a two-chip result set with known numbers. Lane
@@ -746,11 +823,14 @@ mod tests {
                     cause: FlushCause::Size,
                     flush_ns: 0.0,
                     arrivals_ns: vec![0.0, 0.0],
+                    est_cost_ns: 0.0,
+                    est_finish_ns: 0.0,
                     requests: vec![req(0, 100.0, 10.0), req(1, 50.0, 5.0)],
                 }],
                 weight_hits: 1,
                 weight_misses: 1,
                 host_profile: None,
+                layer_costs: None,
             },
             ChipResult {
                 chip: 1,
@@ -760,11 +840,14 @@ mod tests {
                     cause: FlushCause::Drain,
                     flush_ns: 20.0,
                     arrivals_ns: vec![10.0],
+                    est_cost_ns: 0.0,
+                    est_finish_ns: 0.0,
                     requests: vec![req(2, 200.0, 20.0)],
                 }],
                 weight_hits: 0,
                 weight_misses: 1,
                 host_profile: None,
+                layer_costs: None,
             },
         ];
         let timings = vec![
@@ -900,11 +983,14 @@ mod tests {
                 cause: FlushCause::Drain,
                 flush_ns: 0.0,
                 arrivals_ns: vec![0.0, 0.0],
+                est_cost_ns: 0.0,
+                est_finish_ns: 0.0,
                 requests: vec![req(0, 100.0, 10.0), req(1, 50.0, 5.0)],
             }],
             weight_hits: 1,
             weight_misses: 1,
             host_profile: None,
+            layer_costs: None,
         }];
         results[0].batches[0].requests[0].stats.faults.program_faults = 4;
         results[0].batches[0].requests[0].stats.faults.write_retries = 2;
@@ -1005,11 +1091,14 @@ mod tests {
                 cause: FlushCause::Drain,
                 flush_ns: 0.0,
                 arrivals_ns: vec![0.0],
+                est_cost_ns: 0.0,
+                est_finish_ns: 0.0,
                 requests: vec![req(0, 40.0, 4.0)],
             }],
             weight_hits: 0,
             weight_misses: 1,
             host_profile: None,
+            layer_costs: None,
         }];
         let timings = vec![vec![BatchTiming {
             enqueue_ns: 0.0,

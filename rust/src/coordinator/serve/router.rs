@@ -78,6 +78,22 @@ impl CostTable {
     }
 }
 
+/// One routing decision: the chosen chip plus the cost estimates the
+/// earliest-finish rule minimised, surfaced so the serving runtime can
+/// stamp them onto the trace timeline (`route` events carry the chip
+/// and its estimated-finish cost).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteDecision {
+    /// The chip the batch was assigned to.
+    pub chip: usize,
+    /// Estimated service cost of the batch on that chip (ns),
+    /// residency-aware at decision time (before the batch was charged).
+    pub cost_ns: f64,
+    /// The chip's estimated busy horizon after charging the batch (ns)
+    /// — the earliest-finish figure the router minimised.
+    pub finish_ns: f64,
+}
+
 /// Deterministic earliest-finish router over a (possibly
 /// heterogeneous) chip pool.
 #[derive(Debug, Clone)]
@@ -143,6 +159,17 @@ impl ShardRouter {
     /// # Panics
     /// If `net` is outside the cost table or no healthy chip remains.
     pub fn route(&mut self, net: usize, requests: usize) -> usize {
+        self.route_decision(net, requests).chip
+    }
+
+    /// [`Self::route`], also returning the estimates behind the
+    /// decision: the batch's residency-aware service cost on the chosen
+    /// chip (captured *before* routing mutates the chip's residency)
+    /// and the chip's post-charge busy horizon.
+    ///
+    /// # Panics
+    /// If `net` is outside the cost table or no healthy chip remains.
+    pub fn route_decision(&mut self, net: usize, requests: usize) -> RouteDecision {
         assert!(net < self.costs.nets(), "network {net} is not in the cost table");
         let chip = (0..self.chips())
             .filter(|&c| !self.unhealthy[c])
@@ -154,7 +181,7 @@ impl ShardRouter {
         self.est_busy_ns[chip] += cost.max(1.0);
         self.resident_net[chip] = Some(net);
         self.routed_batches[chip] += 1;
-        chip
+        RouteDecision { chip, cost_ns: cost, finish_ns: self.est_busy_ns[chip] }
     }
 
     /// Estimated busy horizon of `chip` (ns of routed service).
@@ -229,6 +256,18 @@ mod tests {
         r.route(1, 1);
         assert_eq!(r.batch_cost_ns(0, 0, 1), 100.0, "switch evicted net 0");
         assert_eq!(r.batch_cost_ns(0, 1, 2), 16.0, "net 1 now resident");
+    }
+
+    #[test]
+    fn route_decision_reports_pre_charge_cost_and_post_charge_horizon() {
+        let mut r = ShardRouter::new(CostTable::new(vec![vec![(100.0, 10.0)]]));
+        let d = r.route_decision(0, 2);
+        assert_eq!(d.chip, 0);
+        assert_eq!(d.cost_ns, 110.0, "first request cold, second warm");
+        assert_eq!(d.finish_ns, 110.0, "horizon starts at the batch cost");
+        let d = r.route_decision(0, 2);
+        assert_eq!(d.cost_ns, 20.0, "now resident: whole batch warm");
+        assert_eq!(d.finish_ns, 130.0);
     }
 
     #[test]

@@ -35,6 +35,10 @@
 //! * [`baselines`] — analytic cost models for DRISA, PRIME, STT-CiM,
 //!   MRIMA and IMCE, calibrated to their published Table-3 operating
 //!   points.
+//! * [`trace`] — deterministic observability: simulated-clock event
+//!   timelines, an integer metrics registry, and per-layer simulated
+//!   cost profiles, with JSONL / Chrome-trace / Prometheus exporters
+//!   (`serve --trace` / `--metrics-out`).
 //! * [`runtime`] — artifact runtime for the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); execution needs a PJRT backend,
 //!   which the offline build stubs out (callers degrade gracefully).
@@ -88,6 +92,7 @@ pub mod metrics;
 pub mod nvsim;
 pub mod runtime;
 pub mod subarray;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

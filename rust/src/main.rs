@@ -60,7 +60,9 @@ fn usage() -> ExitCode {
                            [--batch N] [--deadline-us F] [--slo-us NAME=F,... or F,...]\n\
                            [--requests N (per network)] [--arrival-ns F] [--queue N]\n\
                            [--workers N] [--seed N]\n\
-                           [--fault-rate F|auto] [--fault-seed N] [--retry-budget N]"
+                           [--fault-rate F|auto] [--fault-seed N] [--retry-budget N]\n\
+                           [--trace FILE (Chrome/Perfetto JSON)] [--trace-jsonl FILE]\n\
+                           [--metrics-out FILE (Prometheus text)]"
     );
     ExitCode::FAILURE
 }
@@ -568,6 +570,15 @@ fn cmd_serve(args: &[String]) {
         parse_chip_configs(&chip_spec)
     };
 
+    // Observability exporters: any export flag turns the deterministic
+    // trace recorder on (the trace rides on the simulated clock, so
+    // recording never perturbs the serve itself).
+    let trace_path = get("trace", "");
+    let trace_jsonl_path = get("trace-jsonl", "");
+    let metrics_path = get("metrics-out", "");
+    let trace_on =
+        !trace_path.is_empty() || !trace_jsonl_path.is_empty() || !metrics_path.is_empty();
+
     let scfg = checked(ServeConfig {
         chips: chip_cfgs.len(),
         max_batch: parse_or_exit(&get, "batch", "8"),
@@ -579,6 +590,7 @@ fn cmd_serve(args: &[String]) {
         host_workers: host_workers_flag(&get),
         fault: fault_flags(&get),
         retry_budget: parse_or_exit(&get, "retry-budget", "1"),
+        trace: trace_on,
         ..ServeConfig::default()
     });
     // Bit-accurate full-size serving simulates every device op of a
@@ -657,13 +669,48 @@ fn cmd_serve(args: &[String]) {
     if verbose {
         print_host_profiles(&report);
     }
+    if trace_on {
+        export_telemetry(&report, &trace_path, &trace_jsonl_path, &metrics_path);
+    }
 }
 
-/// Per-layer host wall-time profile of each chip's last bit-accurate
-/// request (`serve --verbose`). Wall-clock diagnostics of the simulator
-/// itself — not simulated device cost. `pass` is the wall time of the
-/// whole filter fan-out; `conv`/`acc` are summed across its workers, so
-/// with several workers they exceed `pass`.
+/// Write the requested serve telemetry exports (`--trace`,
+/// `--trace-jsonl`, `--metrics-out`). Paths that were not given are
+/// empty strings and skipped.
+fn export_telemetry(
+    report: &nandspin::coordinator::ServeReport,
+    trace_path: &str,
+    jsonl_path: &str,
+    metrics_path: &str,
+) {
+    use nandspin::trace::export;
+    let Some(trace) = &report.trace else {
+        eprintln!("serve produced no trace (internal error)");
+        std::process::exit(1);
+    };
+    let mut write = |path: &str, what: &str, body: String| {
+        if path.is_empty() {
+            return;
+        }
+        match std::fs::write(path, body) {
+            Ok(()) => println!("wrote {what} to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {what} to {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+    write(trace_path, "Chrome trace (load in ui.perfetto.dev)", export::to_chrome_json(trace));
+    write(jsonl_path, "JSONL event log", export::to_jsonl(trace));
+    write(metrics_path, "Prometheus metrics", trace.metrics.to_prometheus());
+}
+
+/// Per-layer host wall-time profile accumulated across each chip's
+/// whole bit-accurate request stream (`serve --verbose`). Wall-clock
+/// diagnostics of the simulator itself — not simulated device cost.
+/// `pass` is the wall time of the whole filter fan-out; `conv`/`acc`
+/// are summed across its workers, so with several workers they exceed
+/// `pass`.
 fn print_host_profiles(report: &nandspin::coordinator::ServeReport) {
     let ms = |ns: u64| ns as f64 / 1e6;
     for chip in &report.chips {
@@ -671,7 +718,7 @@ fn print_host_profiles(report: &nandspin::coordinator::ServeReport) {
         if profile.is_empty() {
             continue;
         }
-        println!("host profile, chip {} (last request, wall-clock):", chip.chip);
+        println!("host profile, chip {} (whole stream, wall-clock):", chip.chip);
         println!(
             "  {:>4}  {:<16} {:>7} {:>5} {:>9} {:>9} {:>9} {:>9}",
             "node", "layer", "workers", "tiles", "load ms", "pass ms", "conv ms", "acc ms"

@@ -1,7 +1,10 @@
 //! Derived architecture-level metrics: the quantities the paper's
 //! evaluation plots (peak GOPS, GOPS/mm², frames/s, GOPS/W, efficiency
 //! normalised to area).
-
+//!
+//! Every derived quantity guards its divisors: a degenerate design
+//! point (zero latency, energy or area) yields `0.0`, never `inf` or
+//! `NaN`, so bench tables and sweep printouts stay finite.
 
 use crate::arch::stats::Stats;
 
@@ -20,6 +23,16 @@ pub struct Metrics {
     pub area_mm2: f64,
 }
 
+/// `num / den`, or `0.0` when the denominator is zero, negative or
+/// non-finite — the well-defined value for a degenerate design point.
+fn guarded_div(num: f64, den: f64) -> f64 {
+    if den > 0.0 && den.is_finite() {
+        num / den
+    } else {
+        0.0
+    }
+}
+
 impl Metrics {
     /// From a stats record plus op count and area.
     pub fn from_stats(label: impl Into<String>, ops: f64, stats: &Stats, area_mm2: f64) -> Self {
@@ -32,31 +45,34 @@ impl Metrics {
         }
     }
 
-    /// Throughput in frames per second (single-frame latency inverse).
+    /// Throughput in frames per second (single-frame latency inverse);
+    /// 0 for a zero-latency record.
     pub fn fps(&self) -> f64 {
-        1000.0 / self.latency_ms
+        guarded_div(1000.0, self.latency_ms)
     }
 
-    /// Performance in GOPS.
+    /// Performance in GOPS; 0 for a zero-latency record.
     pub fn gops(&self) -> f64 {
-        self.ops / (self.latency_ms * 1e-3) / 1e9
+        guarded_div(self.ops, self.latency_ms * 1e-3) / 1e9
     }
 
-    /// Performance normalised to area — Fig. 15's y-axis (GOPS/mm²).
+    /// Performance normalised to area — Fig. 15's y-axis (GOPS/mm²);
+    /// 0 for a zero-area record.
     pub fn gops_per_mm2(&self) -> f64 {
-        self.gops() / self.area_mm2
+        guarded_div(self.gops(), self.area_mm2)
     }
 
-    /// Energy efficiency in GOPS/W.
+    /// Energy efficiency in GOPS/W; 0 when latency or energy is zero
+    /// (no power to normalise by).
     pub fn gops_per_watt(&self) -> f64 {
-        let watts = self.energy_mj * 1e-3 / (self.latency_ms * 1e-3);
-        self.gops() / watts
+        let watts = guarded_div(self.energy_mj * 1e-3, self.latency_ms * 1e-3);
+        guarded_div(self.gops(), watts)
     }
 
     /// Energy efficiency normalised to area — Fig. 14's y-axis
-    /// (GOPS/W/mm²).
+    /// (GOPS/W/mm²); 0 for a degenerate record.
     pub fn efficiency_per_mm2(&self) -> f64 {
-        self.gops_per_watt() / self.area_mm2
+        guarded_div(self.gops_per_watt(), self.area_mm2)
     }
 }
 
@@ -75,5 +91,28 @@ mod tests {
         assert!((m.gops_per_mm2() - 200.0).abs() < 1e-6);
         // 1 mJ in 1 ms = 1 W → GOPS/W = 2000.
         assert!((m.gops_per_watt() - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_design_points_stay_finite() {
+        // Zero-latency (and zero-energy) stats: every rate is 0, not inf/NaN.
+        let m = Metrics::from_stats("empty", 2e9, &Stats::default(), 10.0);
+        for v in [m.fps(), m.gops(), m.gops_per_mm2(), m.gops_per_watt(), m.efficiency_per_mm2()] {
+            assert_eq!(v, 0.0, "degenerate metric must be exactly 0");
+            assert!(v.is_finite());
+        }
+        // Zero area: the per-area normalisations are 0, the rest intact.
+        let mut s = Stats::default();
+        s.record(Phase::Convolution, 1e12, 1e6);
+        let m = Metrics::from_stats("no-area", 2e9, &s, 0.0);
+        assert!((m.fps() - 1000.0).abs() < 1e-9);
+        assert_eq!(m.gops_per_mm2(), 0.0);
+        assert_eq!(m.efficiency_per_mm2(), 0.0);
+        // Zero energy at finite latency: watts is 0 → GOPS/W guards to 0.
+        let mut s = Stats::default();
+        s.record(Phase::Convolution, 0.0, 1e6);
+        let m = Metrics::from_stats("no-energy", 2e9, &s, 10.0);
+        assert_eq!(m.gops_per_watt(), 0.0);
+        assert!(m.gops() > 0.0);
     }
 }

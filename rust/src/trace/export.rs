@@ -1,0 +1,200 @@
+//! Deterministic exporters for [`Trace`]: JSONL event logs and Chrome
+//! trace-event / Perfetto JSON.
+//!
+//! JSON is emitted by hand (the build is offline — no serde). Every
+//! number is formatted with Rust's shortest-roundtrip `Display`, so
+//! bit-identical inputs produce byte-identical files; there is no
+//! wall-clock or host-dependent value anywhere in an export.
+
+use super::{Trace, TraceEvent, TracePhase, TraceValue};
+
+/// Escape a string for inclusion inside a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format an `f64` for JSON: shortest-roundtrip decimal, with
+/// non-finite values (which no deterministic timeline should produce)
+/// clamped to 0 so the output stays valid JSON.
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn fmt_args(args: &[(&'static str, TraceValue)]) -> String {
+    let mut out = String::from("{");
+    for (i, (key, value)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{key}\":"));
+        match value {
+            TraceValue::U64(v) => out.push_str(&v.to_string()),
+            TraceValue::F64(v) => out.push_str(&fmt_f64(*v)),
+            TraceValue::Str(s) => out.push_str(&format!("\"{}\"", json_escape(s))),
+        }
+    }
+    out.push('}');
+    out
+}
+
+fn ph(e: &TraceEvent) -> &'static str {
+    match e.phase {
+        TracePhase::Span => "X",
+        TracePhase::Instant => "i",
+    }
+}
+
+/// One JSON object per line, one line per event, timestamps in
+/// simulated nanoseconds. The stable machine-readable form of the
+/// timeline (the Chrome export divides down to microseconds).
+pub fn to_jsonl(trace: &Trace) -> String {
+    let mut out = String::new();
+    for e in &trace.events {
+        let track = trace.tracks.get(e.pid as usize).map(String::as_str).unwrap_or("");
+        out.push_str(&format!(
+            "{{\"ts_ns\":{},\"dur_ns\":{},\"ph\":\"{}\",\"name\":\"{}\",\"cat\":\"{}\",\
+             \"track\":\"{}\",\"pid\":{},\"tid\":{},\"args\":{}}}\n",
+            fmt_f64(e.ts_ns),
+            fmt_f64(e.dur_ns),
+            ph(e),
+            e.name,
+            e.cat,
+            json_escape(track),
+            e.pid,
+            e.tid,
+            fmt_args(&e.args),
+        ));
+    }
+    out
+}
+
+/// Chrome trace-event JSON (the format `chrome://tracing` and Perfetto
+/// load). Spans are `ph:"X"` complete events, instants `ph:"i"` with
+/// thread scope; `ts`/`dur` are simulated microseconds. Each track gets
+/// a `process_name` metadata record so the UI names the planes.
+pub fn to_chrome_json(trace: &Trace) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |out: &mut String, first: &mut bool, record: String| {
+        if !*first {
+            out.push(',');
+        }
+        *first = false;
+        out.push_str(&record);
+    };
+    for (pid, name) in trace.tracks.iter().enumerate() {
+        push(
+            &mut out,
+            &mut first,
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                json_escape(name)
+            ),
+        );
+    }
+    for e in &trace.events {
+        let scope = if e.phase == TracePhase::Instant { ",\"s\":\"t\"" } else { "" };
+        let dur = if e.phase == TracePhase::Span {
+            format!(",\"dur\":{}", fmt_f64(e.dur_ns / 1_000.0))
+        } else {
+            String::new()
+        };
+        push(
+            &mut out,
+            &mut first,
+            format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{}\",\"ts\":{}{dur}{scope},\
+                 \"pid\":{},\"tid\":{},\"args\":{}}}",
+                e.name,
+                e.cat,
+                ph(e),
+                fmt_f64(e.ts_ns / 1_000.0),
+                e.pid,
+                e.tid,
+                fmt_args(&e.args),
+            ),
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEvent;
+
+    fn sample() -> Trace {
+        let mut t = Trace {
+            tracks: vec!["scheduler".into(), "chip 0".into()],
+            ..Trace::default()
+        };
+        t.events.push(
+            TraceEvent::instant("arrival", "request", 0.0).on(0, 7).arg("net", "small_cnn"),
+        );
+        t.events.push(
+            TraceEvent::span("execute", "request", 100.5, 250.25)
+                .on(1, 7)
+                .arg("batch", 3u64)
+                .arg("est_cost_ns", 123.5),
+        );
+        t
+    }
+
+    #[test]
+    fn escape_covers_quotes_and_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(fmt_f64(f64::NAN), "0");
+        assert_eq!(fmt_f64(1.5), "1.5");
+    }
+
+    #[test]
+    fn jsonl_is_one_object_per_event() {
+        let t = sample();
+        let out = to_jsonl(&t);
+        assert_eq!(out.lines().count(), 2);
+        assert!(out.contains("\"ph\":\"i\"") && out.contains("\"ph\":\"X\""));
+        assert!(out.contains("\"track\":\"chip 0\""));
+        assert!(out.contains("\"args\":{\"net\":\"small_cnn\"}"));
+        assert!(out.contains("\"dur_ns\":250.25"));
+    }
+
+    #[test]
+    fn chrome_json_has_metadata_and_microsecond_times() {
+        let t = sample();
+        let out = to_chrome_json(&t);
+        assert!(out.starts_with("{\"displayTimeUnit\":\"ns\",\"traceEvents\":["));
+        assert!(out.ends_with("]}"));
+        assert_eq!(out.matches("\"ph\":\"M\"").count(), 2, "one metadata record per track");
+        assert!(out.contains("\"args\":{\"name\":\"scheduler\"}"));
+        // 100.5 ns span start -> 0.1005 µs; 250.25 ns -> 0.25025 µs.
+        assert!(out.contains("\"ts\":0.1005"), "{out}");
+        assert!(out.contains("\"dur\":0.25025"));
+        assert!(out.contains("\"s\":\"t\""), "instants carry thread scope");
+    }
+
+    #[test]
+    fn exports_are_deterministic() {
+        let t = sample();
+        assert_eq!(to_jsonl(&t), to_jsonl(&t.clone()));
+        assert_eq!(to_chrome_json(&t), to_chrome_json(&t.clone()));
+    }
+}

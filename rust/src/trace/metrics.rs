@@ -1,0 +1,257 @@
+//! Integer-only metrics registry: counters, gauges and fixed-bucket
+//! histograms with deterministic, order-commutative merges.
+//!
+//! Everything is a `u64`/`i64` — there is no float anywhere whose value
+//! could depend on merge order, so per-chip registries can be folded in
+//! any grouping and still produce byte-identical snapshots (the same
+//! property [`OpLedger`](crate::arch::stats::OpLedger) gives `Stats`).
+//! Labels are embedded Prometheus-style in the metric name itself
+//! (`nandspin_chip_served_total{chip="0"}`), and `BTreeMap` storage
+//! makes iteration — and therefore the text export — canonical.
+
+use std::collections::BTreeMap;
+
+/// Default histogram bucket upper bounds for simulated-time
+/// observations, in nanoseconds: one decade per bucket from 100 ns to
+/// 10 s, plus the implicit `+Inf` bucket.
+pub const TIME_BUCKETS_NS: [u64; 9] = [
+    100,
+    1_000,
+    10_000,
+    100_000,
+    1_000_000,
+    10_000_000,
+    100_000_000,
+    1_000_000_000,
+    10_000_000_000,
+];
+
+/// A fixed-bucket integer histogram.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    /// Bucket upper bounds, ascending; an implicit `+Inf` bucket
+    /// follows the last bound.
+    pub bounds: Vec<u64>,
+    /// Per-bucket observation counts (`bounds.len() + 1` entries; the
+    /// last is the overflow/`+Inf` bucket). Non-cumulative.
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Integer sum of all observed values.
+    pub sum: u64,
+}
+
+impl Histogram {
+    /// Empty histogram over `bounds`.
+    pub fn new(bounds: &[u64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Self { bounds: bounds.to_vec(), buckets: vec![0; bounds.len() + 1], count: 0, sum: 0 }
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, value: u64) {
+        let idx = self.bounds.iter().position(|&b| value <= b).unwrap_or(self.bounds.len());
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(value);
+    }
+
+    /// Add another histogram's observations (commutative integer adds).
+    ///
+    /// # Panics
+    /// If the bucket bounds differ — merging histograms of different
+    /// shapes is a logic error, not a recoverable condition.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram bucket bounds must match");
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+}
+
+/// Counters, gauges and histograms keyed by Prometheus-style names.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, i64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Add `by` to counter `name` (creating it at zero).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set gauge `name` to `value`.
+    pub fn set_gauge(&mut self, name: &str, value: i64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Record a simulated-time observation (ns) into histogram `name`,
+    /// creating it with [`TIME_BUCKETS_NS`] bounds if absent.
+    pub fn observe_ns(&mut self, name: &str, value_ns: u64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(&TIME_BUCKETS_NS))
+            .observe(value_ns);
+    }
+
+    /// Counter value (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value, if set.
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Histogram, if present.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Fold `other` into this registry: counters and histograms add
+    /// commutatively; a gauge in `other` overwrites the same-named
+    /// gauge here (merge inputs keep gauge names disjoint — per-chip
+    /// gauges embed the chip label — so the fold order never shows).
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (name, v) in &other.counters {
+            *self.counters.entry(name.clone()).or_insert(0) += v;
+        }
+        for (name, v) in &other.gauges {
+            self.gauges.insert(name.clone(), *v);
+        }
+        for (name, h) in &other.histograms {
+            match self.histograms.get_mut(name) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.histograms.insert(name.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// A point-in-time copy: the snapshot no longer changes when the
+    /// live registry keeps accumulating.
+    pub fn snapshot(&self) -> MetricsRegistry {
+        self.clone()
+    }
+
+    /// Prometheus text exposition. Deterministic byte-for-byte: names
+    /// iterate in `BTreeMap` order and every value is an integer.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_base = String::new();
+        let mut type_line = |out: &mut String, last: &mut String, name: &str, kind: &str| {
+            let base = name.split('{').next().unwrap_or(name);
+            if base != last {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                *last = base.to_string();
+            }
+        };
+        for (name, v) in &self.counters {
+            type_line(&mut out, &mut last_base, name, "counter");
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        last_base.clear();
+        for (name, v) in &self.gauges {
+            type_line(&mut out, &mut last_base, name, "gauge");
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cumulative = 0u64;
+            for (bound, count) in h.bounds.iter().zip(&h.buckets) {
+                cumulative += count;
+                out.push_str(&format!("{name}_bucket{{le=\"{bound}\"}} {cumulative}\n"));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(&[10, 100]);
+        for v in [5, 10, 11, 100, 101, 5_000] {
+            h.observe(v);
+        }
+        assert_eq!(h.buckets, [2, 2, 2], "le=10, le=100, +Inf");
+        assert_eq!(h.count, 6);
+        assert_eq!(h.sum, 5 + 10 + 11 + 100 + 101 + 5_000);
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        let build = |vals: &[u64], served: u64| {
+            let mut m = MetricsRegistry::new();
+            m.inc("served_total", served);
+            for &v in vals {
+                m.observe_ns("latency_ns", v);
+            }
+            m
+        };
+        let a = build(&[50, 2_000], 2);
+        let b = build(&[900_000], 1);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.counter("served_total"), 3);
+        assert_eq!(ab.histogram("latency_ns").map(|h| h.count), Some(3));
+    }
+
+    #[test]
+    fn snapshot_is_frozen() {
+        let mut m = MetricsRegistry::new();
+        m.inc("x", 1);
+        let snap = m.snapshot();
+        m.inc("x", 5);
+        m.set_gauge("g", -3);
+        assert_eq!(snap.counter("x"), 1);
+        assert_eq!(m.counter("x"), 6);
+        assert_eq!(snap.gauge("g"), None);
+        assert_eq!(m.gauge("g"), Some(-3));
+    }
+
+    #[test]
+    fn prometheus_text_is_canonical() {
+        let mut m = MetricsRegistry::new();
+        m.inc("nandspin_chip_served_total{chip=\"1\"}", 3);
+        m.inc("nandspin_chip_served_total{chip=\"0\"}", 2);
+        m.set_gauge("nandspin_makespan_ns", 42);
+        m.observe_ns("nandspin_request_latency_ns", 150);
+        let text = m.to_prometheus();
+        let type_lines = text.lines().filter(|l| l.starts_with("# TYPE")).count();
+        assert_eq!(type_lines, 3, "one TYPE line per metric family:\n{text}");
+        let c0 = text.find("chip=\"0\"").expect("chip 0 row");
+        let c1 = text.find("chip=\"1\"").expect("chip 1 row");
+        assert!(c0 < c1, "BTreeMap order sorts labels");
+        assert!(text.contains("nandspin_request_latency_ns_bucket{le=\"1000\"} 1"));
+        assert!(text.contains("nandspin_request_latency_ns_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("nandspin_request_latency_ns_sum 150"));
+        assert_eq!(text, m.snapshot().to_prometheus(), "snapshot exports identically");
+    }
+}

@@ -1,0 +1,313 @@
+//! Deterministic observability: event timelines, a metrics registry
+//! and per-layer simulated cost profiles for the serving runtime.
+//!
+//! Everything in this module is stamped on the **simulated clock** (the
+//! same `f64` nanosecond timeline the batcher, router and
+//! [`ServeReport`](crate::coordinator::serve::ServeReport) use), never
+//! on host wall time. Because the serving runtime plans batches before
+//! execution and assembles completions with a deterministic serial
+//! cursor afterwards, a trace built from that metadata is bit-identical
+//! across host worker counts and across runs at a fixed fault seed —
+//! the repo's core determinism guarantee extends to telemetry itself.
+//!
+//! Three pieces:
+//!
+//! * [`Trace`] / [`TraceEvent`] — the event timeline. One span chain per
+//!   served request (`arrival → lane_wait → flush → route → queue_wait
+//!   → execute → complete`) plus batch, fault/failover and spot-check
+//!   events, exportable as JSONL ([`export::to_jsonl`]) or Chrome
+//!   trace-event / Perfetto JSON ([`export::to_chrome_json`]).
+//! * [`MetricsRegistry`] — integer-only counters, gauges and
+//!   fixed-bucket histograms. No floats whose value depends on merge
+//!   order: registries merge commutatively, mirroring how
+//!   [`Stats`](crate::arch::stats::Stats) merges stay order-canonical.
+//!   Exportable as a Prometheus-style text snapshot.
+//! * [`LayerCostProfile`] / [`LayerCost`] — per-layer **simulated**
+//!   latency/energy/op-mix from either engine, folded across a chip's
+//!   whole request stream in arrival order (the canonical f64 fold
+//!   order, so profiles are bit-identical at any worker count).
+
+pub mod export;
+pub mod metrics;
+
+pub use metrics::{Histogram, MetricsRegistry, TIME_BUCKETS_NS};
+
+use crate::arch::stats::Stats;
+
+/// How an event occupies the timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// A duration span (`ph: "X"` in Chrome trace-event terms).
+    Span,
+    /// A point-in-time marker (`ph: "i"`).
+    Instant,
+}
+
+/// One argument value attached to a [`TraceEvent`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceValue {
+    /// Unsigned integer argument (counts, ids).
+    U64(u64),
+    /// Simulated-clock / cost argument in whatever unit the key names.
+    F64(f64),
+    /// Text argument (network names, flush causes).
+    Str(String),
+}
+
+impl From<u64> for TraceValue {
+    fn from(v: u64) -> Self {
+        TraceValue::U64(v)
+    }
+}
+
+impl From<f64> for TraceValue {
+    fn from(v: f64) -> Self {
+        TraceValue::F64(v)
+    }
+}
+
+impl From<String> for TraceValue {
+    fn from(v: String) -> Self {
+        TraceValue::Str(v)
+    }
+}
+
+impl From<&str> for TraceValue {
+    fn from(v: &str) -> Self {
+        TraceValue::Str(v.to_string())
+    }
+}
+
+/// One timeline event on the simulated clock.
+///
+/// `pid` selects the track: 0 is the scheduler plane (arrivals, lane
+/// waits, flushes, route decisions), `chip + 1` is that chip's
+/// execution plane. `tid` is the request id for request-scoped events
+/// and the batch sequence number for batch-scoped ones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Event start on the simulated clock (ns).
+    pub ts_ns: f64,
+    /// Span duration (ns); 0 for instants.
+    pub dur_ns: f64,
+    /// Span or instant.
+    pub phase: TracePhase,
+    /// Event name (one of the fixed vocabulary, e.g. `"execute"`).
+    pub name: &'static str,
+    /// Event category (`"request"`, `"batch"`, `"fault"`, `"check"`).
+    pub cat: &'static str,
+    /// Track: 0 = scheduler plane, `chip + 1` = chip plane.
+    pub pid: u64,
+    /// Request id or batch sequence number.
+    pub tid: u64,
+    /// Event arguments, emitted in this (fixed) order.
+    pub args: Vec<(&'static str, TraceValue)>,
+}
+
+impl TraceEvent {
+    /// A duration span `[ts_ns, ts_ns + dur_ns]`.
+    pub fn span(name: &'static str, cat: &'static str, ts_ns: f64, dur_ns: f64) -> Self {
+        Self { ts_ns, dur_ns, phase: TracePhase::Span, name, cat, pid: 0, tid: 0, args: Vec::new() }
+    }
+
+    /// A point-in-time marker at `ts_ns`.
+    pub fn instant(name: &'static str, cat: &'static str, ts_ns: f64) -> Self {
+        Self {
+            ts_ns,
+            dur_ns: 0.0,
+            phase: TracePhase::Instant,
+            name,
+            cat,
+            pid: 0,
+            tid: 0,
+            args: Vec::new(),
+        }
+    }
+
+    /// Place the event on track `pid`, lane `tid` (builder style).
+    pub fn on(mut self, pid: u64, tid: u64) -> Self {
+        self.pid = pid;
+        self.tid = tid;
+        self
+    }
+
+    /// Attach an argument (builder style; emission order is push order).
+    pub fn arg(mut self, key: &'static str, value: impl Into<TraceValue>) -> Self {
+        self.args.push((key, value.into()));
+        self
+    }
+}
+
+/// A complete serve timeline plus its metrics snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// Track names, indexed by `pid` (0 = scheduler, then one per chip).
+    pub tracks: Vec<String>,
+    /// Events sorted by timestamp (stable — equal timestamps keep the
+    /// deterministic construction order).
+    pub events: Vec<TraceEvent>,
+    /// Integer metrics snapshot folded from the same report the
+    /// timeline was built from.
+    pub metrics: MetricsRegistry,
+}
+
+impl Trace {
+    /// Stable-sort events by timestamp. Construction order is
+    /// deterministic, and a stable sort keeps it on ties, so the final
+    /// event order — and every byte of the exports — is reproducible.
+    pub fn sort_events(&mut self) {
+        self.events.sort_by(|a, b| a.ts_ns.total_cmp(&b.ts_ns));
+    }
+
+    /// Number of events with `name`.
+    pub fn count(&self, name: &str) -> usize {
+        self.events.iter().filter(|e| e.name == name).count()
+    }
+}
+
+/// Per-layer simulated cost of one node: the latency / energy / op-mix
+/// [`Stats`] delta the engine charged while executing that node, summed
+/// across every request in the profile's stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCost {
+    /// Node index in the network's layer list.
+    pub node: usize,
+    /// Layer mnemonic (e.g. `"conv"`, `"maxpool"`).
+    pub label: String,
+    /// Simulated cost charged to this node, summed over the stream.
+    pub stats: Stats,
+}
+
+/// Per-layer simulated cost profile of one network on one chip,
+/// accumulated across the chip's whole request stream in arrival order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCostProfile {
+    /// Network index into the serve's network list.
+    pub net: usize,
+    /// Network name.
+    pub network: String,
+    /// Requests folded into this profile.
+    pub requests: u64,
+    /// One entry per network node, in node order.
+    pub layers: Vec<LayerCost>,
+}
+
+impl LayerCostProfile {
+    /// Fold one request's per-node stats deltas into the profile.
+    /// `layer_stats` is indexed by node; missing trailing nodes are
+    /// ignored (engines emit one entry per node, so lengths match).
+    pub fn fold_request(&mut self, layer_stats: &[Stats]) {
+        self.requests += 1;
+        for (layer, s) in self.layers.iter_mut().zip(layer_stats) {
+            layer.stats.merge_serial(s);
+        }
+    }
+
+    /// Absorb another profile of the same network (e.g. a failover
+    /// round's partial profile), request counts and per-node stats
+    /// summing serially.
+    pub fn absorb(&mut self, other: &LayerCostProfile) {
+        debug_assert_eq!(self.net, other.net, "absorbing a different network's profile");
+        self.requests += other.requests;
+        for (layer, o) in self.layers.iter_mut().zip(&other.layers) {
+            layer.stats.merge_serial(&o.stats);
+        }
+    }
+
+    /// Total simulated latency across layers (ns).
+    pub fn total_latency_ns(&self) -> f64 {
+        self.layers.iter().map(|l| l.stats.total_latency_ns()).sum()
+    }
+
+    /// Total simulated energy across layers (fJ).
+    pub fn total_energy_fj(&self) -> f64 {
+        self.layers.iter().map(|l| l.stats.total_energy_fj()).sum()
+    }
+}
+
+/// Merge per-network layer-cost profiles from `from` into `into`
+/// (matching on network index, appending unseen networks). Used when a
+/// chip's stream arrives in several rounds (failover re-routes).
+pub fn merge_layer_costs(
+    into: &mut Option<Vec<LayerCostProfile>>,
+    from: Option<Vec<LayerCostProfile>>,
+) {
+    let Some(from) = from else { return };
+    match into {
+        None => *into = Some(from),
+        Some(acc) => {
+            for p in from {
+                match acc.iter_mut().find(|q| q.net == p.net) {
+                    Some(q) => q.absorb(&p),
+                    None => acc.push(p),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::stats::Phase;
+
+    fn stats(lat: f64, en: f64) -> Stats {
+        let mut s = Stats::default();
+        s.record(Phase::Convolution, en, lat);
+        s.ops.ands += 1;
+        s
+    }
+
+    fn profile(net: usize) -> LayerCostProfile {
+        LayerCostProfile {
+            net,
+            network: format!("net{net}"),
+            requests: 0,
+            layers: (0..2)
+                .map(|node| LayerCost { node, label: "conv".into(), stats: Stats::default() })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn fold_and_absorb_accumulate_per_node() {
+        let mut p = profile(0);
+        p.fold_request(&[stats(1.0, 10.0), stats(2.0, 20.0)]);
+        p.fold_request(&[stats(1.0, 10.0), stats(2.0, 20.0)]);
+        let mut q = profile(0);
+        q.fold_request(&[stats(1.0, 10.0), stats(2.0, 20.0)]);
+        p.absorb(&q);
+        assert_eq!(p.requests, 3);
+        assert_eq!(p.layers[0].stats.total_latency_ns(), 3.0);
+        assert_eq!(p.layers[1].stats.total_energy_fj(), 60.0);
+        assert_eq!(p.layers[0].stats.ops.ands, 3);
+        assert_eq!(p.total_latency_ns(), 9.0);
+    }
+
+    #[test]
+    fn merge_layer_costs_matches_by_net_and_appends() {
+        let mut a = Some(vec![profile(0)]);
+        let mut one = profile(0);
+        one.fold_request(&[stats(1.0, 1.0), stats(1.0, 1.0)]);
+        merge_layer_costs(&mut a, Some(vec![one, profile(3)]));
+        let a = a.expect("merged");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].requests, 1);
+        assert_eq!(a[1].net, 3);
+        let mut none = None;
+        merge_layer_costs(&mut none, Some(vec![profile(1)]));
+        assert!(none.is_some());
+    }
+
+    #[test]
+    fn event_sort_is_stable_on_ties() {
+        let mut t = Trace::default();
+        t.events.push(TraceEvent::instant("b", "x", 5.0));
+        t.events.push(TraceEvent::instant("a", "x", 5.0));
+        t.events.push(TraceEvent::instant("c", "x", 1.0));
+        t.sort_events();
+        let names: Vec<_> = t.events.iter().map(|e| e.name).collect();
+        assert_eq!(names, ["c", "b", "a"], "ties keep construction order");
+        assert_eq!(t.count("a"), 1);
+    }
+}

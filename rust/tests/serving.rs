@@ -339,6 +339,8 @@ fn plan_single_chip(reqs: Vec<Request>, per_batch: usize) -> Vec<PlannedBatch> {
             flush_ns: 0.0,
             requests: batch,
             arrivals_ns: arrivals,
+            est_cost_ns: 0.0,
+            est_finish_ns: 0.0,
         });
         seq += 1;
     }

@@ -1,0 +1,232 @@
+//! Integration tests of the deterministic tracing & metrics layer:
+//! byte-identical telemetry exports across runs and host worker counts
+//! (at a fixed fault seed), exact metrics re-derivation of the
+//! `ServeReport` aggregates, complete per-request span chains, and the
+//! zero-cost guarantee — tracing off leaves the report bit-identical.
+
+use nandspin::arch::config::ArchConfig;
+use nandspin::cnn::network::{micro_cnn, small_cnn, Network};
+use nandspin::cnn::ref_exec::ModelParams;
+use nandspin::cnn::tensor::QTensor;
+use nandspin::coordinator::serve::{serve, EngineMode, Request, ServeConfig, ServeReport};
+use nandspin::device::{FaultPlan, FaultRates};
+use nandspin::trace::export;
+
+fn requests(net: &Network, n: usize, seed: u64) -> Vec<Request> {
+    Request::stream(
+        (0..n)
+            .map(|i| {
+                QTensor::random(net.input.0, net.input.1, net.input.2, net.input_bits, seed + i as u64)
+            })
+            .collect(),
+    )
+}
+
+/// A traced functional serve under fault injection at a fixed seed:
+/// the scenario whose telemetry the determinism guarantee is judged on.
+fn traced_fault_serve(workers: usize) -> ServeReport {
+    let net = micro_cnn(3);
+    let params = ModelParams::random(&net, 2, 1);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 2,
+        host_workers: Some(workers),
+        fault: Some(FaultPlan::new(7, FaultRates::uniform(1e-3))),
+        trace: true,
+        ..ServeConfig::default()
+    };
+    serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 8, 301))
+}
+
+#[test]
+fn traced_exports_are_byte_identical_across_runs_and_workers() {
+    let exports = |r: &ServeReport| {
+        let t = r.trace.as_ref().expect("traced serve carries a timeline");
+        (export::to_chrome_json(t), export::to_jsonl(t), t.metrics.to_prometheus())
+    };
+    let base = traced_fault_serve(1);
+    base.verify().expect("traced fault serve identities");
+    let (chrome, jsonl, prom) = exports(&base);
+    assert!(!chrome.is_empty() && !jsonl.is_empty() && !prom.is_empty());
+    // Run-to-run at the same worker count, and across worker counts:
+    // every export byte must match — the timeline rides the simulated
+    // clock, never host scheduling.
+    for workers in [1usize, 4] {
+        let again = traced_fault_serve(workers);
+        again.verify().expect("identities at every worker count");
+        let (c, j, p) = exports(&again);
+        assert_eq!(chrome, c, "Chrome trace drifted at workers={workers}");
+        assert_eq!(jsonl, j, "JSONL log drifted at workers={workers}");
+        assert_eq!(prom, p, "metrics snapshot drifted at workers={workers}");
+    }
+}
+
+#[test]
+fn tracing_off_leaves_the_report_bit_identical() {
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 9);
+    let run = |trace: bool| {
+        let scfg = ServeConfig {
+            chips: 2,
+            max_batch: 3,
+            host_workers: Some(2),
+            trace,
+            ..ServeConfig::default()
+        };
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 6, 510))
+    };
+    let off = run(false);
+    let on = run(true);
+    assert!(off.trace.is_none(), "tracing off records nothing");
+    assert!(on.trace.is_some());
+    assert!(off.chips.iter().all(|c| c.layer_costs.is_none()), "no layer costs untraced");
+    assert_eq!(off.served(), on.served());
+    for (a, b) in off.completions.iter().zip(&on.completions) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.chip, b.chip);
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.stats, b.stats, "request {}", a.id);
+        assert_eq!(a.output, b.output, "request {}", a.id);
+        assert_eq!(a.arrival_ns, b.arrival_ns);
+        assert_eq!(a.flush_ns, b.flush_ns);
+        assert_eq!(a.start_ns, b.start_ns);
+        assert_eq!(a.finish_ns, b.finish_ns);
+    }
+}
+
+#[test]
+fn every_served_request_has_a_complete_span_chain() {
+    // Fault-free traced serve: one arrival → lane_wait → queue_wait →
+    // execute → complete chain per request, one flush → route → batch
+    // triple per batcher flush.
+    let net = micro_cnn(3);
+    let params = ModelParams::random(&net, 2, 1);
+    let scfg = ServeConfig { chips: 2, max_batch: 2, trace: true, ..ServeConfig::default() };
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 7, 42));
+    let t = report.trace.as_ref().expect("trace");
+    let served = report.served();
+    for name in ["arrival", "lane_wait", "queue_wait", "execute", "complete"] {
+        assert_eq!(t.count(name), served, "one '{name}' per served request");
+    }
+    let batches = report.counters.batches as usize;
+    for name in ["flush", "route", "batch"] {
+        assert_eq!(t.count(name), batches, "one '{name}' per batch");
+    }
+    // Tracks: the scheduler plane plus one per chip, matching pids.
+    assert_eq!(t.tracks.len(), scfg.chips + 1);
+    assert_eq!(t.tracks[0], "scheduler");
+    assert_eq!(t.tracks[1], "chip 0");
+    assert!(t.events.iter().all(|e| (e.pid as usize) < t.tracks.len()));
+    // Sorted timeline: timestamps never decrease.
+    assert!(t.events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+}
+
+#[test]
+fn metrics_snapshot_rederives_report_aggregates_exactly() {
+    let report = traced_fault_serve(2);
+    let m = &report.trace.as_ref().expect("trace").metrics;
+    assert_eq!(m.counter("nandspin_requests_served_total"), report.served() as u64);
+    assert_eq!(m.counter("nandspin_batches_total"), report.counters.batches);
+    assert_eq!(
+        m.counter("nandspin_flushes_total{cause=\"size\"}"),
+        report.counters.size_flushes
+    );
+    assert_eq!(
+        m.counter("nandspin_flushes_total{cause=\"drain\"}"),
+        report.counters.drain_flushes
+    );
+    for c in &report.chips {
+        assert_eq!(
+            m.counter(&format!("nandspin_chip_served_total{{chip=\"{}\"}}", c.chip)),
+            c.served
+        );
+        assert_eq!(
+            m.gauge(&format!("nandspin_chip_healthy{{chip=\"{}\"}}", c.chip)),
+            Some(i64::from(c.healthy))
+        );
+    }
+    for n in &report.networks {
+        assert_eq!(
+            m.counter(&format!("nandspin_net_served_total{{net=\"{}\"}}", n.name)),
+            n.served
+        );
+        assert_eq!(
+            m.counter(&format!("nandspin_net_deadline_violations_total{{net=\"{}\"}}", n.name)),
+            n.deadline_violations
+        );
+    }
+    // Fault counters re-derive the ledger exactly (integer identities).
+    let fl = &report.faults.ledger;
+    assert_eq!(m.counter("nandspin_faults_injected_total{kind=\"program\"}"), fl.program_faults);
+    assert_eq!(m.counter("nandspin_faults_injected_total{kind=\"read\"}"), fl.read_flips);
+    assert_eq!(m.counter("nandspin_faults_injected_total{kind=\"and\"}"), fl.and_flips);
+    assert_eq!(m.counter("nandspin_fault_write_retries_total"), fl.write_retries);
+    assert_eq!(m.counter("nandspin_fault_spared_rows_total"), fl.spared_rows);
+    assert_eq!(m.gauge("nandspin_makespan_ns"), Some(report.makespan_ns() as i64));
+    let lat = m.histogram("nandspin_request_latency_ns").expect("latency histogram");
+    assert_eq!(lat.count, report.served() as u64);
+    // The registry snapshot is exactly what report.metrics() derives.
+    assert_eq!(*m, report.metrics());
+}
+
+#[test]
+fn traced_chips_carry_layer_cost_profiles() {
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 21);
+    let run = |engine: EngineMode| {
+        let scfg = ServeConfig {
+            chips: 1,
+            max_batch: 4,
+            engine,
+            trace: true,
+            ..ServeConfig::default()
+        };
+        let p = (engine != EngineMode::Analytic).then_some(&params);
+        serve(&ArchConfig::paper(), &scfg, &net, p, requests(&net, 4, 77))
+    };
+    for engine in [EngineMode::Functional, EngineMode::Analytic] {
+        let report = run(engine);
+        let chip = &report.chips[0];
+        let profiles = chip.layer_costs.as_ref().expect("traced chip records layer costs");
+        assert_eq!(profiles.len(), 1, "one network served");
+        let p = &profiles[0];
+        assert_eq!(p.net, 0);
+        assert_eq!(p.network, net.name);
+        assert_eq!(p.requests, chip.served, "every request folded in");
+        assert_eq!(p.layers.len(), net.nodes.len(), "one entry per node");
+        assert!(p.total_latency_ns() > 0.0 && p.total_energy_fj() > 0.0);
+        // The per-node fold can never exceed the chip's total charge
+        // (the functional engine's pre-schedule input load is charged
+        // outside any node), and must account for the bulk of it.
+        let total = chip.stats.total_latency_ns();
+        assert!(
+            p.total_latency_ns() <= total * (1.0 + 1e-9),
+            "{engine:?}: layer fold {} > chip total {total}",
+            p.total_latency_ns()
+        );
+        assert!(
+            p.total_latency_ns() > 0.5 * total,
+            "{engine:?}: layer fold {} implausibly small vs {total}",
+            p.total_latency_ns()
+        );
+    }
+}
+
+#[test]
+fn hybrid_spot_checks_appear_in_the_timeline() {
+    let net = small_cnn(3);
+    let params = ModelParams::random(&net, 3, 17);
+    let scfg = ServeConfig {
+        chips: 2,
+        max_batch: 2,
+        engine: EngineMode::Hybrid { check_every: 2 },
+        trace: true,
+        ..ServeConfig::default()
+    };
+    let report =
+        serve(&ArchConfig::paper(), &scfg, &net, Some(&params), requests(&net, 6, 60));
+    let sc = report.spot_check.expect("small preset replays functionally");
+    let t = report.trace.as_ref().expect("trace");
+    assert_eq!(t.count("spot_check") as u64, sc.checked, "one event per replay");
+}
